@@ -1,0 +1,101 @@
+"""Shared benchmark utilities: timing + the policy sweep cache.
+
+Every benchmark prints `name,us_per_call,derived` CSV rows (one per paper
+table/figure artifact); heavyweight policy sweeps are solved once and cached
+in var/ for the figure-level benchmarks to share.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable
+
+import numpy as np
+
+VAR = pathlib.Path(__file__).resolve().parents[1] / "var"
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def row(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def get_problem():
+    from repro.core.carbon import caiso_2021
+    from repro.core.fleetcache import cached_paper_fleet
+    from repro.core.policies import DRProblem
+    fleet = cached_paper_fleet()
+    models = tuple(fleet[n]
+                   for n in ("RTS1", "RTS2", "AITraining", "DataPipeline"))
+    return DRProblem(models=models, mci=caiso_2021(48).mci)
+
+
+def _res_to_dict(r, policy: str, hyper: float) -> dict:
+    return {
+        "policy": policy, "hyper": hyper, "name": r.name,
+        "carbon_pct": r.carbon_reduction_pct,
+        "penalty_pct": r.total_penalty_pct,
+        "per_penalty": r.per_penalty.tolist(),
+        "per_carbon": r.per_carbon.tolist(),
+        "violations": {k: float(v) for k, v in r.violations.items()},
+    }
+
+
+def policy_sweeps(problem=None, force: bool = False) -> list[dict]:
+    """Solve every policy over its hyperparameter grid once; cache JSON.
+    This is the data behind Figs. 8, 9 and 10."""
+    path = VAR / "policy_sweep.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    from repro.core.baselines import (b1_adjustments, b2_spec,
+                                      b3_adjustments, b4_spec)
+    from repro.core.policies import PolicySpec, cr1_spec, cr2_spec
+    from repro.core.solver import evaluate, solve_cr3, solve_slsqp
+    p = problem or get_problem()
+    out: list[dict] = []
+
+    def closed(D, name):
+        spec = PolicySpec(name=name, problem=p,
+                          objective=lambda D_: p.total_penalty(D_),
+                          use_preservation=False)
+        return evaluate(spec, D, solver="closed", nit=0)
+
+    for lam in (1.0, 1.2, 1.3, 1.4, 1.45, 1.5, 1.55, 1.6, 1.8, 2.2):
+        r = solve_slsqp(cr1_spec(p, lam), maxiter=250)
+        out.append(_res_to_dict(r, "CR1", lam))
+    for cap in (0.84, 0.82, 0.80, 0.78, 0.76, 0.74):
+        r = solve_slsqp(cr2_spec(p, cap), maxiter=250)
+        out.append(_res_to_dict(r, "CR2", cap))
+    for tax in (0.18, 0.20, 0.24, 0.30):
+        r, rho = solve_cr3(p, rho=0.02, tax_frac=tax, clearing_iters=3)
+        out.append(_res_to_dict(r, "CR3", tax))
+    for F in np.linspace(0.55, 0.9, 8):
+        out.append(_res_to_dict(closed(b1_adjustments(p, F), f"B1({F:.2f})"),
+                                "B1", float(F)))
+    for lam in (1.0, 1.3, 1.6, 2.0):
+        r = solve_slsqp(b2_spec(p, lam), maxiter=150)
+        out.append(_res_to_dict(r, "B2", lam))
+    for depth in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6):
+        out.append(_res_to_dict(
+            closed(b3_adjustments(p, depth, max_cut=0.3), f"B3({depth})"),
+            "B3", depth))
+    for lam in (0.02, 0.05, 0.1, 0.3):
+        r = solve_slsqp(b4_spec(p, lam), maxiter=150)
+        out.append(_res_to_dict(r, "B4", lam))
+    VAR.mkdir(exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    return out

@@ -1,0 +1,63 @@
+"""Recompute roofline terms for dry-run records using the analytic models
+(flops, HBM bytes, ICI bytes) — no recompilation needed. HLO-parsed
+collective bytes stay recorded raw under "collectives".
+
+  PYTHONPATH=src python -m benchmarks.recompute_roofline var/dryrun.json ...
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+
+def recompute(path: str) -> None:
+    from repro.configs import get_config, shape_by_name
+    from repro.launch.analytics import (analytic_record, cell_ici_bytes)
+    from repro.launch.dryrun import PEAK_FLOPS, roofline_terms
+
+    p = pathlib.Path(path)
+    records = json.loads(p.read_text())
+    for r in records:
+        if r.get("status") != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        override = (r.get("policy") or {}).get("override") or {}
+        moe_over = {k[4:]: v for k, v in override.items()
+                    if k.startswith("moe.")}
+        plain = {k: v for k, v in override.items() if "." not in k}
+        if moe_over and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+        if plain:
+            cfg = dataclasses.replace(cfg, **plain)
+        shape = shape_by_name(r["shape"])
+        pods = 2 if r["mesh"].startswith("2x") else 1
+        chips = 256 * pods
+        fsdp = (r.get("policy") or {}).get("fsdp_weights", True)
+        ana = analytic_record(cfg, shape, chips)
+        ana["ici_bytes_per_device"] = cell_ici_bytes(
+            cfg, shape, data=16, model=16, fsdp_weights=fsdp, pods=pods)
+        r["analytic"] = ana
+        r["roofline"] = roofline_terms(ana["flops"],
+                                       ana["hbm_bytes_per_device"],
+                                       ana["ici_bytes_per_device"], chips)
+        terms = r["roofline"]
+        r["bottleneck"] = max(terms, key=terms.get)
+        r["step_time_s"] = max(terms.values())
+        n_active = cfg.active_param_count()
+        toks = shape.global_batch * (shape.seq_len
+                                     if shape.kind != "decode" else 1)
+        mult = 6.0 if shape.kind == "train" else 2.0
+        r["model_flops"] = mult * n_active * toks
+        r["useful_flops_ratio"] = r["model_flops"] / max(ana["flops"], 1.0)
+        r["roofline_fraction"] = (r["model_flops"] / r["step_time_s"]
+                                  / (chips * PEAK_FLOPS))
+    p.write_text(json.dumps(records, indent=1))
+    print(f"recomputed {path}")
+
+
+if __name__ == "__main__":
+    for path in sys.argv[1:] or ["var/dryrun.json"]:
+        recompute(path)

@@ -1,0 +1,47 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (stdout). Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs, perf_micro
+    benches = [
+        ("fig1_carbon_series", paper_figs.fig1_carbon_series),
+        ("table5_lasso", paper_figs.table5_lasso),
+        ("fig6_penalty_curves", paper_figs.fig6_penalty_curves),
+        ("fig7_day_dynamics", paper_figs.fig7_day_dynamics),
+        ("fig8_pareto", paper_figs.fig8_pareto),
+        ("fig9_breakdown", paper_figs.fig9_breakdown),
+        ("fig10_entropy", paper_figs.fig10_entropy),
+        ("fig11_future", paper_figs.fig11_future),
+        ("solver_scale", perf_micro.solver_scale),
+        ("kernel_micro", perf_micro.kernel_micro),
+        ("train_throughput", perf_micro.train_throughput),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Architecture registry + input specs + reduced smoke configs.
+
+`get_config(arch_id)` returns the full assigned config; `reduced(cfg)`
+shrinks it to a CPU-smoke size preserving the family structure;
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of a (arch × shape) cell (no device allocation — the dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, MLAConfig, MoEConfig, SSMConfig, ShapeCell, SHAPES,
+    shape_by_name,
+)
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "qwen3-32b": "qwen3_32b",
+    "stablelm-3b": "stablelm_3b",
+    "granite-20b": "granite_20b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ArchConfig, layers: int = 2, d_model: int = 64,
+            vocab: int = 256) -> ArchConfig:
+    """Same-family tiny config for CPU smoke tests."""
+    heads = max(2, min(4, cfg.num_heads))
+    kv = 0 if cfg.family == "ssm" else max(1, min(2, cfg.num_kv_heads))
+    updates: dict = dict(
+        num_layers=layers, d_model=d_model, num_heads=heads,
+        num_kv_heads=kv, head_dim=d_model // heads,
+        d_ff=0 if cfg.d_ff == 0 else d_model * 2,
+        vocab_size=vocab, dtype="float32", param_dtype="float32",
+        remat=False,
+    )
+    if cfg.mrope_sections is not None:
+        half = (d_model // heads) // 2
+        t = max(1, half // 4)
+        hw = (half - t) // 2
+        updates["mrope_sections"] = (t, hw, half - t - hw)
+    if cfg.moe is not None:
+        # capacity_factor high enough that smoke tests never drop tokens —
+        # decode (per-token groups) and forward (sequence groups) then agree.
+        updates["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=2, d_expert_ff=d_model,
+            capacity_factor=8.0)
+    if cfg.ssm is not None:
+        updates["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk=8)
+    if cfg.mla is not None:
+        updates["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16)
+        updates["head_dim"] = 16
+    if cfg.family == "hybrid":
+        updates["num_layers"] = max(layers, cfg.attn_layer_period)
+        updates["attn_layer_offset"] = min(cfg.attn_layer_offset,
+                                           updates["num_layers"] - 1)
+    if cfg.family == "encdec":
+        updates["encoder_layers"] = layers
+        updates["encoder_seq"] = 16
+    return dataclasses.replace(cfg, **updates)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell | str,
+                ) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    if isinstance(shape, str):
+        shape = shape_by_name(shape)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    adtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": sds((B, cfg.encoder_seq, cfg.d_model), adtype),
+                    "tokens": sds((B, S), i32),
+                    "labels": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            sv = int(S * cfg.vision_tokens_frac)
+            st = S - sv
+            return {"tokens": sds((B, st), i32),
+                    "vision_embeds": sds((B, sv, cfg.d_model), adtype),
+                    "mrope_positions": sds((3, B, S), i32),
+                    "labels": sds((B, st), i32)}
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": sds((B, cfg.encoder_seq, cfg.d_model), adtype),
+                    "tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            sv = int(S * cfg.vision_tokens_frac)
+            return {"tokens": sds((B, S - sv), i32),
+                    "vision_embeds": sds((B, sv, cfg.d_model), adtype),
+                    "mrope_positions": sds((3, B, S), i32)}
+        return {"tokens": sds((B, S), i32)}
+
+    # decode: one new token against a cache of S tokens.
+    from repro.models import encdec as encdec_mod
+    from repro.models import transformer as tf
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: encdec_mod.init_cache(cfg, B, S))
+    else:
+        cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    return {"token": sds((B, 1), i32), "cache": cache}

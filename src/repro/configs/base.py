@@ -1,0 +1,194 @@
+"""Architecture configuration schema for the assigned model zoo.
+
+Every assigned architecture is an `ArchConfig`; the model builders in
+`repro.models` consume it. Families:
+
+  dense   — decoder-only transformer (GQA/MQA, RoPE, SwiGLU)
+  moe     — decoder-only with mixture-of-experts FFN (top-k routing)
+  ssm     — Mamba-2 (SSD) attention-free stack
+  hybrid  — Jamba-style interleave of Mamba + attention (+ MoE)
+  encdec  — Whisper-style encoder–decoder (audio frontend stubbed)
+  vlm     — decoder-only with M-RoPE + vision-patch stub (Qwen2-VL)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert_ff: int            # per-expert hidden width
+    num_shared: int = 0         # shared (always-on) experts
+    layer_period: int = 1       # MoE every Nth layer (1 = every layer)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    dispatch: str = "einsum"    # "einsum" (GShard one-hot) | "scatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block parameters."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None          # default d_model // num_heads
+    # attention options
+    qk_norm: bool = False                # qwen3 family
+    qkv_bias: bool = False               # qwen1.5 / qwen2 family
+    rope_theta: float = 1e6
+    mrope_sections: tuple[int, int, int] | None = None   # qwen2-vl (t,h,w)
+    mla: MLAConfig | None = None         # deepseek-v3
+    # FFN / MoE
+    moe: MoEConfig | None = None
+    # SSM / hybrid
+    ssm: SSMConfig | None = None
+    attn_layer_period: int = 0           # hybrid: every Nth layer is attn
+    attn_layer_offset: int = 4           # hybrid: offset within period
+    # encoder–decoder
+    encoder_layers: int = 0
+    encoder_seq: int = 1500              # whisper frame positions
+    # VLM stub
+    vision_tokens_frac: float = 0.25     # share of seq that is patch embeds
+    # multi-token prediction (deepseek)
+    mtp_depth: int = 0
+    # numerics
+    dtype: str = "bfloat16"              # activation/compute dtype
+    param_dtype: str = "float32"
+    kv_quant: bool = False               # int8 KV cache (serving)
+    remat: bool = True
+    # notes for DESIGN.md / skips
+    long_context_ok: bool = False        # can run long_500k decode
+    tie_embeddings: bool = False
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for roofline
+        MODEL_FLOPS = 6·N·D accounting."""
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        dh = self.dh
+
+        def attn_params() -> int:
+            if self.mla is not None:
+                m = self.mla
+                qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+                p = d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_head
+                p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                p += m.kv_lora_rank * self.num_heads * (
+                    m.qk_nope_head_dim + m.v_head_dim)
+                p += self.num_heads * m.v_head_dim * d
+                return p
+            q = d * self.num_heads * dh
+            kv = 2 * d * self.num_kv_heads * dh
+            o = self.num_heads * dh * d
+            return q + kv + o
+
+        def ffn_params(layer: int) -> int:
+            if self.moe is not None and layer % self.moe.layer_period == 0:
+                e = self.moe
+                per = 3 * d * e.d_expert_ff
+                return (e.num_experts + e.num_shared) * per + d * e.num_experts
+            return 3 * d * self.d_ff
+
+        def ssm_params() -> int:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            p = d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+            p += s.conv_kernel * (d_in + 2 * s.n_groups * s.d_state)  # conv
+            p += nheads * 2                                          # A, D
+            p += d_in * d                                            # out_proj
+            return p
+
+        for layer in range(L):
+            if self.family == "ssm":
+                n += ssm_params()
+            elif self.family == "hybrid":
+                if self.attn_layer_period and \
+                        layer % self.attn_layer_period == self.attn_layer_offset:
+                    n += attn_params()
+                else:
+                    n += ssm_params()
+                n += ffn_params(layer)
+            else:
+                n += attn_params() + ffn_params(layer)
+        if self.family == "encdec":
+            # encoder blocks + decoder cross-attention
+            n += self.encoder_layers * (attn_params() + 3 * d * self.d_ff)
+            n += L * attn_params()  # cross-attn in each decoder layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        total = self.param_count()
+        moe_layers = sum(1 for layer in range(self.num_layers)
+                         if layer % e.layer_period == 0
+                         and (self.family != "hybrid"))
+        if self.family == "hybrid":
+            moe_layers = sum(1 for layer in range(self.num_layers)
+                             if layer % e.layer_period == 0)
+        per = 3 * self.d_model * e.d_expert_ff
+        inactive = moe_layers * (e.num_experts - e.top_k) * per
+        return total - inactive
+
+
+# Shape cells assigned to every LM architecture.
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,19 @@
+"""jamba-v0.1-52b [arXiv:2403.19887]: 32L d=4096, Mamba:attn 7:1
+(attn at offset 4 of each 8-layer block), MoE 16e top-2 every other layer,
+d_ff=14336, vocab 65536. Runs long_500k (KV only in 4/32 layers).
+
+Adaptation: Jamba's Mamba-1 blocks are implemented in the Mamba-2 SSD form
+(TPU-idiomatic block-matrix scan) — see DESIGN.md §Hardware adaptation.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=65536,
+    attn_layer_period=8, attn_layer_offset=4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert_ff=14336, layer_period=2),
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, conv_kernel=4,
+                  chunk=256, n_groups=1),
+    long_context_ok=True,
+)

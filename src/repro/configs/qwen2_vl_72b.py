@@ -1,0 +1,11 @@
+"""qwen2-vl-72b [arXiv:2409.12191]: 80L d=8192 64H (GQA kv=8) d_ff=29568
+vocab 152064, M-RoPE (t/h/w sections), QKV bias. Vision frontend stubbed:
+input_specs provides patch embeddings + 3-component position ids."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=29568, vocab_size=152064, qkv_bias=True,
+    mrope_sections=(16, 24, 24), vision_tokens_frac=0.25,
+)

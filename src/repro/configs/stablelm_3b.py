@@ -1,0 +1,10 @@
+"""stablelm-3b [hf:stabilityai]: 32L d=2560 32H (kv=32) d_ff=6912
+vocab 50304. (Release uses 25% partial rotary; we apply full RoPE —
+backbone-equivalent, noted in DESIGN.md.)"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-3b", family="dense",
+    num_layers=32, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=6912, vocab_size=50304,
+)

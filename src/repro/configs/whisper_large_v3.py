@@ -1,0 +1,11 @@
+"""whisper-large-v3 [arXiv:2212.04356]: enc-dec, 32+32L d=1280 20H
+d_ff=5120 vocab 51866. Conv frontend stubbed (input_specs provides frame
+embeddings, 1500 positions)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="encdec",
+    num_layers=32, encoder_layers=32, encoder_seq=1500,
+    d_model=1280, num_heads=20, num_kv_heads=20,
+    d_ff=5120, vocab_size=51866, tie_embeddings=True,
+)

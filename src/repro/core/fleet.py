@@ -1,0 +1,111 @@
+"""FleetCoordinator: Carbon Responder as a first-class framework feature.
+
+Maps LM jobs (arch × shape × chips) onto CR workloads, solves a DR policy
+against the grid's carbon signal, and emits per-job hourly *throttle
+schedules* that the training/serving drivers enforce (steps-per-hour budgets
+/ admission control) — the datacenter-workload interface of Fig. 2/3.
+
+Workload typing (paper §III-B):
+  train  -> "batch without SLOs" (AI-training penalty family)
+  serve  -> "real-time" (Dynamo latency polynomials)
+  data   -> "batch with SLOs" (pipeline penalty family)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import numpy as np
+
+from repro.core import penalty as pen
+from repro.core.carbon import CarbonSignal
+from repro.core.policies import DRProblem, cr1_spec, cr2_spec
+from repro.core.solver import SolveResult, solve_adam, solve_slsqp
+from repro.power.model import JobPowerModel
+
+Role = Literal["train", "serve", "data"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetJob:
+    name: str
+    role: Role
+    power: JobPowerModel
+    # usage ripple: serving follows diurnal traffic, training is flat.
+    diurnal_amplitude: float | None = None
+
+
+@dataclasses.dataclass
+class ThrottleSchedule:
+    """Hourly throughput multipliers for one job."""
+    name: str
+    throttle: np.ndarray          # (T,) in (0, 1]
+    power_cut_np: np.ndarray      # (T,) NP shed
+
+    def at_hour(self, t: int) -> float:
+        return float(self.throttle[t % len(self.throttle)])
+
+
+def _usage_trace(job: FleetJob, hours: int) -> np.ndarray:
+    base = job.power.power_np
+    amp = job.diurnal_amplitude
+    if amp is None:
+        amp = 0.05 if job.role == "serve" else 0.01
+    t = np.arange(hours)
+    return base * (1.0 + amp * np.sin(2 * np.pi * (t - 15) / 24.0))
+
+
+def _penalty_model(job: FleetJob, hours: int,
+                   templates: dict[str, pen.PenaltyModel],
+                   ) -> pen.PenaltyModel:
+    usage = _usage_trace(job, hours)
+    headroom = 1.0 / max(job.power.dynamic_fraction + (1.0 - 1.0), 0.5)
+    entitlement = float(usage.max() * 1.15)
+    if job.role == "serve":
+        base = templates["RTS1"]
+        return dataclasses.replace(base, name=job.name, usage=usage,
+                                   entitlement=entitlement)
+    key = "AITraining" if job.role == "train" else "DataPipeline"
+    base = templates[key]
+    scale = usage.mean() / max(base.usage.mean(), 1e-9)
+    jobs_per_hour = (base.jobs if base.jobs is not None
+                     else np.ones(hours)) * scale
+    return dataclasses.replace(base, name=job.name, usage=usage,
+                               entitlement=entitlement,
+                               jobs=jobs_per_hour[:hours])
+
+
+class FleetCoordinator:
+    def __init__(self, jobs: Sequence[FleetJob], signal: CarbonSignal,
+                 policy: str = "cr1", lam: float = 1.45,
+                 cap_frac: float = 0.78, solver: str = "auto"):
+        self.jobs = list(jobs)
+        self.signal = signal
+        self.policy = policy
+        self.lam = lam
+        self.cap_frac = cap_frac
+        self.solver = solver
+
+    def plan(self) -> tuple[dict[str, ThrottleSchedule], SolveResult]:
+        """Solve the DR problem and emit per-job throttle schedules."""
+        hours = self.signal.hours
+        from repro.core.fleetcache import cached_paper_fleet
+        templates = cached_paper_fleet(hours=hours)
+        models = tuple(_penalty_model(j, hours, templates)
+                       for j in self.jobs)
+        problem = DRProblem(models=models, mci=self.signal.mci)
+        spec = (cr2_spec(problem, self.cap_frac) if self.policy == "cr2"
+                else cr1_spec(problem, self.lam))
+        use_slsqp = (self.solver == "slsqp"
+                     or (self.solver == "auto" and len(self.jobs) <= 8))
+        result = (solve_slsqp(spec) if use_slsqp else solve_adam(spec))
+        schedules: dict[str, ThrottleSchedule] = {}
+        for i, job in enumerate(self.jobs):
+            usage = problem.usage[i]
+            cut_frac = np.clip(result.D[i] / np.maximum(usage, 1e-9), -1, 1)
+            throttle = np.asarray(
+                [job.power.throttle_for_power_cut(max(c, 0.0))
+                 for c in cut_frac])
+            schedules[job.name] = ThrottleSchedule(
+                name=job.name, throttle=throttle, power_cut_np=result.D[i])
+        return schedules, result

@@ -1,0 +1,56 @@
+"""Disk cache for the calibrated paper fleet.
+
+Building the four-service fleet runs ~160 EDD simulations (≈45 s); tests,
+benchmarks and examples share one cached copy keyed by the build settings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+
+from repro.core.penalty import PenaltyModel, build_paper_fleet
+
+_CACHE_DIR = pathlib.Path(
+    os.environ.get("REPRO_CACHE_DIR",
+                   pathlib.Path(__file__).resolve().parents[3] / "var"))
+
+
+def cached_paper_fleet(hours: int = 48, total_power: float = 100.0,
+                       num_samples: int = 160, num_jobs: int = 10_000,
+                       seed: int = 0) -> dict[str, PenaltyModel]:
+    key = f"fleet_h{hours}_p{total_power:g}_s{num_samples}_j{num_jobs}_r{seed}"
+    path = _CACHE_DIR / f"{key}.npz"
+    if path.exists():
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["meta"]))
+        out = {}
+        for name, m in meta.items():
+            out[name] = PenaltyModel(
+                name=name, kind=m["kind"], usage=z[f"{name}_usage"],
+                entitlement=m["entitlement"], k=m["k"],
+                params=tuple(m["params"]),
+                jobs=z[f"{name}_jobs"] if f"{name}_jobs" in z else None,
+                slo_hours=m["slo_hours"],
+                feature_names=tuple(m["feature_names"])
+                if m["feature_names"] else None)
+        return out
+    fleet = build_paper_fleet(hours=hours, total_power=total_power,
+                              num_samples=num_samples, num_jobs=num_jobs,
+                              seed=seed)
+    _CACHE_DIR.mkdir(parents=True, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    meta: dict[str, dict] = {}
+    for name, m in fleet.items():
+        arrays[f"{name}_usage"] = m.usage
+        if m.jobs is not None:
+            arrays[f"{name}_jobs"] = m.jobs
+        meta[name] = {
+            "kind": m.kind, "entitlement": m.entitlement, "k": m.k,
+            "params": list(m.params), "slo_hours": m.slo_hours,
+            "feature_names": list(m.feature_names) if m.feature_names else None,
+        }
+    np.savez(path, meta=np.str_(json.dumps(meta)), **arrays)
+    return fleet

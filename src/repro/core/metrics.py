@@ -1,0 +1,60 @@
+"""Fairness and efficiency metrics (paper §VI-E).
+
+Shannon entropy over capacity-scaled shares: p_i ∝ C_i/E_i (performance) or
+CF_i/E_i (carbon). Max entropy = log2(W) (= 2 for the paper's 4 workloads)
+when losses are exactly proportional to capacity entitlements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def capacity_scaled_entropy(values: np.ndarray, entitlements: np.ndarray,
+                            ) -> float:
+    """−Σ p log2 p with p_i ∝ max(values_i, 0)/E_i, normalized to sum 1.
+
+    Returns max entropy when `values` is zero everywhere (no DR = trivially
+    fair), matching the paper's convention that equal treatment is fair.
+    """
+    shares = np.maximum(np.asarray(values, float), 0.0) / np.asarray(
+        entitlements, float)
+    total = shares.sum()
+    n = shares.shape[0]
+    if total <= 1e-12:
+        return float(np.log2(n))
+    pnz = shares / total
+    pnz = pnz[pnz > 1e-15]
+    return float(-(pnz * np.log2(pnz)).sum())
+
+
+def entropy_over_sweep(results, entitlements: np.ndarray,
+                       ) -> dict[str, np.ndarray]:
+    """Per-result entropies for a hyperparameter sweep (Fig. 10 box data)."""
+    pen = np.asarray([capacity_scaled_entropy(r.per_penalty, entitlements)
+                      for r in results])
+    car = np.asarray([capacity_scaled_entropy(r.per_carbon, entitlements)
+                      for r in results])
+    return {"penalty_entropy": pen, "carbon_entropy": car}
+
+
+def box_stats(x: np.ndarray) -> dict[str, float]:
+    """1st/2nd/3rd quartiles + min/max (Fig. 10 box-and-whisker)."""
+    return {
+        "min": float(np.min(x)), "q1": float(np.percentile(x, 25)),
+        "median": float(np.median(x)), "q3": float(np.percentile(x, 75)),
+        "max": float(np.max(x)),
+    }
+
+
+def pareto_frontier(carbon_pct: np.ndarray, penalty_pct: np.ndarray,
+                    ) -> np.ndarray:
+    """Indices of non-dominated (max carbon, min penalty) points, sorted by
+    carbon reduction (Fig. 8 frontiers)."""
+    order = np.argsort(carbon_pct)
+    best = np.inf
+    keep = []
+    for i in order[::-1]:
+        if penalty_pct[i] < best - 1e-12:
+            keep.append(i)
+            best = penalty_pct[i]
+    return np.asarray(keep[::-1], dtype=int)

@@ -1,0 +1,247 @@
+"""Workload performance-penalty models (paper §IV).
+
+Two families:
+
+  * Real-time (RTS1/RTS2): cubic latency-degradation polynomials published in
+    the paper (fit to Dynamo Fig. 13 profiles):
+        f_RTS1(δ) = 6.3δ³ − 13δ² + 51.6δ
+        f_RTS2(δ) = −4δ³ − 3.5δ² + 42.5δ
+    with δ the power cut as a *fraction* of usage (the paper's Eq. 1 prints
+    δ = d/(U×100) while §IV-A1 prints δ = d/U×100; the coefficients are only
+    dimensionally sensible for δ ∈ [0, 1] — e.g. f_RTS1(0.2) ≈ 9.9 %% latency
+    degradation, matching Dynamo's published curves — so we use the fraction
+    and note the notational inconsistency here).
+
+  * Batch (AI training / Data pipeline): Lasso-learned models over Table-IV
+    features, trained against the EDD simulator:
+        C_i(d) = ( k_i (β₀ + β₁ x₁ + β₂ x₂) )⁺
+
+  Scaling weights k_i convert workload-specific performance loss into the
+  datacenter-wide currency (equivalent NP capacity loss) by calibration:
+  the penalty of a 15 %% capacity cap ≡ the entitlement lost (0.15·E_i).
+
+Everything here is JAX-differentiable in d, so policies can optimize through
+the models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as feat
+from repro.core.lasso import LassoFit, fit_lasso_cv
+from repro.sched.edd import EDDScheduler, mixed_curtailments
+from repro.sched.traces import JobTrace, ServiceTrace, make_job_trace
+
+Array = jax.Array
+
+# Published Dynamo-fit coefficients (paper Eq. 1): a3, a2, a1.
+RTS_COEFFS = {
+    "RTS1": (6.3, -13.0, 51.6),
+    "RTS2": (-4.0, -3.5, 42.5),
+}
+CALIBRATION_CAP = 0.15  # §IV: "capping 15% capacity"
+
+
+@dataclasses.dataclass(frozen=True)
+class PenaltyModel:
+    """A calibrated penalty model C_i(d) for one workload.
+
+    Attributes:
+      name: workload name.
+      kind: "realtime" | "batch_slo" | "batch_noslo".
+      usage: (T,) baseline hourly usage U_i (NP).
+      entitlement: capacity entitlement E_i (NP).
+      k: calibration weight (NP per unit of raw performance loss).
+      params: model parameters — RTS: (a3, a2, a1); batch: (β0, β1, β2).
+      jobs: (T,) hourly job counts (batch only; zeros for RTS).
+      slo_hours: representative SLO lag for the tardiness feature.
+      feature_names: which Table-IV features are x1, x2 (batch only).
+    """
+
+    name: str
+    kind: str
+    usage: np.ndarray
+    entitlement: float
+    k: float
+    params: tuple[float, ...]
+    jobs: np.ndarray | None = None
+    slo_hours: int = 4
+    feature_names: tuple[str, str] | None = None
+
+    # ---- raw (uncalibrated) loss ------------------------------------------
+    def raw_loss(self, d: Array, smooth: float = 0.0) -> Array:
+        """Workload-specific performance loss (latency-%·hours for RTS;
+        waiting/tardiness hours for batch). Differentiable in d."""
+        if self.kind == "realtime":
+            a3, a2, a1 = self.params
+            delta = d / jnp.asarray(self.usage)
+            f = a3 * delta**3 + a2 * delta**2 + a1 * delta
+            return f.sum(axis=-1)
+        b0, b1, b2 = self.params
+        x = self._batch_features(d, smooth)
+        return b0 + b1 * x[..., 0] + b2 * x[..., 1]
+
+    def _batch_features(self, d: Array, smooth: float = 0.0) -> Array:
+        assert self.feature_names is not None and self.jobs is not None
+        fns = {
+            "waiting_time_jobs": lambda: feat.waiting_time_jobs(
+                d, jnp.asarray(self.usage), jnp.asarray(self.jobs), smooth),
+            "waiting_time_power": lambda: feat.waiting_time_power(d, smooth),
+            "waiting_time_squared": lambda: feat.waiting_time_squared(
+                d, jnp.asarray(self.usage), jnp.asarray(self.jobs), smooth),
+            "num_jobs_delayed": lambda: feat.num_jobs_delayed(
+                d, jnp.asarray(self.usage), jnp.asarray(self.jobs), smooth),
+            "total_tardiness": lambda: feat.total_tardiness(
+                d, jnp.asarray(self.usage), jnp.asarray(self.jobs),
+                self.slo_hours, smooth),
+        }
+        return jnp.stack([fns[n]() for n in self.feature_names], axis=-1)
+
+    # ---- calibrated penalty (paper Eqs. 1 & 2) ----------------------------
+    def penalty(self, d: Array, smooth: float = 0.0) -> Array:
+        """C_i(d) in equivalent-NP-capacity units. Batch models take the
+        positive part (Eq. 2); RTS is signed (boost improves service)."""
+        raw = self.raw_loss(d, smooth)
+        if self.kind == "realtime":
+            return self.k * raw
+        if smooth > 0.0:
+            return smooth * jax.nn.softplus(self.k * raw / smooth)
+        return jnp.maximum(self.k * raw, 0.0)
+
+    def cap_curtailment(self, cap_frac: float) -> np.ndarray:
+        """Curtailment vector from capping power at cap_frac·E (Eq. 9)."""
+        # Capping at L = cap_frac·E cuts any usage above L.
+        L = cap_frac * self.entitlement
+        return np.maximum(self.usage - L, 0.0)
+
+    def calibration_curtailment(self, cap: float = CALIBRATION_CAP
+                                ) -> np.ndarray:
+        """Uniform loss of `cap` of capacity — the k-calibration reference.
+
+        Entitlements sit above usage (provisioning headroom), so an 85 % cap
+        on E barely touches usage; the paper's "entitlement loss when capping
+        15 % capacity" is the *capacity taken away*, i.e. d_t = 0.15·E
+        (clipped to half of usage, the idle-power floor)."""
+        d = np.full_like(self.usage, cap * self.entitlement)
+        return np.minimum(d, 0.5 * self.usage)
+
+
+def calibrate_k(raw_loss_at_cap: float, entitlement: float,
+                cap: float = CALIBRATION_CAP) -> float:
+    """k_i = capacity loss / performance loss at a (1-cap)·E power cap."""
+    if raw_loss_at_cap <= 1e-12:
+        return 0.0
+    return (cap * entitlement) / raw_loss_at_cap
+
+
+def build_rts_model(name: str, trace: ServiceTrace) -> PenaltyModel:
+    """Penalty model for a real-time service from published coefficients."""
+    coeffs = RTS_COEFFS[name if name in RTS_COEFFS else "RTS1"]
+    model = PenaltyModel(name=name, kind="realtime", usage=trace.usage,
+                         entitlement=trace.entitlement, k=1.0, params=coeffs)
+    # Calibrate k against a uniform 15%-of-capacity loss.
+    d_cap = model.calibration_curtailment()
+    raw = float(model.raw_loss(jnp.asarray(d_cap)))
+    k = calibrate_k(raw, trace.entitlement)
+    return dataclasses.replace(model, k=k)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchTrainingData:
+    """Simulator-generated supervised data for the Lasso fit."""
+
+    X: np.ndarray          # (N, F) Table-IV features
+    y: np.ndarray          # (N,) waiting time (no-SLO) or tardiness (SLO)
+    baseline: float        # outcome with d = 0
+    feature_names: tuple[str, ...]
+
+
+def generate_batch_training_data(
+        trace: ServiceTrace, jobs: JobTrace, num_samples: int,
+        seed: int = 0) -> BatchTrainingData:
+    """Run the EDD simulator under sampled curtailments (paper §IV-A2)."""
+    # horizon_slack=4: limited free-drain after the window keeps tardiness
+    # responsive to sustained curtailment (validated against Table V quality).
+    sched = EDDScheduler(horizon_slack=4)
+    T = trace.hours
+    jobs_per_hour = jobs.jobs_per_hour(T)
+    with_slo = trace.kind == "batch_slo"
+    ds = mixed_curtailments(trace.usage, num_samples, seed=seed)
+    base = sched.run(jobs, trace.usage)
+    y0 = base.total_tardiness if with_slo else base.total_waiting
+    names = tuple(n for n in feat.FEATURE_NAMES
+                  if with_slo or n != "total_tardiness")
+    X = np.zeros((num_samples, len(names)))
+    y = np.zeros(num_samples)
+    dj = jnp.asarray(ds)
+    Xall = np.asarray(feat.feature_matrix(
+        dj, jnp.asarray(trace.usage), jnp.asarray(jobs_per_hour),
+        slo_hours=4, include_tardiness=with_slo))
+    X = Xall
+    for n in range(num_samples):
+        res = sched.run(jobs, trace.usage - ds[n])
+        out = res.total_tardiness if with_slo else res.total_waiting
+        y[n] = out - y0
+    return BatchTrainingData(X=X, y=y, baseline=y0, feature_names=names)
+
+
+def build_batch_model(name: str, trace: ServiceTrace, jobs: JobTrace,
+                      num_samples: int = 160, seed: int = 0,
+                      use_published_selection: bool = True,
+                      ) -> tuple[PenaltyModel, LassoFit, BatchTrainingData]:
+    """Fit the Lasso penalty model for a batch service and calibrate k.
+
+    Returns (model, fit, data). `use_published_selection` restricts the model
+    to the paper's published (x1, x2) pair after the full-Lasso fit — the
+    full fit is still reported (Table V benchmark checks its CV quality).
+    """
+    data = generate_batch_training_data(trace, jobs, num_samples, seed)
+    fit = fit_lasso_cv(data.X, data.y, seed=seed)
+    key = "DataPipeline" if trace.kind == "batch_slo" else "AITraining"
+    if use_published_selection:
+        sel_names = feat.SELECTED[key]
+    else:
+        sel = fit.selected[:2] if len(fit.selected) >= 2 else (0, 1)
+        sel_names = tuple(data.feature_names[i] for i in sel)
+    # Refit OLS-style on the two selected features for the deploy model
+    # (paper's Eq. 2 has exactly β0, β1, β2).
+    idx = [data.feature_names.index(n) for n in sel_names]
+    X2 = data.X[:, idx]
+    A = np.concatenate([np.ones((X2.shape[0], 1)), X2], axis=1)
+    beta, *_ = np.linalg.lstsq(A, data.y, rcond=None)
+    jobs_per_hour = jobs.jobs_per_hour(trace.hours)
+    model = PenaltyModel(
+        name=name, kind=trace.kind, usage=trace.usage,
+        entitlement=trace.entitlement, k=1.0,
+        params=(float(beta[0]), float(beta[1]), float(beta[2])),
+        jobs=jobs_per_hour, slo_hours=4, feature_names=sel_names)
+    d_cap = model.calibration_curtailment()
+    raw = float(jnp.maximum(model.raw_loss(jnp.asarray(d_cap)), 0.0))
+    k = calibrate_k(raw, trace.entitlement)
+    return dataclasses.replace(model, k=k), fit, data
+
+
+def build_paper_fleet(hours: int = 48, total_power: float = 100.0,
+                      num_samples: int = 160, num_jobs: int = 10_000,
+                      seed: int = 0) -> dict[str, PenaltyModel]:
+    """The paper's four-service fleet (Table II) with calibrated models."""
+    from repro.sched.traces import fleet_power_traces
+    traces = fleet_power_traces(hours=hours, total_power=total_power, seed=seed)
+    out: dict[str, PenaltyModel] = {}
+    for name in ("RTS1", "RTS2"):
+        out[name] = build_rts_model(name, traces[name])
+    for name, kind, n in (("AITraining", "batch_noslo", 303),
+                          ("DataPipeline", "batch_slo", 162)):
+        jobs = make_job_trace(kind, hours=hours,
+                              total_power=1.05 * float(np.mean(traces[name].usage)),
+                              num_jobs=num_jobs, seed=seed + hash(name) % 97)
+        samples = min(num_samples, n)
+        model, _, _ = build_batch_model(name, traces[name], jobs,
+                                        num_samples=samples, seed=seed)
+        out[name] = model
+    return out

@@ -1,0 +1,265 @@
+"""Datacenter DR policies (paper §V): CR1/CR2/CR3 + shared constraints.
+
+A policy takes a `DRProblem` (workload penalty models + carbon signal +
+datacenter constraints) and produces an hourly adjustment matrix
+D = [d_1 … d_W] (W, T), positive = curtail. Policies differ in objective and
+fairness treatment; all share (§V-C):
+
+  * total capacity:  max_t Σ_i (U_it − d_it) ≤ buffer · Σ_i E_i   (Eq. 10)
+  * batch preservation: Σ_{t∈day} d_it = 0 for batch workloads — deferred
+    work completes within the day (§III-B; Eq. 11 prints the inequality,
+    but §VI-C's analysis of B1 — "B1 would have terminated at the yellow
+    star, indicating its inability to adjust power under the constraint" —
+    is only consistent with the equality form for capping-only policies,
+    so the equality is the default and the inequality is an option).
+  * curtailment ≤ half the entitlement (§VI-A, idle-power floor), and
+    boosts bounded by the entitlement: U−d ≤ E.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.penalty import PenaltyModel
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DRProblem:
+    """A demand-response instance over W workloads × T hours."""
+
+    models: tuple[PenaltyModel, ...]
+    mci: np.ndarray                    # (T,) marginal carbon intensity
+    capacity_buffer: float = 1.2       # Eq. 10
+    max_curtail_frac: float = 0.5      # of entitlement (§VI-A)
+    day_hours: int = 24
+    preservation: str = "equality"     # "equality" | "inequality" | "none"
+    smooth: float = 0.25               # softplus temperature for solvers
+    rts_boost: bool = False            # allow d<0 for real-time workloads?
+
+    # ---- cached views ------------------------------------------------------
+    @functools.cached_property
+    def W(self) -> int:
+        return len(self.models)
+
+    @functools.cached_property
+    def T(self) -> int:
+        return int(self.mci.shape[0])
+
+    @functools.cached_property
+    def usage(self) -> np.ndarray:      # (W, T)
+        return np.stack([m.usage for m in self.models])
+
+    @functools.cached_property
+    def entitlements(self) -> np.ndarray:  # (W,)
+        return np.asarray([m.entitlement for m in self.models])
+
+    @functools.cached_property
+    def batch_mask(self) -> np.ndarray:    # (W,) True where batch
+        return np.asarray([m.kind != "realtime" for m in self.models])
+
+    @functools.cached_property
+    def names(self) -> tuple[str, ...]:
+        return tuple(m.name for m in self.models)
+
+    @property
+    def num_days(self) -> int:
+        return max(1, self.T // self.day_hours)
+
+    # ---- objective terms ---------------------------------------------------
+    def penalties(self, D: Array, smooth: float | None = None) -> Array:
+        """(W,) calibrated per-workload penalties C_i(d_i)."""
+        s = self.smooth if smooth is None else smooth
+        return jnp.stack([m.penalty(D[i], smooth=s)
+                          for i, m in enumerate(self.models)])
+
+    def total_penalty(self, D: Array, smooth: float | None = None) -> Array:
+        return self.penalties(D, smooth).sum()
+
+    def carbon_reduction_per_workload(self, D: Array) -> Array:
+        """(W,) ⟨mci, d_i⟩ — kg CO2 eliminated per workload."""
+        return D @ jnp.asarray(self.mci)
+
+    def carbon_reduction(self, D: Array) -> Array:
+        return self.carbon_reduction_per_workload(D).sum()
+
+    def peak(self, D: Array) -> Array:
+        """Post-DR datacenter peak power max_t Σ_i (U − d)."""
+        return (jnp.asarray(self.usage) - D).sum(axis=0).max()
+
+    def soft_peak(self, D: Array, tau: float = 0.05) -> Array:
+        """Smooth max for gradient-based solvers."""
+        tot = (jnp.asarray(self.usage) - D).sum(axis=0)
+        scale = tau * float(self.usage.sum(axis=0).max())
+        return scale * jax.nn.logsumexp(tot / scale)
+
+    @property
+    def capacity_limit(self) -> float:
+        return float(self.capacity_buffer * self.entitlements.sum())
+
+    @property
+    def total_carbon_baseline(self) -> float:
+        """Operational carbon without DR (normalization for reporting)."""
+        return float((self.usage.sum(axis=0) * self.mci).sum())
+
+    # ---- constraint machinery ---------------------------------------------
+    def bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        """(lower, upper) box bounds for D, shape (W, T).
+
+        Curtailment is capped at half the entitlement (§VI-A) and at usage;
+        boosts go up to the entitlement (U−d ≤ E). Real-time workloads are
+        curtail-only by default: their latency model rewards extra power
+        linearly, which would let an optimizer buy unbounded 'negative
+        penalty' — and the paper's own CR1 trace (Fig. 7) shows RTS services
+        only ever shedding load (deferred batch absorbs the rebound).
+        """
+        U, E = self.usage, self.entitlements[:, None]
+        upper = np.minimum(self.max_curtail_frac * E, U)
+        lower = -(E - U)          # boost until usage hits entitlement
+        if not self.rts_boost:
+            lower = np.where(self.batch_mask[:, None], lower, 0.0)
+        return lower, upper
+
+    def day_sums(self, D: Array) -> Array:
+        """(W, n_days) per-day adjustment sums (preservation residuals)."""
+        n = self.num_days
+        Dd = D[:, : n * self.day_hours].reshape(self.W, n, self.day_hours)
+        return Dd.sum(axis=-1)
+
+    def preservation_residual(self, D: Array) -> Array:
+        """(n_batch * n_days,) equality residuals (zero when preserved)."""
+        sums = self.day_sums(D)
+        idx = np.nonzero(self.batch_mask)[0]
+        return sums[idx].reshape(-1)
+
+    def project_preservation(self, D: Array) -> Array:
+        """Exact projection of batch rows onto Σ_{t∈day} d = 0."""
+        n = self.num_days
+        Dday = D[:, : n * self.day_hours].reshape(self.W, n, self.day_hours)
+        mean = Dday.mean(axis=-1, keepdims=True)
+        mask = jnp.asarray(self.batch_mask)[:, None, None]
+        Dday = jnp.where(mask, Dday - mean, Dday)
+        return jnp.concatenate(
+            [Dday.reshape(self.W, n * self.day_hours),
+             D[:, n * self.day_hours:]], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Solver-agnostic optimization spec produced by each policy.
+
+    objective(D) is minimized subject to:
+      eq(D) == 0 for each eq constraint, ineq(D) >= 0 for each,
+      lower <= D <= upper elementwise, D[~free] == 0,
+      plus the problem's preservation constraint (unless disabled).
+    """
+
+    name: str
+    problem: DRProblem
+    objective: Callable[[Array], Array]
+    eq_constraints: tuple[Callable[[Array], Array], ...] = ()
+    ineq_constraints: tuple[Callable[[Array], Array], ...] = ()
+    free: np.ndarray | None = None      # (W,) bool; None = all free
+    lower: np.ndarray | None = None     # override problem bounds
+    upper: np.ndarray | None = None
+    use_preservation: bool = True
+
+
+def _capacity_ineq(p: DRProblem) -> Callable[[Array], Array]:
+    def g(D: Array) -> Array:
+        return jnp.asarray(p.capacity_limit) - p.soft_peak(D)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# CR1 — Efficient DR (Eq. 3): min λ C(D) + CF(D); CF change = −carbon_red.
+#
+# Both terms are normalized (penalty by total entitlement, carbon by the
+# no-DR baseline footprint) so λ is unit-free: it trades "% capacity-
+# equivalent performance loss" against "% operational carbon". The paper
+# reports outcomes in exactly these percentages (§VI-A), and only a
+# normalized objective makes its λ = 6.9 a moderate operating point.
+# ---------------------------------------------------------------------------
+def cr1_spec(p: DRProblem, lam: float) -> PolicySpec:
+    pen_norm = 100.0 / float(p.entitlements.sum())
+    car_norm = 100.0 / p.total_carbon_baseline
+
+    def obj(D: Array) -> Array:
+        return (lam * pen_norm * p.total_penalty(D)
+                - car_norm * p.carbon_reduction(D))
+    return PolicySpec(name=f"CR1(λ={lam:g})", problem=p, objective=obj,
+                      ineq_constraints=(_capacity_ineq(p),))
+
+
+# ---------------------------------------------------------------------------
+# CR2 — Fair & Centralized (Eq. 4): min CF s.t. C_i(d_i) = C_i(cap%).
+# ---------------------------------------------------------------------------
+def cr2_reference_losses(p: DRProblem, cap_frac: float) -> np.ndarray:
+    """C_i under a hypothetical equal power cap at cap_frac·E (the fairness
+    reference — CR2 'does not actually cap power')."""
+    refs = []
+    for m in p.models:
+        d_cap = m.cap_curtailment(cap_frac)
+        refs.append(float(m.penalty(jnp.asarray(d_cap), smooth=0.0)))
+    return np.asarray(refs)
+
+
+def cr2_spec(p: DRProblem, cap_frac: float) -> PolicySpec:
+    refs = cr2_reference_losses(p, cap_frac)
+    scale = float(np.maximum(refs, 1e-3).mean())
+    car_norm = 100.0 / p.total_carbon_baseline
+
+    def obj(D: Array) -> Array:
+        return -car_norm * p.carbon_reduction(D)
+
+    def eq(D: Array) -> Array:
+        return (p.penalties(D) - jnp.asarray(refs)) / scale
+
+    return PolicySpec(name=f"CR2(cap={cap_frac:g})", problem=p, objective=obj,
+                      eq_constraints=(eq,),
+                      ineq_constraints=(_capacity_ineq(p),))
+
+
+# ---------------------------------------------------------------------------
+# CR3 — Fair & Decentralized (Eqs. 5–8): taxes and rebates.
+# ---------------------------------------------------------------------------
+def cr3_workload_spec(p: DRProblem, i: int, rho: float,
+                      tax_frac: float = 0.2) -> PolicySpec:
+    """Workload i's selfish problem: min C_i(d_i) s.t.
+    max_t(U_i − d_i) ≤ E_i − T_i + P_i(d_i),  P_i = ρ·⟨mci, d_i⟩,
+    T_i = tax_frac·E_i (Eq. 8). Box/preservation as usual."""
+    m = p.models[i]
+    E = m.entitlement
+    T_i = tax_frac * E
+    mci = jnp.asarray(p.mci)
+    usage = jnp.asarray(m.usage)
+
+    def obj(D: Array) -> Array:
+        return p.penalties(D)[i]
+
+    def ineq(D: Array) -> Array:
+        d = D[i]
+        rebate = rho * (d @ mci)
+        # Smooth max over hours for solver friendliness.
+        tau = 0.02 * E
+        peak_i = tau * jax.nn.logsumexp((usage - d) / tau)
+        return (E - T_i + rebate) - peak_i
+
+    free = np.zeros(p.W, dtype=bool)
+    free[i] = True
+    return PolicySpec(name=f"CR3[w{i}](ρ={rho:g})", problem=p, objective=obj,
+                      ineq_constraints=(ineq,), free=free)
+
+
+def cr3_fiscal_balance(p: DRProblem, D: np.ndarray, rho: float,
+                       tax_frac: float = 0.2) -> tuple[float, float]:
+    """(Σ P_i, Σ T_i) — Eq. 6 requires ΣP ≤ ΣT."""
+    rebates = rho * (np.asarray(D) @ p.mci)
+    taxes = tax_frac * p.entitlements
+    return float(rebates.sum()), float(taxes.sum())

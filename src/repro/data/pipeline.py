@@ -1,0 +1,103 @@
+"""Data pipeline: deterministic synthetic token streams with host sharding
+and background prefetch.
+
+The stream is seeded per (epoch, step, host) so every host materializes only
+its shard — no global array ever exists (the property that matters at
+thousand-node scale). Prefetch runs on a background thread with a bounded
+queue, overlapping host data generation with device compute.
+
+In the Carbon Responder fleet, this pipeline is itself a "Data Pipeline"
+batch workload: `throttle` lets the DR schedule cut its throughput (the
+enforcement mechanism of §V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+    prefetch: int = 2
+
+
+def synthetic_batch(cfg: ArchConfig, shape: ShapeCell, step: int,
+                    dc: DataConfig = DataConfig()) -> dict[str, np.ndarray]:
+    """One host-shard of a global batch (tokens + labels [+ modality])."""
+    assert shape.global_batch % dc.host_count == 0
+    b = shape.global_batch // dc.host_count
+    rng = np.random.default_rng(
+        (dc.seed * 1_000_003 + step) * 4093 + dc.host_index)
+    S = shape.seq_len
+    # Zipf-ish token distribution — realistic softmax pressure.
+    toks = rng.zipf(1.3, size=(b, S)).astype(np.int64)
+    toks = np.clip(toks, 0, cfg.vocab_size - 1).astype(np.int32)
+    batch = {"tokens": toks, "labels": toks.copy()}
+    if cfg.family == "encdec":
+        batch["frames"] = rng.standard_normal(
+            (b, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        sv = int(S * cfg.vision_tokens_frac)
+        batch["tokens"] = batch["tokens"][:, : S - sv]
+        batch["labels"] = batch["labels"][:, : S - sv]
+        batch["vision_embeds"] = rng.standard_normal(
+            (b, sv, cfg.d_model)).astype(np.float32)
+        pos = np.arange(S, dtype=np.int32)
+        batch["mrope_positions"] = np.broadcast_to(
+            pos, (3, b, S)).copy()
+    return batch
+
+
+class PrefetchingLoader:
+    """Background-thread loader with a bounded queue and a DR throttle.
+
+    `set_throttle(frac)` scales effective throughput by delaying dequeues —
+    the knob the FleetCoordinator drives from the CR schedule.
+    """
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeCell,
+                 dc: DataConfig = DataConfig(), start_step: int = 0):
+        self.cfg, self.shape, self.dc = cfg, shape, dc
+        self._q: queue.Queue = queue.Queue(maxsize=dc.prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._throttle = 1.0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            batch = synthetic_batch(self.cfg, self.shape, self._step, self.dc)
+            self._step += 1
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def set_throttle(self, frac: float) -> None:
+        self._throttle = max(0.05, min(1.0, frac))
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        import time
+        if self._throttle < 1.0:
+            # DR enforcement: stretch inter-batch time by 1/throttle.
+            time.sleep(0.01 * (1.0 / self._throttle - 1.0))
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=1.0)

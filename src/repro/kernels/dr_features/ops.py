@@ -1,0 +1,14 @@
+"""jit'd wrapper for the fleet DR feature kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.dr_features.kernel import dr_features_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dr_features(d, usage, jobs, interpret: bool = True):
+    """(W, T) fleet adjustment/usage/job matrices -> (W, 4) features."""
+    return dr_features_pallas(d, usage, jobs, interpret=interpret)

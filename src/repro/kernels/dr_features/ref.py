@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the DR feature kernel — MUST match
+`repro.core.features` (shared definition of Table IV)."""
+import jax.numpy as jnp
+
+from repro.core import features as feat
+
+
+def dr_features_ref(d, usage, jobs):
+    """d/usage/jobs: (W, T) -> (W, 4): [wait_jobs, wait_power, wait_sq,
+    njobs_delayed] (tardiness excluded — SLO lag is workload-specific)."""
+    return jnp.stack([
+        feat.waiting_time_jobs(d, usage, jobs),
+        feat.waiting_time_power(d),
+        feat.waiting_time_squared(d, usage, jobs),
+        feat.num_jobs_delayed(d, usage, jobs),
+    ], axis=-1)

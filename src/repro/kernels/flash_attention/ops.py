@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, Dh) and handles the (B, H, S, Dh)
+kernel layout, GQA head mapping, and interpret-mode selection (CPU container
+-> interpret=True; real TPU -> compiled kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh/Dv) -> (B, Sq, H, Dv)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

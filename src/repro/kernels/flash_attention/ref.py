@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (no chunking tricks —
+direct softmax so the kernel's online-softmax is independently validated)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh); GQA via head grouping.
+    Direct (materializing) softmax attention in fp32."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, Dv = *k.shape[:3], v.shape[-1]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Sq, KV, groups, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Skv)[None, :] > jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)

@@ -1,0 +1,43 @@
+"""Pallas TPU fused RMSNorm kernel.
+
+Fuses the mean-square reduction, rsqrt, and scale multiply in one VMEM pass
+(the unfused jnp version reads x twice and materializes the fp32 upcast in
+HBM). Grid tiles rows; the feature dim stays resident in VMEM (d_model ≤
+8192 ⇒ ≤ 4 MB fp32 per (128, d) tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, eps: float = 1e-6, block_rows: int = 128,
+                   interpret: bool = True):
+    """x: (N, d); scale: (d,) -> (N, d)."""
+    N, d = x.shape
+    pad = (-N) % block_rows
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    rows = xp.shape[0] // block_rows
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xp, scale)
+    return out[:N]

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the fused RMSNorm kernel (any leading batch dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = True):
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = rmsnorm_pallas(flat, scale, eps=eps, interpret=interpret)
+    return out.reshape(shape)

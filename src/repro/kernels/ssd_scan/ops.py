@@ -1,0 +1,13 @@
+"""jit'd wrapper for the SSD inter-chunk scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(states, chunk_decay, interpret: bool = True):
+    return ssd_scan_pallas(states, chunk_decay, interpret=interpret)

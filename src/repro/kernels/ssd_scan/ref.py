@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the SSD inter-chunk state scan."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(states, chunk_decay, h0=None):
+    """states: (B, NC, H, P, N) per-chunk contributions;
+    chunk_decay: (B, NC, H) per-chunk carry decays.
+    Returns (h_prev: (B, NC, H, P, N) state BEFORE each chunk,
+             h_last: (B, H, P, N))."""
+    B, NC, H, P, N = states.shape
+
+    def scan_fn(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    h_init = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h_init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    return h_prev.transpose(1, 0, 2, 3, 4), h_last

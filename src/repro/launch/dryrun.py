@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we record:
+  * compile success, wall time
+  * memory_analysis()  — bytes per device (proves the sharding fits)
+  * cost_analysis()    — HLO FLOPs / bytes accessed
+  * collective bytes   — parsed from the compiled HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+  * roofline terms for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI) — see EXPERIMENTS.md §Roofline.
+
+Results are appended to a JSON file incrementally so a crashed run resumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod]
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Any
+
+# Hardware constants (TPU v5e).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[ty]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)             # iota form [n_groups,group_size]
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)        # explicit {{0,1,...},...}
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _line_collective_bytes(line: str) -> tuple[str, float] | None:
+    """(op, per-device ICI bytes) for one instruction line, else None.
+
+    Post-optimization HLO prints operand names without shapes, so we read
+    the RESULT shape (before the op name) and convert to bytes moved per
+    participating device for a ring implementation of group size g:
+      all-gather        : out·(g−1)/g
+      reduce-scatter    : out·(g−1)     (input = out·g)
+      all-reduce        : 2·out·(g−1)/g (RS + AG phases)
+      all-to-all        : out·(g−1)/g
+      collective-permute: out           (point-to-point)
+    """
+    m = _COLLECTIVE_RE.search(line)
+    if not m:
+        return None
+    lhs = line.split("=")[0]
+    if "-done" in lhs:
+        return None
+    op = m.group(3)
+    shapes_str = m.group(1) if m.group(1) is not None else m.group(2)
+    out_bytes = sum(_shape_bytes(t, d)
+                    for t, d in _SHAPE_RE.findall(shapes_str))
+    g = _group_size(line)
+    ring = (g - 1) / g if g > 1 else 0.0
+    if op == "all-reduce":
+        return op, 2 * out_bytes * ring
+    if op == "reduce-scatter":
+        return op, out_bytes * (g - 1)
+    if op == "collective-permute":
+        return op, float(out_bytes)
+    return op, out_bytes * ring
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                           r"(?:->\s*\S+\s*)?\{")
+_CALLEE_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Loop-aware per-device ICI bytes for the whole compiled module.
+
+    XLA prints each `while` (lax.scan) body once; we build the computation
+    graph, parse each loop's trip count from its condition's comparison
+    constant, and multiply body collectives accordingly — otherwise an
+    80-layer scanned stack under-reports collectives by 80x.
+    """
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: list[str] | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        # Computation header: "[ENTRY] %name (args...) -> ret {" — args may
+        # nest parens (tuples), so detect by "ends with { and is not an
+        # instruction (no ' = ')".
+        if line.endswith("{") and " = " not in line.split("(")[0]:
+            toks = line.split("(")[0].split()
+            name = None
+            for t in toks:
+                if t not in ("ENTRY", "HloModule") and not t.startswith("//"):
+                    name = t.lstrip("%").rstrip()
+                    break
+            if name:
+                cur = []
+                comps[name] = cur
+                if line.startswith("ENTRY"):
+                    entry = name
+                continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(line)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for ln in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    memo: dict[str, tuple[dict[str, float], dict[str, float]]] = {}
+
+    def walk(name: str) -> tuple[dict[str, float], dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = ({}, {})                 # cycle guard
+        totals: dict[str, float] = {}
+        counts: dict[str, float] = {}
+        for line in comps.get(name, ()):
+            got = _line_collective_bytes(line)
+            if got:
+                op, nbytes = got
+                totals[op] = totals.get(op, 0.0) + nbytes
+                counts[op] = counts.get(op, 0.0) + 1
+            mult = 1
+            callee_m = _CALLEE_RE.search(line)
+            if callee_m and " while(" in line:
+                cond_m = _COND_RE.search(line)
+                mult = trip_count(cond_m.group(1)) if cond_m else 1
+            if callee_m:
+                sub_t, sub_c = walk(callee_m.group(1))
+                for op, v in sub_t.items():
+                    totals[op] = totals.get(op, 0.0) + mult * v
+                for op, v in sub_c.items():
+                    counts[op] = counts.get(op, 0.0) + mult * v
+        memo[name] = (totals, counts)
+        return memo[name]
+
+    totals, counts = walk(entry) if entry else ({}, {})
+    return {"bytes_by_op": {k: int(v) for k, v in totals.items()},
+            "counts": {k: int(v) for k, v in counts.items()},
+            "total_bytes": int(sum(totals.values()))}
+
+
+def roofline_terms(flops: float, hbm_bytes_per_dev: float,
+                   coll_bytes_per_dev: float, chips: int) -> dict[str, float]:
+    """flops is GLOBAL; bytes terms are already per-device (the SPMD module
+    is a per-device program; the analytic bytes model divides by chips)."""
+    return {
+        "t_compute_s": flops / (chips * PEAK_FLOPS),
+        "t_memory_s": hbm_bytes_per_dev / HBM_BW,
+        "t_collective_s": coll_bytes_per_dev / ICI_BW,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             policy_kwargs: dict | None = None,
+             arch_override: dict | None = None) -> dict:
+    import dataclasses as _dc
+
+    import jax
+    from repro.configs import get_config, input_specs, shape_by_name
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import ShardingPolicy
+    from repro.launch.steps import lower_cell
+
+    cfg = get_config(arch_id)
+    shape = shape_by_name(shape_name)
+    if arch_override:
+        moe_over = {k[4:]: v for k, v in arch_override.items()
+                    if k.startswith("moe.")}
+        plain = {k: v for k, v in arch_override.items() if "." not in k}
+        if moe_over and cfg.moe is not None:
+            cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, **moe_over))
+        if plain:
+            cfg = _dc.replace(cfg, **plain)
+    rec: dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": {**(policy_kwargs or {}),
+                   **({"override": arch_override} if arch_override else {})},
+    }
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch: 500k-token KV cache is "
+                        ">TB-scale; see DESIGN.md §4")
+        return rec
+    policy = ShardingPolicy(**(policy_kwargs or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered, bundle = lower_cell(cfg, shape, mesh, policy)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and move on
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        per_dev = (rec["memory"].get("argument_size_in_bytes", 0)
+                   + rec["memory"].get("temp_size_in_bytes", 0))
+        rec["memory"]["per_device_total_bytes"] = per_dev
+    except Exception as e:  # noqa: BLE001
+        rec["memory"] = {"error": str(e)[:300]}
+
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["cost"] = {k: float(cost[k]) for k in ("flops", "bytes accessed")
+                       if k in cost}
+    except Exception as e:  # noqa: BLE001
+        rec["cost"] = {"error": str(e)[:300]}
+
+    try:
+        text = compiled.as_text()
+        rec["collectives"] = parse_collectives(text)
+        rec["hlo_lines"] = text.count("\n")
+    except Exception as e:  # noqa: BLE001
+        rec["collectives"] = {"error": str(e)[:300]}
+
+    # Roofline from the ANALYTIC model (XLA:CPU cost analysis counts while
+    # bodies once — see launch/analytics.py; raw HLO values kept above).
+    from repro.launch.analytics import analytic_record
+    ana = analytic_record(cfg, shape, chips)
+    rec["analytic"] = ana
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+    rec["roofline"] = roofline_terms(ana["flops"],
+                                     ana["hbm_bytes_per_device"],
+                                     float(coll), chips)
+    terms = rec["roofline"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["step_time_s"] = max(terms.values())
+    # Useful-FLOPs ratio: MODEL_FLOPS = 6·N·D (training) / 2·N·D (fwd) over
+    # ACTIVE params — catches remat/dispatch/attention-quadratic overheads.
+    n_active = cfg.active_param_count()
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                 else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    rec["model_flops"] = mult * n_active * toks
+    rec["useful_flops_ratio"] = rec["model_flops"] / max(ana["flops"], 1.0)
+    # Roofline fraction: useful model flops per second vs chip peak.
+    rec["roofline_fraction"] = (rec["model_flops"] / rec["step_time_s"]
+                                / (chips * PEAK_FLOPS))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="{}",
+                    help="JSON ShardingPolicy overrides")
+    ap.add_argument("--arch-override", default="{}",
+                    help="JSON ArchConfig overrides, e.g."
+                         " '{\"remat\": false, \"moe.dispatch\":"
+                         " \"scatter\", \"param_dtype\":"
+                         " \"bfloat16\"}'")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "einsum", "scatter"])
+    ap.add_argument("--out", default="var/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    records: list[dict] = []
+    if out.exists():
+        records = json.loads(out.read_text())
+
+    def key_of(r: dict) -> tuple:
+        return (r["arch"], r["shape"], r["mesh"],
+                json.dumps(r.get("policy", {}), sort_keys=True))
+
+    done = {key_of(r) for r in records if r.get("status") != "failed"}
+    policy_kwargs = json.loads(args.policy)
+    arch_override = json.loads(args.arch_override) or None
+
+    if args.moe_dispatch:
+        import dataclasses as _dc
+        import repro.configs as _cfgs
+        _orig = _cfgs.get_config
+
+        def patched(arch_id):
+            c = _orig(arch_id)
+            if c.moe is not None:
+                c = _dc.replace(c, moe=_dc.replace(
+                    c.moe, dispatch=args.moe_dispatch))
+            return c
+        _cfgs.get_config = patched
+        import repro.launch.steps  # noqa: F401
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for aid in ARCH_IDS:
+                for s in SHAPES:
+                    cells.append((aid, s.name, mp))
+    else:
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    for aid, sname, mp in cells:
+        probe = {"arch": aid, "shape": sname,
+                 "mesh": "2x16x16" if mp else "16x16",
+                 "policy": {**policy_kwargs,
+                            **({"override": arch_override}
+                               if arch_override else {})}}
+        if not args.force and key_of(probe) in done:
+            print(f"skip (done): {aid} × {sname} × {probe['mesh']}")
+            continue
+        print(f"=== {aid} × {sname} × {probe['mesh']} ===", flush=True)
+        rec = run_cell(aid, sname, mp, policy_kwargs, arch_override)
+        rec_summary = {k: rec.get(k) for k in
+                       ("status", "lower_s", "compile_s", "bottleneck")}
+        print(f"    -> {rec_summary}", flush=True)
+        records = [r for r in records if key_of(r) != key_of(rec)]
+        records.append(rec)
+        out.write_text(json.dumps(records, indent=1))
+
+
+if __name__ == "__main__":
+    main()

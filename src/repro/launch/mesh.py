@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+xla_force_host_platform_device_count trick to work.
+
+Production target: TPU v5e pods, 256 chips each.
+  single-pod:  (16, 16)      axes (data, model)
+  multi-pod:   (2, 16, 16)   axes (pod, data, model)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 1):
+    """Small mesh for CPU tests (requires the host-device env flag)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch (pure data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def has_pod_axis(mesh) -> bool:
+    return "pod" in mesh.axis_names

@@ -1,0 +1,203 @@
+"""GSPMD partition rules for params, optimizer state, batches, and caches.
+
+Baseline strategy (the paper-era "what a production fleet runs"):
+  * TP ("model"): attention heads / FFN hidden / MoE experts / vocab.
+  * FSDP ("data"): the d_model-sized dim of every large weight (ZeRO-style;
+    GSPMD inserts the all-gathers) + batch data parallelism.
+  * DP ("pod"): pure data parallelism across pods — params replicated,
+    gradients all-reduced over ICI/DCN (where gradient compression applies).
+
+Rules are name-based over the param tree path; every leaf gets an explicit
+PartitionSpec so the dry-run is deterministic (no GSPMD guessing at the
+top level).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import dp_axes, has_pod_axis
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Hillclimb knobs for the §Perf iterations."""
+    fsdp_embed: bool = True        # shard embedding d over "data"
+    fsdp_weights: bool = True      # ZeRO weight sharding over "data";
+                                   # False = replicate + grad all-reduce
+                                   # (cheaper collectives when memory allows)
+    fsdp_pod: bool = False         # extend FSDP over the pod axis (ZeRO-3)
+    seq_shard_prefill: bool = False  # shard prefill sequence over "model"
+    expert_axis: str = "model"     # mesh axis for MoE expert parallelism
+    ssm_tp: bool = True            # TP-shard fused SSM projections (their
+                                   # z/x/B/C/dt concat boundaries misalign
+                                   # with shard boundaries -> re-layout
+                                   # all-gathers; the §Perf hillclimb turns
+                                   # this off)
+
+
+def _leaf_rule(path: str, ndim: int, policy: ShardingPolicy) -> P:
+    """PartitionSpec for a parameter leaf (ignoring any leading stack axes —
+    callers prepend Nones)."""
+    fsdp = "data" if policy.fsdp_weights else None
+    if fsdp and policy.fsdp_pod:
+        fsdp = ("data", "pod")    # ZeRO-3 across pods too (legalized away
+                                  # on single-pod meshes)
+    tp = "model"
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # Embeddings: (vocab, d) — vocab over TP, d over FSDP.
+    if name == "table":
+        return P(tp, fsdp if policy.fsdp_embed else None)
+    # Norm scales / scalar-ish leaves: replicate.
+    if name in ("scale", "A_log", "D", "dt_bias", "b", "conv_b"):
+        return P(*([None] * ndim))
+    # MoE stacked experts: (E, d_in, d_out).
+    if parent == "moe" and name in ("w_gate", "w_up"):
+        return P(policy.expert_axis, fsdp, None)
+    if parent == "moe" and name == "w_down":
+        return P(policy.expert_axis, None, fsdp)
+    if parent == "router":
+        return P(fsdp, None)
+    # SSM fused projections: TP only when ssm_tp (see policy docstring).
+    if parent == "in_proj":
+        return P(fsdp, tp if policy.ssm_tp else None)
+    if parent == "out_proj":
+        return P(tp if policy.ssm_tp else None, fsdp)
+    # Projections whose OUTPUT is the TP dim.
+    if parent in ("wq", "wk", "wv", "wuq", "wuk", "wuv", "w_gate", "w_up"):
+        return P(fsdp, tp)
+    # Projections whose INPUT is the TP dim.
+    if parent in ("wo", "w_down"):
+        return P(tp, fsdp)
+    # Low-rank/latent projections (MLA down-projections), small dense maps.
+    if parent in ("wdq", "wdkv", "wkr", "proj"):
+        return P(fsdp, None)
+    if name == "conv_w":
+        return P(None, tp if policy.ssm_tp else None)
+    return P(*([None] * ndim))
+
+
+def param_specs(params_shape: Any, policy: ShardingPolicy = ShardingPolicy(),
+                ) -> Any:
+    """Map a params (shape-)tree to a PartitionSpec tree."""
+
+    def visit(path_keys, leaf) -> P:
+        names = [getattr(k, "key", str(k)) for k in path_keys]
+        path = "/".join(names)
+        ndim = len(leaf.shape)
+        stacked = "blocks" in names or "dec_blocks" in names \
+            or "enc_blocks" in names
+        base = _leaf_rule(path, ndim - (1 if stacked else 0), policy)
+        spec = tuple(base)
+        if stacked:
+            spec = (None,) + spec
+        spec = spec[:ndim] if len(spec) > ndim else spec
+        spec = spec + (None,) * (ndim - len(spec))
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def batch_specs(batch_shape: dict, mesh: Mesh) -> dict:
+    """PartitionSpecs for a train/prefill input batch."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def visit(path_keys, leaf) -> P:
+        name = getattr(path_keys[-1], "key", str(path_keys[-1]))
+        ndim = len(leaf.shape)
+        if name == "mrope_positions":          # (3, B, S)
+            return P(None, dp, None)
+        if leaf.shape[0] == 1:                 # un-shardable batch of 1
+            return P(*([None] * ndim))
+        return P(dp, *([None] * (ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(visit, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, batch: int) -> Any:
+    """PartitionSpecs for decode caches.
+
+    KV-like leaves (stacked (G, B, S, ...)): batch over DP when divisible,
+    cache length over "model" (decode attention reduces over S — GSPMD
+    inserts the partial-softmax collectives). SSM states: batch over DP,
+    heads over "model".
+    """
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dp = dp if len(dp) > 1 else dp[0]
+    b_axis = dp if batch % dp_size == 0 and batch >= dp_size else None
+
+    def visit(path_keys, leaf) -> P:
+        name = getattr(path_keys[-1], "key", str(path_keys[-1]))
+        ndim = len(leaf.shape)
+        if name in ("k", "v", "enc_k", "enc_v",
+                    "k_q", "k_s", "v_q", "v_s"):   # (G,B,S,KV,Dh|1)
+            if b_axis is None:
+                return P(None, None, ("data", "model"), None, None)
+            return P(None, b_axis, "model", None, None)
+        if name in ("c_kv", "k_rope"):             # (G,B,S,r)
+            if b_axis is None:
+                return P(None, None, ("data", "model"), None)
+            return P(None, b_axis, "model", None)
+        if name == "h":                            # (G,B,H,Pd,N)
+            return P(None, b_axis, "model", None, None)
+        if name == "conv":                         # (G,B,K-1,convdim)
+            return P(None, b_axis, None, "model")
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+
+def legalize(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """Drop sharding on any dim the mesh axes don't divide evenly (e.g. a
+    50280-token vocab over 16 model shards): jax requires explicit argument
+    shardings to tile exactly. Falls back to replication on that dim."""
+
+    def visit(shape_leaf, spec: P) -> P:
+        dims = shape_leaf.shape
+        out = []
+        for i, axis in enumerate(tuple(spec) + (None,) * (len(dims)
+                                                          - len(spec))):
+            if axis is None:
+                out.append(None)
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            if any(a not in mesh.shape for a in axes):
+                # axis absent from this mesh (e.g. "pod" on single-pod):
+                # keep only the axes that exist.
+                axes = tuple(a for a in axes if a in mesh.shape)
+                if not axes:
+                    out.append(None)
+                    continue
+                axis = axes if len(axes) > 1 else axes[0]
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(axis if dims[i] % size == 0 else None)
+        return P(*out)
+
+    shape_leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    spec_leaves = treedef.flatten_up_to(specs)
+    out = [visit(s, p) for s, p in zip(shape_leaves, spec_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(mesh: Mesh, batch: int, vocab: int) -> P:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dp = dp if len(dp) > 1 else dp[0]
+    v_axis = "model" if vocab % mesh.shape["model"] == 0 else None
+    if batch % dp_size == 0 and batch >= dp_size:
+        return P(dp, None, v_axis)
+    return P(None, None, v_axis)

@@ -1,0 +1,205 @@
+"""Step builders: train / prefill / decode, with explicit shardings.
+
+`make_step(cfg, shape, mesh, ...)` returns (fn, example_inputs, in_shardings,
+out_shardings) ready for `jax.jit(...).lower(...)` — the single entry point
+shared by the dry-run, the trainers, and the serving loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeCell, input_specs, shape_by_name
+from repro.launch import sharding as sh
+from repro.launch.mesh import dp_axes
+from repro.models import encdec, transformer as tf
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, \
+    apply_updates
+
+Array = jax.Array
+
+
+def model_module(cfg: ArchConfig):
+    return encdec if cfg.family == "encdec" else tf
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    mod = model_module(cfg)
+    return lambda params, batch: mod.loss_fn(params, cfg, batch)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1) -> Callable:
+    """Train step with optional gradient accumulation.
+
+    grad_accum > 1 splits the global batch into `grad_accum` microbatches
+    scanned sequentially: per-microbatch activation memory drops by the
+    same factor, and the gradient all-reduce/reduce-scatter happens once
+    per step regardless — the standard lever for scaling tokens/step
+    without scaling collective traffic.
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (b, grad_accum)
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            def split_batch(bt):
+                out = {}
+                for k, v in bt.items():
+                    if k == "mrope_positions":     # (3, B, S)
+                        out[k] = jnp.moveaxis(split(jnp.moveaxis(v, 0, 1)),
+                                              1, 2)
+                    else:
+                        out[k] = split(v)
+                return out
+
+            micro = split_batch(batch)
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss_i, grads_i = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(lambda a, g: a + g, grads_acc,
+                                         grads_i)
+                return (loss_acc + loss_i, grads_acc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss_sum, grads_sum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads_sum)
+        updates, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            return mod.forward(params, cfg, batch)
+        return tf.forward(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def decode_step(params, cache, token, length):
+        return mod.decode_step(params, cfg, cache, token, length)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to jit/lower one (arch × shape × mesh) cell."""
+    fn: Callable
+    args_shape: tuple            # ShapeDtypeStructs (or arrays) per argument
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def params_shape_of(cfg: ArchConfig) -> Any:
+    mod = model_module(cfg)
+    return jax.eval_shape(
+        lambda: mod.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def make_step_bundle(cfg: ArchConfig, shape: ShapeCell | str, mesh: Mesh,
+                     policy: sh.ShardingPolicy = sh.ShardingPolicy(),
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     ) -> StepBundle:
+    if isinstance(shape, str):
+        shape = shape_by_name(shape)
+    specs = input_specs(cfg, shape)
+    params_shape = params_shape_of(cfg)
+    pspecs = sh.legalize(params_shape, sh.param_specs(params_shape, policy),
+                         mesh)
+    psh = sh.to_named(pspecs, mesh)
+
+    if shape.kind == "train":
+        if cfg.param_dtype == "bfloat16":
+            # bf16 params imply the memory-lean optimizer variant.
+            opt_cfg = dataclasses.replace(opt_cfg, moment_dtype="bfloat16")
+        opt_shape = jax.eval_shape(lambda: adamw_init(params_shape, opt_cfg))
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        osh = sh.to_named(ospecs, mesh)
+        bsh = sh.to_named(sh.batch_specs(specs, mesh), mesh)
+        fn = make_train_step(cfg, opt_cfg)
+        return StepBundle(
+            fn=fn,
+            args_shape=(params_shape, opt_shape, specs),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        bspecs = sh.batch_specs(specs, mesh)
+        if policy.seq_shard_prefill:
+            # Sequence parallelism on inputs: activations enter sharded
+            # (B over dp, S over model); GSPMD gathers K/V inside attention.
+            from jax.sharding import PartitionSpec as _P
+            dp = sh.dp_axes(mesh)
+            dp = dp if len(dp) > 1 else dp[0]
+            for key_ in ("tokens",):
+                if key_ in bspecs:
+                    bspecs[key_] = _P(dp, "model")
+        bsh = sh.to_named(sh.legalize(specs, bspecs, mesh), mesh)
+        fn = make_prefill_step(cfg)
+        out = NamedSharding(mesh, sh.logits_spec(mesh, shape.global_batch,
+                                                 cfg.vocab_size))
+        return StepBundle(fn=fn, args_shape=(params_shape, specs),
+                          in_shardings=(psh, bsh), out_shardings=out)
+
+    # decode
+    cache_shape = specs["cache"]
+    cspecs = sh.legalize(cache_shape,
+                         sh.cache_specs(cache_shape, mesh,
+                                        shape.global_batch), mesh)
+    csh = sh.to_named(cspecs, mesh)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    b_ok = shape.global_batch % dp_size == 0 and shape.global_batch >= dp_size
+    tok_spec = P(dp if len(dp) > 1 else dp[0], None) if b_ok else P(None, None)
+    tsh = NamedSharding(mesh, tok_spec)
+    lsh = NamedSharding(mesh, P())
+    fn = make_decode_step(cfg)
+    logits_sh = NamedSharding(
+        mesh, sh.logits_spec(mesh, shape.global_batch, cfg.vocab_size))
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    return StepBundle(
+        fn=fn,
+        args_shape=(params_shape, cache_shape, specs["token"], length),
+        in_shardings=(psh, csh, tsh, lsh),
+        out_shardings=(logits_sh, csh),
+        donate_argnums=(1,))
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeCell | str, mesh: Mesh,
+               policy: sh.ShardingPolicy = sh.ShardingPolicy()):
+    """jit + lower one cell (no compile). Returns (lowered, bundle)."""
+    bundle = make_step_bundle(cfg, shape, mesh, policy)
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*bundle.args_shape)
+    return lowered, bundle

@@ -1,0 +1,293 @@
+"""Attention layers: GQA/MQA with RoPE, qk-norm, bias; DeepSeek MLA.
+
+Full-sequence attention uses a chunked online-softmax formulation (flash
+attention in pure jnp — lax.scan over KV blocks with running max/denominator)
+so the S×S score matrix is never materialized. This is both the memory-safe
+default for 32k prefill on TPU and the reference implementation mirrored by
+the Pallas kernel in `repro.kernels.flash_attention`.
+
+Decode uses a (B, S_max, kv, dh) cache (GQA) or a compressed latent cache
+(MLA — the point of DeepSeek's design: 576 values/token vs 2·kv·dh).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models import common
+from repro.models.common import Array, apply_mrope, apply_rope, linear, linear_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash) attention — jnp reference used by models & Pallas oracle
+# ---------------------------------------------------------------------------
+def flash_attention_jnp(q: Array, k: Array, v: Array, causal: bool,
+                        chunk: int = 1024, q_offset: int = 0) -> Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh) with H % KV == 0.
+
+    Online-softmax over KV chunks; fp32 accumulators; never builds Sq×Skv.
+    `q_offset`: absolute position of q[0] (for causal masking vs a cache).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, _ = k.shape
+    Dv = v.shape[-1]                                # may differ (MLA)
+    groups = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    # Fold GQA: (B, KV, groups, Sq, Dh)
+    qg = q.reshape(B, Sq, KV, groups, Dh).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)                    # (B, KV, Skv, Dh)
+    vg = v.transpose(0, 2, 1, 3)
+    nchunks = (Skv + chunk - 1) // chunk
+    pad = nchunks * chunk - Skv
+    if pad:
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kg = kg.reshape(B, KV, nchunks, chunk, Dh)
+    vg = vg.reshape(B, KV, nchunks, chunk, Dv)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, idx = inputs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] > q_pos[:, None] if causal else None
+        pad_mask = kv_pos >= Skv
+        dead = pad_mask[None, :] if mask is None else (mask | pad_mask[None, :])
+        s = jnp.where(dead[None, None, None], NEG_INF, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, groups, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, groups, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, groups, Sq, Dv), jnp.float32)
+    idxs = jnp.arange(nchunks)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kg.transpose(2, 0, 1, 3, 4), vg.transpose(2, 0, 1, 3, 4), idxs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     length: Array | int) -> Array:
+    """Single-step decode: q (B, 1, H, Dh), caches (B, S, KV, Dh).
+
+    Attends over cache[:length]. Returns (B, 1, H, Dh)."""
+    B, _, H, Dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, KV, groups, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    s = jnp.where(pos[None, None, None] >= length, NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    p = {"wq": linear_init(ks[0], d, H * Dh, dtype, bias=cfg.qkv_bias),
+         "wk": linear_init(ks[1], d, KV * Dh, dtype, bias=cfg.qkv_bias),
+         "wv": linear_init(ks[2], d, KV * Dh, dtype, bias=cfg.qkv_bias),
+         "wo": linear_init(ks[3], H * Dh, d, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(Dh, dtype)
+        p["k_norm"] = common.rmsnorm_init(Dh, dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: Array, cfg: ArchConfig, positions: Array,
+                 mrope_positions: Array | None = None,
+                 use_rope: bool = True):
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    q = linear(p["wq"], x).reshape(B, S, H, Dh)
+    k = linear(p["wk"], x).reshape(B, S, KV, Dh)
+    v = linear(p["wv"], x).reshape(B, S, KV, Dh)
+    if cfg.qk_norm:
+        q = common.rmsnorm(p["q_norm"], q)
+        k = common.rmsnorm(p["k_norm"], k)
+    if not use_rope:
+        # Whisper-style absolute-position models: no rotary.
+        return q, k, v
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(p: dict, x: Array, cfg: ArchConfig, positions: Array,
+               causal: bool = True, mrope_positions: Array | None = None,
+               use_rope: bool = True) -> Array:
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_positions, use_rope)
+    out = flash_attention_jnp(q, k, v, causal=causal)
+    B, S = x.shape[:2]
+    return linear(p["wo"], out.reshape(B, S, cfg.num_heads * cfg.dh))
+
+
+def gqa_prefill_cache(p: dict, x: Array, cfg: ArchConfig, positions: Array,
+                      ) -> tuple[Array, dict]:
+    """Prefill: returns (out, {k, v}) so serving can reuse the projections."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention_jnp(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    return linear(p["wo"], out.reshape(B, S, cfg.num_heads * cfg.dh)), \
+        {"k": k, "v": v}
+
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8 over Dh. x: (..., Dh)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def gqa_decode(p: dict, x: Array, cfg: ArchConfig, cache: dict,
+               length: Array) -> tuple[Array, dict]:
+    """x: (B, 1, d). cache: {k, v} (B, S_max, KV, Dh) — or the int8 variant
+    {k_q, k_s, v_q, v_s} when cfg.kv_quant (HBM reads halve; the decode
+    cells are KV-read bound at batch 128). `length` tokens are already
+    cached; the new token is written at index `length`."""
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, pos)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(c, u, length,
+                                                               axis=1)
+        new_cache = {"k_q": upd(cache["k_q"], kq),
+                     "k_s": upd(cache["k_s"], ks),
+                     "v_q": upd(cache["v_q"], vq),
+                     "v_s": upd(cache["v_s"], vs)}
+        k_cache = dequantize_kv(new_cache["k_q"], new_cache["k_s"], x.dtype)
+        v_cache = dequantize_kv(new_cache["v_q"], new_cache["v_s"], x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, length,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, length,
+                                                      axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = decode_attention(q, k_cache, v_cache, length + 1)
+    y = linear(p["wo"], out.reshape(B, 1, cfg.num_heads * cfg.dh))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V3 Multi-head Latent Attention (MLA)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": linear_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": common.rmsnorm_init(m.q_lora_rank, dtype),
+        "wuq": linear_init(ks[1], m.q_lora_rank, H * qk_head, dtype),
+        "wdkv": linear_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": common.rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkr": linear_init(ks[3], d, m.qk_rope_head_dim, dtype),
+        "wuk": linear_init(ks[4], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+        "wuv": linear_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": linear_init(ks[6], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_qkr(p: dict, x: Array, cfg: ArchConfig, positions: Array):
+    """Query heads + rope-key + latent; shared by train and serve paths."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = linear(p["wuq"], common.rmsnorm(p["q_norm"], linear(p["wdq"], x)))
+    q = q.reshape(B, S, H, qk_head)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = common.rmsnorm(p["kv_norm"], linear(p["wdkv"], x))   # (B,S,r_kv)
+    k_rope = apply_rope(linear(p["wkr"], x), positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attend(p: dict, x: Array, cfg: ArchConfig, positions: Array,
+               causal: bool = True) -> Array:
+    """Training/prefill path: expand latents to per-head K/V, flash-attend."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(p, x, cfg, positions)
+    k_nope = linear(p["wuk"], c_kv).reshape(B, S, H, m.qk_nope_head_dim)
+    v = linear(p["wuv"], c_kv).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    out = flash_attention_jnp(q, k, v, causal=causal)
+    return linear(p["wo"], out.reshape(B, S, H * m.v_head_dim))
+
+
+def mla_decode(p: dict, x: Array, cfg: ArchConfig, cache: dict,
+               length: Array) -> tuple[Array, dict]:
+    """Absorbed decode over the latent cache {c_kv (B,S,r), k_rope (B,S,dr)}.
+
+    Scores = q_nope·W_uk·c_kv + q_rope·k_rope — W_uk is absorbed into the
+    query so the cache stays compressed (DeepSeek-V2/V3 inference trick).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    pos = jnp.full((B, 1), length, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkr(p, x, cfg, pos)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new, length, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new, length, axis=1)
+    # Absorb W_uk: q_lat (B,H,r) = q_nope (B,1,H,dn) · W_uk (r, H·dn)
+    wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk.astype(x.dtype))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], kr_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    idx = jnp.arange(c_cache.shape[1])
+    s = jnp.where(idx[None, None] >= length + 1, NEG_INF, s)
+    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn, c_cache,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # Absorb W_uv: out head h = ctx·W_uv_h
+    wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wuv.astype(x.dtype))
+    y = linear(p["wo"], out.reshape(B, 1, H * m.v_head_dim))
+    return y, {"c_kv": c_cache, "k_rope": kr_cache}

@@ -1,0 +1,142 @@
+"""Shared model primitives: norms, rotary embeddings, FFNs, embeddings.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pure function `f(params, x, ...)`. Initializers take explicit PRNG keys so
+`jax.eval_shape` can trace them without allocation (the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (+ M-RoPE for Qwen2-VL)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e6) -> Array:
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if x.ndim == angles.ndim + 1:                       # has head axis
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, sections: Sequence[int],
+                theta: float = 1e6) -> Array:
+    """Multimodal RoPE (Qwen2-VL): positions (3, ..., S) for (t, h, w);
+    `sections` splits the rotary half-dim across the three components."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    # Build per-frequency positions by section.
+    sec = jnp.asarray(
+        sum(([i] * s for i, s in enumerate(sections)), []), jnp.int32)
+    pos_sel = jnp.take(positions, sec, axis=0)          # (Dh/2 picks of pos)
+    # pos_sel: (Dh/2, ..., S) -> (..., S, Dh/2)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)
+    angles = pos_sel.astype(jnp.float32) * freqs
+    if x.ndim == angles.ndim + 1:
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / SwiGLU FFN
+# ---------------------------------------------------------------------------
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), dtype) / math.sqrt(d_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": linear_init(k1, d, d_ff, dtype),
+            "w_up": linear_init(k2, d, d_ff, dtype),
+            "w_down": linear_init(k3, d_ff, d, dtype)}
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    g = jax.nn.silu(linear(p["w_gate"], x))
+    return linear(p["w_down"], g * linear(p["w_up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: dict, tokens: Array, dtype) -> Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def lm_head(p: dict, x: Array) -> Array:
+    """Logits in fp32 for a stable softmax/loss."""
+    return (x @ p["table"].astype(x.dtype).T).astype(jnp.float32)
+
+
+def cross_entropy(logits: Array, labels: Array, ignore_id: int = -1) -> Array:
+    """Mean token cross-entropy; fp32 logits (B, S, V); labels (B, S)."""
+    mask = (labels != ignore_id).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (fp32)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)

@@ -1,0 +1,203 @@
+"""Whisper-style encoder–decoder backbone (audio frontend stubbed).
+
+The conv frontend is a stub per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, 1500, d). Encoder = non-causal self-attn
+stack; decoder = causal self-attn + cross-attn. Whisper uses absolute
+sinusoidal (encoder) / learned (decoder) positions; we use sinusoidal for
+both (backbone-equivalent, no RoPE — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common
+from repro.models.common import Array, dtype_of, linear, linear_init
+
+
+def _xattn_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    return {"wq": linear_init(ks[0], d, H * Dh, dtype),
+            "wk": linear_init(ks[1], d, KV * Dh, dtype),
+            "wv": linear_init(ks[2], d, KV * Dh, dtype),
+            "wo": linear_init(ks[3], H * Dh, d, dtype)}
+
+
+def _enc_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": common.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.gqa_init(ks[0], cfg, dtype),
+            "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+            "ffn": common.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"ln1": common.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.gqa_init(ks[0], cfg, dtype),
+            "lnx": common.rmsnorm_init(cfg.d_model, dtype),
+            "xattn": _xattn_init(ks[1], cfg, dtype),
+            "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+            "ffn": common.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    pdtype = dtype_of(cfg.param_dtype)
+    n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+    keys = jax.random.split(key, n_enc + n_dec + 2)
+    enc = [_enc_layer_init(keys[i], cfg, pdtype) for i in range(n_enc)]
+    dec = [_dec_layer_init(keys[n_enc + i], cfg, pdtype)
+           for i in range(n_dec)]
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    return {
+        "enc_blocks": stack(enc),
+        "enc_ln": common.rmsnorm_init(cfg.d_model, pdtype),
+        "embed": common.embedding_init(keys[-1], cfg.vocab_size, cfg.d_model,
+                                       pdtype),
+        "dec_blocks": stack(dec),
+        "dec_ln": common.rmsnorm_init(cfg.d_model, pdtype),
+    }
+
+
+def _cross_attend(p: dict, x: Array, enc_kv: tuple[Array, Array],
+                  cfg: ArchConfig) -> Array:
+    B, S = x.shape[:2]
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    q = linear(p["wq"], x).reshape(B, S, H, Dh)
+    k, v = enc_kv
+    out = attn.flash_attention_jnp(q, k, v, causal=False)
+    return linear(p["wo"], out.reshape(B, S, H * Dh))
+
+
+def encode(params: dict, cfg: ArchConfig, frames: Array) -> Array:
+    """frames: (B, S_enc, d) precomputed frame embeddings (conv stub)."""
+    adtype = dtype_of(cfg.dtype)
+    x = frames.astype(adtype)
+    x = x + common.sinusoidal_positions(x.shape[1],
+                                        cfg.d_model).astype(adtype)[None]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = common.rmsnorm(p["ln1"], x)
+        x = x + attn.gqa_attend(p["attn"], h, cfg, positions, causal=False,
+                                use_rope=False)
+        h = common.rmsnorm(p["ln2"], x)
+        return x + common.swiglu(p["ffn"], h), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return common.rmsnorm(params["enc_ln"], x)
+
+
+def _enc_kv(p: dict, enc_out: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    B, S = enc_out.shape[:2]
+    KV, Dh = cfg.num_kv_heads, cfg.dh
+    k = linear(p["wk"], enc_out).reshape(B, S, KV, Dh)
+    v = linear(p["wv"], enc_out).reshape(B, S, KV, Dh)
+    return k, v
+
+
+def decode(params: dict, cfg: ArchConfig, tokens: Array, enc_out: Array,
+           ) -> Array:
+    """Teacher-forced decoder -> fp32 logits (B, S_dec, V)."""
+    adtype = dtype_of(cfg.dtype)
+    x = common.embed(params["embed"], tokens, adtype)
+    x = x + common.sinusoidal_positions(x.shape[1],
+                                        cfg.d_model).astype(adtype)[None]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = common.rmsnorm(p["ln1"], x)
+        x = x + attn.gqa_attend(p["attn"], h, cfg, positions, causal=True,
+                                use_rope=False)
+        h = common.rmsnorm(p["lnx"], x)
+        x = x + _cross_attend(p["xattn"], h, _enc_kv(p["xattn"], enc_out, cfg),
+                              cfg)
+        h = common.rmsnorm(p["ln2"], x)
+        return x + common.swiglu(p["ffn"], h), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = common.rmsnorm(params["dec_ln"], x)
+    return common.lm_head(params["embed"], x)
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    enc_out = encode(params, cfg, batch["frames"])
+    return decode(params, cfg, batch["tokens"], enc_out)
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    logits = forward(params, cfg, batch)
+    return common.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    adtype = dtype_of(cfg.dtype)
+    KV, Dh = cfg.num_kv_heads, cfg.dh
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, Dh), adtype),
+        "v": jnp.zeros((L, batch, max_len, KV, Dh), adtype),
+        "enc_k": jnp.zeros((L, batch, cfg.encoder_seq, KV, Dh), adtype),
+        "enc_v": jnp.zeros((L, batch, cfg.encoder_seq, KV, Dh), adtype),
+    }
+
+
+def start_cache(params: dict, cfg: ArchConfig, enc_out: Array, batch: int,
+                max_len: int) -> dict:
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    cache = init_cache(cfg, batch, max_len)
+
+    def kv_for_layer(p):
+        return _enc_kv(p["xattn"], enc_out, cfg)
+
+    ks, vs = jax.vmap(kv_for_layer)(params["dec_blocks"])
+    return {**cache, "enc_k": ks, "enc_v": vs}
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, token: Array,
+                length) -> tuple[Array, dict]:
+    adtype = dtype_of(cfg.dtype)
+    B = token.shape[0]
+    x = common.embed(params["embed"], token, adtype)
+    # position length for the new token
+    pos_table = common.sinusoidal_positions(cache["k"].shape[2],
+                                            cfg.d_model).astype(adtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_table, length, 1, axis=0)[None]
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
+
+    def body(x, inp):
+        p, kc, vc, ek, ev = inp
+        h = common.rmsnorm(p["ln1"], x)
+        q = linear(p["attn"]["wq"], h).reshape(B, 1, H, Dh)
+        k = linear(p["attn"]["wk"], h).reshape(B, 1, KV, Dh)
+        v = linear(p["attn"]["wv"], h).reshape(B, 1, KV, Dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, length, axis=1)
+        o = attn.decode_attention(q, kc, vc, length + 1)
+        x = x + linear(p["attn"]["wo"], o.reshape(B, 1, H * Dh))
+        h = common.rmsnorm(p["lnx"], x)
+        q = linear(p["xattn"]["wq"], h).reshape(B, 1, H, Dh)
+        o = attn.decode_attention(q, ek, ev, ek.shape[1])
+        x = x + linear(p["xattn"]["wo"], o.reshape(B, 1, H * Dh))
+        h = common.rmsnorm(p["ln2"], x)
+        x = x + common.swiglu(p["ffn"], h)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["enc_k"], cache["enc_v"]))
+    x = common.rmsnorm(params["dec_ln"], x)
+    logits = common.lm_head(params["embed"], x)
+    return logits, {**cache, "k": ks, "v": vs}

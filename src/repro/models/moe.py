@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with top-k routing and two dispatch strategies.
+
+Tokens are processed in fixed-size *groups* (GShard's G axis): capacity and
+dispatch tensors are per-group, so the one-hot dispatch intermediate is
+O(tokens · group_size · k · cf) — independent of E — instead of the
+intractable O(tokens · E · C_global).
+
+  * "einsum"  — GShard/Mesh-TF one-hot dispatch. SPMD-robust (pure einsums;
+    GSPMD shards them with an all-to-all on the expert axis) but pays
+    O(tokens·E·C_g·d) matmul FLOPs for dispatch+combine — the classic GShard
+    overhead. This is the roofline baseline.
+
+  * "scatter" — scatter/gather dispatch: per-expert queue positions from an
+    integer cumsum (no MXU FLOPs), tokens moved by scatter-add/gather.
+    Removes the dispatch matmuls entirely — the §Perf hillclimb change.
+
+Experts are stacked on a leading E axis so expert parallelism is a single
+PartitionSpec("model", ...) on the stacked weights.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.common import Array, linear, linear_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_expert_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": linear_init(ks[0], d, e.num_experts, dtype),
+        "w_gate": jax.random.normal(ks[1], (e.num_experts, d, f), dtype)
+        / math.sqrt(d),
+        "w_up": jax.random.normal(ks[2], (e.num_experts, d, f), dtype)
+        / math.sqrt(d),
+        "w_down": jax.random.normal(ks[3], (e.num_experts, f, d), dtype)
+        / math.sqrt(f),
+    }
+    if e.num_shared:
+        p["shared"] = swiglu_init(ks[4], d, e.num_shared * f, dtype)
+    return p
+
+
+def _router(p: dict, x: Array, e: MoEConfig):
+    """Top-k routing. x: (..., d). Returns (weights, ids): (..., k)."""
+    logits = (x.astype(jnp.float32)
+              @ p["router"]["w"].astype(jnp.float32))        # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, e.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9)
+    return weights, ids
+
+
+def _group(x: Array, group_size: int) -> tuple[Array, int, int]:
+    """(B, S, d) -> (G, gs, d) with gs the largest divisor of the token
+    count ≤ group_size (assigned cells divide exactly; odd smoke shapes — or
+    MTP's S−1 slice — fall back to a smaller group)."""
+    B, S, d = x.shape
+    n = B * S
+    gs = min(group_size, n)
+    while n % gs:
+        gs -= 1
+    return x.reshape(n // gs, gs, d), n // gs, gs
+
+
+def _capacity(tokens_per_group: int, e: MoEConfig) -> int:
+    c = int(math.ceil(tokens_per_group * e.top_k / e.num_experts
+                      * e.capacity_factor))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+GROUP_SIZE = 256
+
+
+def moe_apply_einsum(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """GShard one-hot dispatch. x: (B, S, d) -> (B, S, d)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    xg, G, gs = _group(x, GROUP_SIZE)
+    C = _capacity(gs, e)
+    weights, ids = _router(p, xg, e)                         # (G,gs,k)
+    onehot = jax.nn.one_hot(ids, e.num_experts, dtype=jnp.float32)  # (G,gs,k,E)
+    # Queue position of each (token, slot) in its expert, within the group.
+    flat = onehot.reshape(G, gs * e.top_k, e.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (G,gs*k,E)
+    pos = pos.reshape(G, gs, e.top_k, e.num_experts)
+    keep = (pos < C).astype(jnp.float32) * onehot            # (G,gs,k,E)
+    pos_c = jax.nn.one_hot((pos * onehot).sum(-1).astype(jnp.int32), C,
+                           dtype=jnp.float32)                # (G,gs,k,C)
+    # combine[g,s,e,c] = Σ_k w_k · keep · onehot(position)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", keep, pos_c,
+                         weights.astype(jnp.float32))
+    dispatch = (combine > 0).astype(x.dtype)                 # (G,gs,E,C)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)          # (E,G,C,d)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe,
+                               p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    y = y.reshape(B, S, d)
+    if e.num_shared:
+        y = y + swiglu(p["shared"], x)
+    return y
+
+
+def moe_apply_scatter(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Scatter/gather dispatch — no dispatch matmuls (hillclimbed path)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    xg, G, gs = _group(x, GROUP_SIZE)
+    C = _capacity(gs, e)
+    weights, ids = _router(p, xg, e)                         # (G,gs,k)
+    onehot = jax.nn.one_hot(ids, e.num_experts, dtype=jnp.int32)
+    flat = onehot.reshape(G, gs * e.top_k, e.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = (pos.reshape(G, gs, e.top_k, e.num_experts) * onehot).sum(-1)
+    keep = pos < C                                           # (G,gs,k)
+    eid = ids.reshape(G, gs * e.top_k)
+    pidx = jnp.where(keep, pos, C).reshape(G, gs * e.top_k)
+
+    def scatter_group(xi, ei, pi):
+        buf = jnp.zeros((e.num_experts, C + 1, d), x.dtype)
+        src = jnp.repeat(xi, e.top_k, axis=0)                # (gs*k, d)
+        return buf.at[ei, pi].add(src)[:, :C]                # (E,C,d)
+
+    xe = jax.vmap(scatter_group)(xg, eid, pidx)              # (G,E,C,d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                               p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = jnp.pad(ye, ((0, 0), (0, 0), (0, 1), (0, 0)))       # drop row C
+
+    def gather_group(yi, ei, pi):
+        return yi[ei, pi]                                    # (gs*k, d)
+
+    out = jax.vmap(gather_group)(ye, eid, pidx)              # (G,gs*k,d)
+    out = out.reshape(G, gs, e.top_k, d)
+    y = (out * weights[..., None].astype(x.dtype)).sum(axis=2)
+    y = y.reshape(B, S, d)
+    if e.num_shared:
+        y = y + swiglu(p["shared"], x)
+    return y
+
+
+def moe_apply(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    if cfg.moe.dispatch == "scatter":
+        return moe_apply_scatter(p, x, cfg)
+    return moe_apply_einsum(p, x, cfg)

@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) blocks, TPU-idiomatic chunked form.
+
+GPU Mamba implementations rely on a fused sequential selective-scan kernel.
+That ports poorly to TPU; the SSD formulation (Dao & Gu, 2024) re-expresses
+the same recurrence as block matrices: quadratic attention-like matmuls
+within chunks (MXU-friendly) plus a tiny inter-chunk state recurrence. We
+implement exactly that:
+
+  y = SSD(x)   with  h_t = exp(dt·A)·h_{t-1} + dt·B_t x_t,   y_t = C_t h_t
+
+  chunked:  Y = (L ∘ C Bᵀ) X   (intra-chunk, per-chunk matmuls)
+           + C_c · states_{c-1} (inter-chunk, scanned)
+
+Decode is the O(1) recurrence on the (H, P, N) state — the reason mamba2
+runs the long_500k cell that full-attention models cannot.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import Array, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+def ssm_dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.d_state
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    G = s.n_groups
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * G * N + H   # z, x, B, C, dt
+    conv_dim = d_in + 2 * G * N
+    return {
+        "in_proj": linear_init(ks[0], d, d_proj, dtype),
+        "conv_w": jax.random.normal(ks[1], (s.conv_kernel, conv_dim), dtype)
+        / math.sqrt(s.conv_kernel),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": linear_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(proj: Array, cfg: ArchConfig):
+    d_in, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm.n_groups
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over sequence. xbc: (B, S, Cdim)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    Σ_{j<k<=i} a[..., k] for i >= j, −inf above the diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, h0: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    Args:
+      xh: (B, S, H, P) inputs per head.
+      dt: (B, S, H) positive step sizes.
+      A:  (H,) negative decay rates.
+      Bm: (B, S, G, N) input maps;  Cm: (B, S, G, N) output maps.
+      chunk: chunk length Q (S % Q == 0 assumed; callers pad).
+      h0: optional initial state (B, H, P, N).
+
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = chunk
+    nc = S // Q
+    rep = H // G
+    # Broadcast groups to heads.
+    Bh = jnp.repeat(Bm, rep, axis=2)          # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    # Reshape into chunks.
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+    dA = dtc * A[None, None, None, :]          # (B,nc,Q,H) negative
+    dA = dA.astype(jnp.float32)
+    cum = jnp.cumsum(dA, axis=2)               # within-chunk cumulative
+    # 1) intra-chunk (diagonal blocks): Y = (L ∘ C Bᵀ) · (dt·X)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * Lmat
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(xh.dtype),
+                        xdt, preferred_element_type=jnp.float32)
+    # 2) chunk states: S_c = Σ_q exp(cum_last − cum_q)·B_q ⊗ (dt·x)_q
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_out.astype(Bc.dtype),
+                        xdt, preferred_element_type=jnp.float32)
+    # 3) inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    h_init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+    # 4) inter-chunk output: y_off = exp(cum)·C · h_prev
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc, h_prev.astype(Cc.dtype),
+                       jnp.exp(cum).astype(Cc.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P).astype(xh.dtype)
+    return y, h_last
+
+
+def ssm_apply(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Full-sequence Mamba-2 block. x: (B, S, d) -> (B, S, d)."""
+    s = cfg.ssm
+    d_in, H, P, N = ssm_dims(cfg)
+    G = s.n_groups
+    B_, S, _ = x.shape
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])       # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,) < 0
+    xh = xs.reshape(B_, S, H, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    Q = min(s.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, Q)
+    y = y[:, :S]
+    y = y + xh[:, :S] * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, d_in)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+def ssm_decode(p: dict, x: Array, cfg: ArchConfig, state: dict,
+               ) -> tuple[Array, dict]:
+    """O(1) decode step. x: (B, 1, d); state: {h: (B,H,P,N),
+    conv: (B, K-1, conv_dim)} (conv tail for the causal conv)."""
+    s = cfg.ssm
+    d_in, H, P, N = ssm_dims(cfg)
+    G = s.n_groups
+    B_ = x.shape[0]
+    proj = linear(p["in_proj"], x)                            # (B,1,·)
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)   # (B,K,·)
+    w = p["conv_w"].astype(x.dtype)
+    out = (conv_in * w[None]).sum(axis=1, keepdims=True)
+    xbc = jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B_, H, P)
+    Bm = jnp.repeat(Bm.reshape(B_, G, N), H // G, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B_, G, N), H // G, axis=1)
+    dA = jnp.exp(dt[:, 0, :] * A[None, :])                    # (B,H)
+    h = state["h"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[:, 0, :, None], Bm)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    new_state = {"h": h, "conv": conv_in[:, 1:]}
+    return linear(p["out_proj"], y), new_state
+
+
+def ssm_init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {"h": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype)}

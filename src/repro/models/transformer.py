@@ -1,0 +1,295 @@
+"""Model assembly: dense / MoE / SSM / hybrid / VLM decoder LMs.
+
+Layers are stacked on a leading axis and iterated with `jax.lax.scan`, so the
+lowered HLO is O(1) in depth (critical for compiling 61–80-layer models with
+512 host devices). Heterogeneous stacks (Jamba) scan over *block groups* —
+the repeating [mamba×7 + attn×1] pattern — unrolling within the group.
+
+Public entry points:
+  init_params(cfg, key)                      -> param pytree
+  forward(params, cfg, batch)                -> fp32 logits
+  loss_fn(params, cfg, batch)                -> scalar loss
+  init_cache(cfg, batch, max_len)            -> decode cache pytree
+  prefill(params, cfg, tokens)               -> (logits, cache)
+  decode_step(params, cfg, cache, token, t)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common, moe, ssm
+from repro.models.common import Array, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# Layer classification
+# ---------------------------------------------------------------------------
+def layer_kind(cfg: ArchConfig, layer: int) -> tuple[str, str]:
+    """-> (mixer, ffn) for a layer index: mixer ∈ {attn, mla, ssm},
+    ffn ∈ {dense, moe, none}."""
+    if cfg.family == "ssm":
+        return "ssm", "none"
+    if cfg.family == "hybrid":
+        mixer = ("attn" if cfg.attn_layer_period and
+                 layer % cfg.attn_layer_period == cfg.attn_layer_offset
+                 else "ssm")
+        ffn = ("moe" if cfg.moe and layer % cfg.moe.layer_period
+               == cfg.moe.layer_period - 1 else "dense")
+        return mixer, ffn
+    mixer = "mla" if cfg.mla is not None else "attn"
+    ffn = "moe" if cfg.moe and layer % cfg.moe.layer_period == 0 else "dense"
+    return mixer, ffn
+
+
+def block_group_size(cfg: ArchConfig) -> int:
+    """Layers per homogeneous scan step."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period or 1
+        if cfg.moe and cfg.moe.layer_period > 1:
+            import math
+            period = math.lcm(period, cfg.moe.layer_period)
+        return period
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (pure; trace with eval_shape for the dry-run)
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ArchConfig, layer: int, dtype) -> dict:
+    mixer, ffn = layer_kind(cfg, layer)
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": common.rmsnorm_init(cfg.d_model, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = ssm.ssm_init(ks[0], cfg, dtype)
+    if ffn != "none":
+        p["ln2"] = common.rmsnorm_init(cfg.d_model, dtype)
+        if ffn == "moe":
+            p["moe"] = moe.moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = common.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    pdtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    group = block_group_size(cfg)
+    n_groups = cfg.num_layers // group
+    groups = []
+    for g in range(n_groups):
+        sub = {f"l{j}": _layer_init(keys[g * group + j], cfg, g * group + j,
+                                    pdtype)
+               for j in range(group)}
+        groups.append(sub)
+    params: dict[str, Any] = {
+        "embed": common.embedding_init(keys[-1], cfg.vocab_size, cfg.d_model,
+                                       pdtype),
+        "blocks": _stack(groups),
+        "ln_f": common.rmsnorm_init(cfg.d_model, pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.embedding_init(
+            keys[-2], cfg.vocab_size, cfg.d_model, pdtype)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": common.linear_init(keys[-3], 2 * cfg.d_model, cfg.d_model,
+                                       pdtype),
+            "ln_h": common.rmsnorm_init(cfg.d_model, pdtype),
+            "ln_e": common.rmsnorm_init(cfg.d_model, pdtype),
+            "layer": _layer_init(keys[-3], cfg, cfg.num_layers - 1, pdtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill-without-cache)
+# ---------------------------------------------------------------------------
+def _apply_layer(p: dict, x: Array, cfg: ArchConfig, layer: int,
+                 positions: Array, mrope_positions: Array | None) -> Array:
+    mixer, ffn = layer_kind(cfg, layer)
+    h = common.rmsnorm(p["ln1"], x)
+    if mixer == "attn":
+        h = attn.gqa_attend(p["attn"], h, cfg, positions,
+                            mrope_positions=mrope_positions)
+    elif mixer == "mla":
+        h = attn.mla_attend(p["attn"], h, cfg, positions)
+    else:
+        h = ssm.ssm_apply(p["ssm"], h, cfg)
+    x = x + h
+    if ffn != "none":
+        h = common.rmsnorm(p["ln2"], x)
+        h = (moe.moe_apply(p["moe"], h, cfg) if ffn == "moe"
+             else common.swiglu(p["ffn"], h))
+        x = x + h
+    return x
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """batch: {tokens (B,S)[, vision_embeds (B,Sv,d), mrope_positions
+    (3,B,S)]} -> fp32 logits (B, S_total, V)."""
+    adtype = dtype_of(cfg.dtype)
+    x = common.embed(params["embed"], batch["tokens"], adtype)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["vision_embeds"].astype(adtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mrope_positions = batch.get("mrope_positions")
+    group = block_group_size(cfg)
+
+    def body(x, gp):
+        for j in range(group):
+            x = _apply_layer(gp[f"l{j}"], x, cfg, j, positions,
+                             mrope_positions)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    x = common.rmsnorm(params["ln_f"], x)
+    table = params.get("unembed", params["embed"])
+    return common.lm_head(table, x)
+
+
+def _hidden_states(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """Forward up to (and including) the final norm — used by MTP."""
+    adtype = dtype_of(cfg.dtype)
+    x = common.embed(params["embed"], batch["tokens"], adtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    group = block_group_size(cfg)
+
+    def body(x, gp):
+        for j in range(group):
+            x = _apply_layer(gp[f"l{j}"], x, cfg, j, positions, None)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    return common.rmsnorm(params["ln_f"], x)
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """Next-token CE; adds the DeepSeek MTP auxiliary loss when configured."""
+    if cfg.mtp_depth and cfg.family != "vlm":
+        h = _hidden_states(params, cfg, batch)
+        table = params.get("unembed", params["embed"])
+        logits = common.lm_head(table, h)
+        loss = common.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        # MTP: predict t+2 from [norm(h_t) ; norm(emb(t+1))] (DeepSeek-V3).
+        adtype = dtype_of(cfg.dtype)
+        emb_next = common.embed(params["embed"], batch["tokens"], adtype)
+        m = params["mtp"]
+        cat = jnp.concatenate([common.rmsnorm(m["ln_h"], h[:, :-1]),
+                               common.rmsnorm(m["ln_e"], emb_next[:, 1:])],
+                              axis=-1)
+        x2 = common.linear(m["proj"], cat)
+        B, S2 = x2.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S2)[None], (B, S2))
+        x2 = _apply_layer(m["layer"], x2, cfg, 0, pos, None)
+        logits2 = common.lm_head(table, x2)
+        mtp_loss = common.cross_entropy(logits2[:, :-1],
+                                        batch["labels"][:, 2:])
+        return loss + 0.3 * mtp_loss
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # Vision positions carry no next-token loss; score text tail only.
+        sv = batch["vision_embeds"].shape[1]
+        logits = logits[:, sv:]
+    return common.cross_entropy(logits[:, :-1], labels[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _layer_cache(cfg: ArchConfig, layer: int, batch: int, max_len: int,
+                 adtype) -> dict:
+    mixer, _ = layer_kind(cfg, layer)
+    if mixer == "attn":
+        KV, Dh = cfg.num_kv_heads, cfg.dh
+        if cfg.kv_quant:
+            return {"k_q": jnp.zeros((batch, max_len, KV, Dh), jnp.int8),
+                    "k_s": jnp.zeros((batch, max_len, KV, 1), jnp.float32),
+                    "v_q": jnp.zeros((batch, max_len, KV, Dh), jnp.int8),
+                    "v_s": jnp.zeros((batch, max_len, KV, 1), jnp.float32)}
+        return {"k": jnp.zeros((batch, max_len, KV, Dh), adtype),
+                "v": jnp.zeros((batch, max_len, KV, Dh), adtype)}
+    if mixer == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), adtype),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim),
+                                    adtype)}
+    return ssm.ssm_init_state(cfg, batch, adtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    adtype = dtype_of(cfg.dtype)
+    group = block_group_size(cfg)
+    n_groups = cfg.num_layers // group
+    per_group = [{f"l{j}": _layer_cache(cfg, g * group + j, batch, max_len,
+                                        adtype)
+                  for j in range(group)} for g in range(n_groups)]
+    return _stack(per_group)
+
+
+def _decode_layer(p: dict, x: Array, cfg: ArchConfig, layer: int,
+                  cache: dict, length) -> tuple[Array, dict]:
+    mixer, ffn = layer_kind(cfg, layer)
+    h = common.rmsnorm(p["ln1"], x)
+    if mixer == "attn":
+        h, new_cache = attn.gqa_decode(p["attn"], h, cfg, cache, length)
+    elif mixer == "mla":
+        h, new_cache = attn.mla_decode(p["attn"], h, cfg, cache, length)
+    else:
+        h, new_cache = ssm.ssm_decode(p["ssm"], h, cfg, cache)
+    x = x + h
+    if ffn != "none":
+        h = common.rmsnorm(p["ln2"], x)
+        h = (moe.moe_apply(p["moe"], h, cfg) if ffn == "moe"
+             else common.swiglu(p["ffn"], h))
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, token: Array,
+                length) -> tuple[Array, dict]:
+    """token: (B, 1) int32; `length` = tokens already cached. Returns
+    (fp32 logits (B, 1, V), updated cache)."""
+    adtype = dtype_of(cfg.dtype)
+    x = common.embed(params["embed"], token, adtype)
+    group = block_group_size(cfg)
+
+    def body(x, inp):
+        gp, gc = inp
+        new_gc = {}
+        for j in range(group):
+            x, new_gc[f"l{j}"] = _decode_layer(gp[f"l{j}"], x, cfg, j,
+                                               gc[f"l{j}"], length)
+        return x, new_gc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = common.rmsnorm(params["ln_f"], x)
+    table = params.get("unembed", params["embed"])
+    return common.lm_head(table, x), new_cache
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: Array) -> Array:
+    """Prefill logits (cacheless scoring path — serving keeps the full-cache
+    variant in repro.launch.serve; this one is what the prefill_32k dry-run
+    lowers: the compute-dominant part of serving)."""
+    return forward(params, cfg, {"tokens": tokens})

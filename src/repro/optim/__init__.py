@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, apply_updates,
+    cosine_schedule, global_norm,
+)

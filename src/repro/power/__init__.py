@@ -1,0 +1,3 @@
+from repro.power.model import (  # noqa: F401
+    ChipPower, JobPowerModel, job_power_from_roofline,
+)

@@ -1,0 +1,48 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests must see
+# a single device. Multi-device tests spawn subprocesses (see _subproc).
+
+
+@pytest.fixture(scope="session")
+def paper_fleet():
+    """Cached calibrated four-service fleet (shared across the session)."""
+    from repro.core.fleetcache import cached_paper_fleet
+    return cached_paper_fleet()
+
+
+@pytest.fixture(scope="session")
+def dr_problem(paper_fleet):
+    from repro.core.carbon import caiso_2021
+    from repro.core.policies import DRProblem
+    models = tuple(paper_fleet[n]
+                   for n in ("RTS1", "RTS2", "AITraining", "DataPipeline"))
+    return DRProblem(models=models, mci=caiso_2021(48).mci)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run `code` in a fresh python with N host devices. Returns stdout;
+    raises on nonzero exit."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{res.stdout[-3000:]}\n"
+            f"STDERR:{res.stderr[-3000:]}")
+    return res.stdout

@@ -1,0 +1,69 @@
+"""Analytic FLOPs model sanity: matches 6·N·D within the expected envelope."""
+import pytest
+
+from repro.configs import get_config, shape_by_name
+from repro.launch.analytics import cell_flops, cell_hbm_bytes, forward_flops
+
+
+def test_dense_train_flops_near_8nd():
+    """Full remat training ≈ 8·N·D for a dense LM (4 passes × 2·N·D) plus
+    attention-quadratic overhead."""
+    cfg = get_config("qwen3-32b")
+    shape = shape_by_name("train_4k")
+    got = cell_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    nd8 = 8 * cfg.param_count() * tokens
+    assert 0.9 * nd8 < got < 1.6 * nd8
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    shape = shape_by_name("train_4k")
+    got = cell_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    lower = 6 * cfg.active_param_count() * tokens
+    upper = 6 * cfg.param_count() * tokens
+    assert lower < got < upper     # active ≪ flops ≪ total (dispatch adds)
+
+
+def test_decode_linear_in_context():
+    cfg = get_config("qwen3-32b")
+    d32 = shape_by_name("decode_32k")
+    f = forward_flops(cfg, d32)
+    # per sequence: dominated by weights (2·N) + attention (S·H·Dh terms)
+    per_seq = f / d32.global_batch
+    assert per_seq > 2 * cfg.active_param_count() * 0.9
+
+
+def test_mla_decode_cache_smaller_than_gqa():
+    """DeepSeek's MLA latent cache beats an equivalent GQA cache by >10x —
+    the reason the arch exists."""
+    ds = get_config("deepseek-v3-671b")
+    qw = get_config("qwen1.5-110b")
+    shape = shape_by_name("decode_32k")
+    ds_bytes = cell_hbm_bytes(ds, shape, 256)
+    m = ds.mla
+    latent_per_tok = (m.kv_lora_rank + m.qk_rope_head_dim) * 2
+    gqa_equiv = 2 * ds.num_heads * 128 * 2
+    assert gqa_equiv / latent_per_tok > 10
+    assert ds_bytes > 0 and cell_hbm_bytes(qw, shape, 256) > 0
+
+
+def test_einsum_dispatch_costs_more_than_scatter():
+    import dataclasses
+    cfg = get_config("qwen3-moe-30b-a3b")
+    shape = shape_by_name("train_4k")
+    f_einsum = cell_flops(cfg, shape)
+    cfg_s = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="scatter"))
+    f_scatter = cell_flops(cfg_s, shape)
+    assert f_einsum > 1.1 * f_scatter   # the GShard dispatch overhead
+
+
+def test_long_context_ssm_flops_context_independent():
+    cfg = get_config("mamba2-780m")
+    f_short = forward_flops(cfg, shape_by_name("decode_32k"))
+    f_long = forward_flops(cfg, shape_by_name("long_500k"))
+    per_tok_short = f_short / 128
+    per_tok_long = f_long / 1
+    assert per_tok_long == pytest.approx(per_tok_short, rel=1e-6)

@@ -1,0 +1,54 @@
+"""Carbon signal tests (paper Fig. 1 / Fig. 11 statistics)."""
+import numpy as np
+import pytest
+
+from repro.core import carbon
+
+
+def test_caiso_trough_fraction_matches_paper():
+    sig = carbon.caiso_2021(48)
+    # Paper: "the trough can be as low as 66% of the peak in today's grid".
+    assert 0.55 <= sig.peak_to_trough() <= 0.78
+
+
+def test_projection_2050_deepens_trough():
+    today = carbon.caiso_2021(48).peak_to_trough()
+    y2050 = carbon.projection(2050, "CA").peak_to_trough()
+    assert y2050 < today
+    # Paper: trough as low as 40% of peak by 2050 (CA is solar-heavy).
+    assert y2050 <= 0.45
+
+
+def test_projection_2024_between_today_and_2050():
+    t24 = carbon.projection(2024, "CA").peak_to_trough()
+    t50 = carbon.projection(2050, "CA").peak_to_trough()
+    assert t50 < t24 < 0.9
+
+
+def test_projection_rejects_unknown_year():
+    with pytest.raises(ValueError):
+        carbon.projection(2030)
+
+
+def test_carbon_accounting_identity():
+    """CF(D) = −⟨mci, Σ_i d_i⟩ exactly (paper §V definition)."""
+    rng = np.random.default_rng(0)
+    mci = rng.uniform(200, 450, 48)
+    D = rng.normal(size=(4, 48))
+    cf = carbon.carbon_footprint_delta(mci, D)
+    manual = -(mci * D.sum(axis=0)).sum()
+    assert np.isclose(cf, manual)
+    assert np.isclose(carbon.carbon_reduction(mci, D), -cf)
+
+
+def test_curtail_at_high_mci_reduces_carbon():
+    sig = carbon.caiso_2021(48)
+    d = np.zeros(48)
+    d[np.argmax(sig.mci)] = 1.0       # curtail 1 NP at the dirtiest hour
+    assert carbon.carbon_reduction(sig.mci, d) > 0
+
+
+def test_state_profiles_differ():
+    a = carbon.projection(2050, "CA").mci
+    b = carbon.projection(2050, "NY").mci
+    assert not np.allclose(a, b)

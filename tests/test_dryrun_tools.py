@@ -1,0 +1,72 @@
+"""Dry-run tooling tests: loop-aware HLO collective parsing + roofline."""
+import pytest
+
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                 parse_collectives, roofline_terms)
+
+# Post-optimization style: operands are bare %names; result shape precedes
+# the op; while bodies are separate computations multiplied by trip count.
+HLO_SAMPLE = """
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.2 (arg: (s32[], f32[256,128])) -> (s32[], f32[256,128]) {
+  %ar = f32[256,128]{1,0} all-reduce(%x), channel_id=3, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add.1
+  %cp = f32[64]{0} collective-permute(%y), channel_id=4
+}
+
+%cond.3 (arg: (s32[], f32[256,128])) -> pred[] {
+  %c = s32[] constant(8)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.4 (p0: f32[1024,512]) -> f32[2048,512] {
+  %ag = f32[2048,512]{1,0} all-gather(%p0), channel_id=1, replica_groups=[128,2]<=[256], dimensions={0}
+  %wh = (s32[], f32[256,128]) while(%init), condition=%cond.3, body=%body.2
+}
+"""
+
+
+def test_parse_collectives_loop_aware():
+    out = parse_collectives(HLO_SAMPLE)
+    b = out["bytes_by_op"]
+    # all-gather: out 2048*512*4 bytes, ring factor (2-1)/2.
+    assert b["all-gather"] == int(2048 * 512 * 4 * 0.5)
+    # all-reduce inside the while body: trip count 8, group 16,
+    # 2*out*(15/16) each iteration.
+    ar_once = 2 * 256 * 128 * 4 * (15 / 16)
+    assert b["all-reduce"] == pytest.approx(8 * ar_once, rel=0.01)
+    # collective-permute: point-to-point, out bytes, ×8 iterations.
+    assert b["collective-permute"] == 8 * 64 * 4
+    assert out["counts"]["all-reduce"] == 8
+    assert out["total_bytes"] == sum(b.values())
+
+
+def test_parse_ignores_done_ops():
+    text = ("ENTRY %m {\n"
+            "  %d = f32[64]{0} all-gather-done(%s)\n"
+            "}\n")
+    assert parse_collectives(text)["total_bytes"] == 0
+
+
+def test_parse_start_counted_once():
+    text = ("ENTRY %m {\n"
+            "  %s = f32[64]{0} all-gather-start(%p), replica_groups=[1,2]<=[2]\n"
+            "  %d = f32[64]{0} all-gather-done(%s)\n"
+            "}\n")
+    out = parse_collectives(text)
+    assert out["counts"]["all-gather"] == 1
+    assert out["total_bytes"] == int(64 * 4 * 0.5)
+
+
+def test_roofline_terms():
+    t = roofline_terms(flops=197e12 * 256, hbm_bytes_per_dev=819e9,
+                       coll_bytes_per_dev=50e9, chips=256)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(1.0)
+
+
+def test_hardware_constants():
+    assert PEAK_FLOPS == 197e12 and HBM_BW == 819e9 and ICI_BW == 50e9

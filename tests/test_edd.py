@@ -1,0 +1,77 @@
+"""EDD scheduler simulator invariants."""
+import numpy as np
+import pytest
+
+from repro.sched.edd import (EDDScheduler, dr_shaped_curtailments,
+                             mixed_curtailments, random_walk_curtailments)
+from repro.sched.traces import JobTrace, make_job_trace
+
+
+def small_trace():
+    return JobTrace(
+        arrival=np.array([0.0, 0.0, 1.0, 2.0]),
+        power=np.array([1.0, 1.0, 1.0, 2.0]),
+        duration=np.array([1.0, 2.0, 1.0, 1.0]),
+        slo=np.array([1.0, np.inf, 2.0, 1.0]))
+
+
+def test_capacity_never_violated():
+    trace = make_job_trace("batch_slo", hours=24, num_jobs=500,
+                           total_power=10.0)
+    cap = np.full(24, 10.0)
+    res = EDDScheduler().run(trace, cap)
+    assert (res.utilization <= cap + 1e-9).all()
+
+
+def test_ample_capacity_zero_waiting():
+    trace = small_trace()
+    res = EDDScheduler().run(trace, np.full(8, 100.0))
+    assert res.total_waiting == 0.0
+    assert res.total_tardiness == 0.0
+    assert np.allclose(res.start, trace.arrival)
+
+
+def test_curtailment_increases_waiting():
+    trace = make_job_trace("batch_noslo", hours=24, num_jobs=800,
+                           total_power=10.0, seed=1)
+    s = EDDScheduler()
+    base = s.run(trace, np.full(24, 10.5))
+    cut = s.run(trace, np.full(24, 10.5) * 0.6)
+    assert cut.total_waiting > base.total_waiting
+
+
+def test_edd_prefers_earlier_due_date():
+    # Two jobs arrive together; capacity fits only one per hour.
+    trace = JobTrace(arrival=np.array([0.0, 0.0]),
+                     power=np.array([1.0, 1.0]),
+                     duration=np.array([1.0, 1.0]),
+                     slo=np.array([8.0, 1.0]))
+    res = EDDScheduler().run(trace, np.full(8, 1.0))
+    assert res.start[1] < res.start[0]   # tighter SLO goes first
+
+
+def test_tardiness_counts_only_slo_jobs():
+    trace = small_trace()
+    res = EDDScheduler().run(trace, np.full(8, 0.5))  # starved
+    assert res.tardiness[1] == 0.0       # no-SLO job never tardy
+    assert res.total_tardiness >= 0.0
+
+
+def test_random_walk_positive_mean():
+    usage = np.full(48, 10.0)
+    ds = random_walk_curtailments(usage, 16, seed=0)
+    assert ds.shape == (16, 48)
+    assert (ds.mean(axis=1) > 0).all()
+    assert (np.abs(ds) <= 0.5 * usage + 1e-9).all()
+
+
+def test_dr_shaped_within_bounds():
+    usage = np.full(48, 10.0)
+    ds = dr_shaped_curtailments(usage, 16, seed=0)
+    assert (ds <= 0.5 * usage + 1e-9).all()
+    assert (ds >= -0.5 * usage - 1e-9).all()
+
+
+def test_mixed_count():
+    usage = np.full(48, 10.0)
+    assert mixed_curtailments(usage, 15).shape == (15, 48)

@@ -1,0 +1,102 @@
+"""Table-IV feature tests: hand-computed values + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import features as feat
+
+
+def test_waiting_time_power_hand_computed():
+    # d = [2, -1, 3]: cumsums [2, 1, 4] all positive -> 7.
+    d = jnp.asarray([2.0, -1.0, 3.0])
+    assert float(feat.waiting_time_power(d)) == pytest.approx(7.0)
+    # d = [-5, 1, 1]: cumsums [-5, -4, -3] -> positive parts all 0.
+    d = jnp.asarray([-5.0, 1.0, 1.0])
+    assert float(feat.waiting_time_power(d)) == pytest.approx(0.0)
+
+
+def test_waiting_time_jobs_hand_computed():
+    d = jnp.asarray([1.0, -1.0])
+    u = jnp.asarray([2.0, 2.0])
+    j = jnp.asarray([4.0, 4.0])
+    # rates = [2, -2]; cumsum [2, 0]; positive parts sum = 2.
+    assert float(feat.waiting_time_jobs(d, u, j)) == pytest.approx(2.0)
+
+
+def test_num_jobs_delayed_ignores_boosts():
+    d = jnp.asarray([1.0, -3.0])
+    u = jnp.ones(2)
+    j = jnp.ones(2) * 5
+    assert float(feat.num_jobs_delayed(d, u, j)) == pytest.approx(5.0)
+
+
+def test_total_tardiness_lags_by_slo():
+    u = jnp.ones(6)
+    j = jnp.ones(6)
+    d = jnp.asarray([1.0, 0, 0, 0, 0, 0])
+    # With SLO=4, only cum terms up to index T-1-4 contribute.
+    t = float(feat.total_tardiness(d, u, j, slo_hours=4))
+    assert t == pytest.approx(2.0)  # cum=[1,1] over the 2 surviving hours
+    assert float(feat.total_tardiness(d, u, j, slo_hours=6)) == 0.0
+
+
+def test_feature_matrix_shape_and_selection():
+    d = jnp.ones((5, 48))
+    u = jnp.ones((5, 48))
+    j = jnp.ones((5, 48))
+    X = feat.feature_matrix(d, u, j)
+    assert X.shape == (5, 5)
+    X4 = feat.feature_matrix(d, u, j, include_tardiness=False)
+    assert X4.shape == (5, 4)
+    sel = feat.selected_features("AITraining", d, u, j)
+    assert sel.shape == (5, 2)
+
+
+finite_d = hnp.arrays(np.float64, (24,),
+                      elements=st.floats(-10, 10, allow_nan=False))
+
+
+@given(finite_d)
+@settings(max_examples=30, deadline=None)
+def test_features_nonnegative(d):
+    """All Table-IV features are positive-part constructions ⇒ ≥ 0."""
+    dj = jnp.asarray(d)
+    u = jnp.ones(24) * 2.0
+    j = jnp.ones(24) * 3.0
+    assert float(feat.waiting_time_power(dj)) >= 0
+    assert float(feat.waiting_time_jobs(dj, u, j)) >= 0
+    assert float(feat.waiting_time_squared(dj, u, j)) >= 0
+    assert float(feat.num_jobs_delayed(dj, u, j)) >= 0
+    assert float(feat.total_tardiness(dj, u, j, 4)) >= 0
+
+
+@given(finite_d)
+@settings(max_examples=30, deadline=None)
+def test_pure_curtailment_monotone(d):
+    """Scaling a pure-curtailment vector up never decreases queue features."""
+    d = np.abs(d)
+    u = jnp.ones(24) * 20.0
+    j = jnp.ones(24) * 3.0
+    f1 = float(feat.waiting_time_power(jnp.asarray(d)))
+    f2 = float(feat.waiting_time_power(jnp.asarray(2 * d)))
+    assert f2 >= f1 - 1e-9
+
+
+@given(finite_d)
+@settings(max_examples=20, deadline=None)
+def test_smooth_upper_bounds_relu(d):
+    """Softplus smoothing upper-bounds the exact positive part."""
+    dj = jnp.asarray(d)
+    exact = float(feat.waiting_time_power(dj, smooth=0.0))
+    smooth = float(feat.waiting_time_power(dj, smooth=0.5))
+    assert smooth >= exact - 1e-6
+
+
+def test_zero_adjustment_zero_features():
+    d = jnp.zeros(48)
+    u = jnp.ones(48)
+    j = jnp.ones(48)
+    X = feat.feature_matrix(d, u, j)
+    assert float(jnp.abs(X).max()) == 0.0

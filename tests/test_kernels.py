@@ -1,0 +1,124 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.kernels.dr_features.ops import dr_features
+from repro.kernels.dr_features.ref import dr_features_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FA_CASES = [
+    # (B, Sq, Skv, H, KV, Dh, causal, dtype, blocks)
+    (2, 128, 128, 4, 2, 64, True, jnp.float32, 64),
+    (1, 200, 200, 4, 4, 64, True, jnp.float32, 64),   # ragged seq
+    (2, 64, 256, 8, 2, 128, False, jnp.float32, 64),  # cross-attn
+    (1, 256, 256, 4, 1, 64, True, jnp.bfloat16, 128), # MQA bf16
+    (1, 96, 96, 2, 2, 32, True, jnp.float32, 32),     # small dims
+    (2, 128, 512, 4, 4, 64, False, jnp.bfloat16, 128),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case):
+    B, Sq, Skv, H, KV, Dh, causal, dt, blk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dt)
+    k = jax.random.normal(ks[1], (B, Skv, KV, Dh), dt)
+    v = jax.random.normal(ks[2], (B, Skv, KV, Dh), dt)
+    out = flash_attention(q, k, v, causal=causal, block_q=blk, block_k=blk)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel and the model's chunked-jnp attention agree (same math)."""
+    from repro.models.attention import flash_attention_jnp
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    b = flash_attention_jnp(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 64, 256), jnp.float32),
+    ((3, 37, 512), jnp.float32),     # ragged rows
+    ((2, 128, 1024), jnp.bfloat16),
+    ((1, 1, 128), jnp.float32),
+])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],),
+                          jnp.float32) * 0.1 + 1.0
+    out = rmsnorm(x, s)
+    ref = rmsnorm_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dims", [(2, 6, 4, 16, 32), (1, 12, 2, 8, 16),
+                                  (3, 3, 8, 32, 64)])
+def test_ssd_scan_matches_ref(dims):
+    B, NC, H, P, N = dims
+    ks = jax.random.split(KEY, 2)
+    st_ = jax.random.normal(ks[0], (B, NC, H, P, N))
+    dec = jnp.abs(jax.random.normal(ks[1], (B, NC, H))) * 0.5
+    hp, hl = ssd_scan(st_, dec)
+    hp_r, hl_r = ssd_scan_ref(st_, dec)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hp_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dr_features — hypothesis sweep vs core.features oracle
+# ---------------------------------------------------------------------------
+@given(hnp.arrays(np.float32, (11, 48),
+                  elements=st.floats(-8, 8, allow_nan=False, width=32)))
+@settings(max_examples=15, deadline=None)
+def test_dr_features_matches_core(d):
+    u = np.abs(d) + 1.0
+    j = np.abs(d) * 3 + 0.5
+    out = np.asarray(dr_features(jnp.asarray(d), jnp.asarray(u),
+                                 jnp.asarray(j)))
+    ref = np.asarray(dr_features_ref(jnp.asarray(d), jnp.asarray(u),
+                                     jnp.asarray(j)))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("W,T", [(1, 24), (130, 48), (1000, 48)])
+def test_dr_features_shapes(W, T):
+    d = jnp.ones((W, T))
+    u = jnp.ones((W, T)) * 2
+    j = jnp.ones((W, T))
+    assert dr_features(d, u, j).shape == (W, 4)

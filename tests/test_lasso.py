@@ -1,0 +1,46 @@
+"""Lasso (FISTA + 10-fold CV) tests."""
+import numpy as np
+import pytest
+
+from repro.core.lasso import fit_lasso_cv, lasso_fista, soft_threshold
+
+
+def test_soft_threshold():
+    import jax.numpy as jnp
+    x = jnp.asarray([-3.0, -0.5, 0.0, 0.5, 3.0])
+    out = np.asarray(soft_threshold(x, 1.0))
+    assert np.allclose(out, [-2.0, 0.0, 0.0, 0.0, 2.0])
+
+
+def test_recovers_sparse_coefficients():
+    rng = np.random.default_rng(0)
+    n, F = 200, 6
+    X = rng.standard_normal((n, F))
+    true = np.array([3.0, 0.0, -2.0, 0.0, 0.0, 0.0])
+    y = X @ true + 0.05 * rng.standard_normal(n) + 1.5
+    fit = fit_lasso_cv(X, y, folds=5)
+    assert set(fit.selected) >= {0, 2}
+    assert abs(fit.coef[0] - 3.0) < 0.2
+    assert abs(fit.coef[2] + 2.0) < 0.2
+    assert abs(fit.intercept - 1.5) < 0.2
+    assert fit.r2 > 0.95
+
+
+def test_heavy_regularization_zeroes_out():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((50, 4))
+    y = X[:, 0] * 0.01
+    w, b = lasso_fista(jnp.asarray(X), jnp.asarray(y), jnp.asarray(100.0))
+    assert float(np.abs(np.asarray(w)).max()) == pytest.approx(0.0)
+
+
+def test_cv_quality_reported():
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((100, 3))
+    y = X @ np.array([1.0, 2.0, 0.0]) + 0.1 * rng.standard_normal(100)
+    fit = fit_lasso_cv(X, y, folds=10)
+    assert fit.cv_mae_mean < 0.5
+    assert fit.cv_mae_var >= 0.0
+    pred = fit.predict(X)
+    assert np.corrcoef(pred, y)[0, 1] > 0.99

@@ -1,0 +1,49 @@
+"""Fairness metric tests (paper §VI-E)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.metrics import (box_stats, capacity_scaled_entropy,
+                                pareto_frontier)
+
+
+def test_entropy_max_at_proportional():
+    """Entropy = log2(4) = 2 exactly when losses ∝ entitlements."""
+    E = np.array([10.0, 20.0, 30.0, 40.0])
+    losses = 0.1 * E
+    assert capacity_scaled_entropy(losses, E) == pytest.approx(2.0)
+
+
+def test_entropy_low_when_concentrated():
+    E = np.ones(4)
+    losses = np.array([1.0, 0.0, 0.0, 0.0])
+    assert capacity_scaled_entropy(losses, E) == pytest.approx(0.0)
+
+
+def test_entropy_zero_dr_is_fair():
+    E = np.ones(4)
+    assert capacity_scaled_entropy(np.zeros(4), E) == pytest.approx(2.0)
+
+
+@given(hnp.arrays(np.float64, (4,), elements=st.floats(0, 100)))
+@settings(max_examples=50, deadline=None)
+def test_entropy_bounded(vals):
+    E = np.array([10.0, 20.0, 30.0, 40.0])
+    e = capacity_scaled_entropy(vals, E)
+    assert -1e-9 <= e <= 2.0 + 1e-9
+
+
+def test_pareto_frontier():
+    carbon = np.array([1.0, 2.0, 3.0, 2.5])
+    pen = np.array([1.0, 1.5, 4.0, 1.2])
+    idx = pareto_frontier(carbon, pen)
+    # (2.5, 1.2) dominates (2.0, 1.5); (1,1) kept (lowest pen), (3,4) kept
+    # (highest carbon).
+    assert 3 in idx and 0 in idx and 2 in idx and 1 not in idx
+
+
+def test_box_stats():
+    s = box_stats(np.arange(101, dtype=float))
+    assert s["median"] == 50 and s["q1"] == 25 and s["q3"] == 75
+    assert s["min"] == 0 and s["max"] == 100

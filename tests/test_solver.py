@@ -1,0 +1,58 @@
+"""Solver tests: SLSQP vs Adam-AL agreement, projections, metrics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.policies import cr1_spec
+from repro.core.solver import AdamALConfig, solve_adam, solve_slsqp
+
+
+def test_solvers_agree_on_cr1(dr_problem):
+    """The fleet-scale Adam-AL solver must track the paper's SLSQP within a
+    few percent of objective value (it's the same problem)."""
+    spec = cr1_spec(dr_problem, 1.2)
+    r1 = solve_slsqp(spec, maxiter=250)
+    r2 = solve_adam(spec)
+    assert r2.objective <= r1.objective * 0.9 + 0.5  # no worse than ~SLSQP
+    assert abs(r1.carbon_reduction_pct - r2.carbon_reduction_pct) < 3.0
+
+
+def test_adam_respects_all_constraints(dr_problem):
+    r = solve_adam(cr1_spec(dr_problem, 1.2))
+    assert r.violations["capacity"] <= 1e-4
+    assert r.violations["box"] <= 1e-5
+    assert r.violations["preservation"] <= 0.05
+
+
+def test_projection_preservation(dr_problem):
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(rng.normal(size=(dr_problem.W, dr_problem.T)))
+    P = dr_problem.project_preservation(D)
+    res = np.asarray(dr_problem.preservation_residual(P))
+    assert np.abs(res).max() < 1e-4
+    # Realtime rows untouched.
+    rts = ~dr_problem.batch_mask
+    assert np.allclose(np.asarray(P)[rts], np.asarray(D)[rts])
+
+
+@given(hnp.arrays(np.float64, (2, 48),
+                  elements=st.floats(-5, 5, allow_nan=False)))
+@settings(max_examples=20, deadline=None)
+def test_day_sums_zero_after_projection(dr_problem, D_extra):
+    rng = np.random.default_rng(1)
+    D = rng.normal(size=(dr_problem.W, dr_problem.T))
+    D[:2] = D_extra
+    P = np.asarray(dr_problem.project_preservation(jnp.asarray(D)))
+    sums = P[:, :24].sum(axis=1), P[:, 24:48].sum(axis=1)
+    for s in sums:
+        assert np.abs(s[dr_problem.batch_mask]).max() < 1e-6
+
+
+def test_reported_percentages_consistent(dr_problem):
+    r = solve_slsqp(cr1_spec(dr_problem, 1.4), maxiter=150)
+    assert r.carbon_reduction_pct == pytest.approx(
+        100 * r.carbon_reduction / dr_problem.total_carbon_baseline)
+    assert r.total_penalty == pytest.approx(float(r.per_penalty.sum()),
+                                            rel=1e-5)
