@@ -16,8 +16,8 @@ from benchmarks.common import get_problem, row, timeit
 
 
 def solver_scale() -> list[str]:
-    """SLSQP (paper) vs vectorized Adam fleet solver at growing W."""
-    from repro.core.fleet_solver import (from_models, solve_cr1_fleet,
+    """SLSQP (paper) vs vectorized engine fleet solver at growing W."""
+    from repro.core.fleet_solver import (FleetProblem, solve_cr1_fleet,
                                          synthetic_fleet)
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
@@ -29,7 +29,7 @@ def solver_scale() -> list[str]:
     rows.append(row("solver_slsqp_W4", us_slsqp,
                     f"carbon={r_ref.carbon_reduction_pct:.2f}%"
                     f" pen={r_ref.total_penalty_pct:.2f}% (paper solver)"))
-    fp4 = from_models(p.models, p.mci)
+    fp4 = FleetProblem.from_problem(p)
     solve_cr1_fleet(fp4, lam=1.4)  # compile
     us4 = timeit(lambda: solve_cr1_fleet(fp4, lam=1.4), repeats=3)
     r4 = solve_cr1_fleet(fp4, lam=1.4)
@@ -58,6 +58,36 @@ def solver_scale() -> list[str]:
                     f"carbon={r.carbon_reduction_pct:.2f}%"
                     f" pen={r.total_penalty_pct:.2f}%"
                     f" viol={r.preservation_violation:.1e}"))
+    return rows
+
+
+def fleet_cr3_scale() -> list[str]:
+    """Decentralized CR3 wall-clock vs fleet size W — the taxes-and-rebates
+    policy at fleet scale (vmapped best responses, one XLA call per clearing
+    round; CPU numbers, structure transfers to TPU)."""
+    from repro.core.fleet_solver import solve_cr3_fleet, synthetic_fleet
+    rows = []
+    for W in (4, 64, 512):
+        fp = synthetic_fleet(W)
+        kw = dict(steps=300, outer=2, clearing_iters=2)
+        solve_cr3_fleet(fp, **kw)            # compile
+        us = timeit(lambda: solve_cr3_fleet(fp, **kw), repeats=2, warmup=0)
+        r, rho = solve_cr3_fleet(fp, **kw)
+        rows.append(row(f"fleet_cr3_W{W}", us,
+                        f"carbon={r.carbon_reduction_pct:.2f}%"
+                        f" pen={r.total_penalty_pct:.2f}% rho={rho:.4f}"
+                        f" {us / W:.1f}us/workload"
+                        f" viol={r.preservation_violation:.1e}"))
+    # vmapped λ-sweep: the whole Fig.-8 CR1 frontier in one compile
+    from repro.core.fleet_solver import solve_cr1_fleet_sweep
+    fp = synthetic_fleet(64)
+    lams = [1.0, 1.2, 1.45, 1.6, 2.2]
+    solve_cr1_fleet_sweep(fp, lams, steps=300)   # compile
+    us = timeit(lambda: solve_cr1_fleet_sweep(fp, lams, steps=300),
+                repeats=2, warmup=0)
+    rows.append(row("fleet_cr1_sweep5_W64", us,
+                    f"{us / len(lams):.0f}us/point; one XLA call for the"
+                    f" {len(lams)}-point Pareto sweep"))
     return rows
 
 

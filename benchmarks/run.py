@@ -26,6 +26,7 @@ def main() -> None:
         ("fig10_entropy", paper_figs.fig10_entropy),
         ("fig11_future", paper_figs.fig11_future),
         ("solver_scale", perf_micro.solver_scale),
+        ("fleet_cr3_scale", perf_micro.fleet_cr3_scale),
         ("kernel_micro", perf_micro.kernel_micro),
         ("train_throughput", perf_micro.train_throughput),
     ]

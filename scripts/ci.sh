@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md), runnable from a fresh checkout:
+#   pip install -r requirements.txt && scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,152 @@
+"""Shared fleet-scale DR optimization engine.
+
+Every gradient-based solver in this repo — CR1/CR2/CR3 at fleet scale
+(`fleet_solver.py`) and the generic `PolicySpec` backend
+(`solver.solve_adam`) — is the same algorithm: projected Adam on an
+augmented Lagrangian. This module is the single implementation:
+
+  * `al_minimize` — the pure, traceable core. Caller supplies
+    (objective, projection, eq/ineq constraint residuals); the engine runs
+    `outer_steps` rounds of multiplier updates around `inner_steps` of
+    bias-corrected Adam, projecting after every step. Box bounds and batch
+    day-preservation are handled by the caller's projection (both are cheap
+    closed forms); equality residuals h(x)=0 and inequality residuals
+    g(x)>=0 get classic AL multiplier + quadratic terms with a growing
+    penalty weight mu.
+
+  * `al_minimize_batched` — `vmap` over a stacked hyperparameter axis, so a
+    whole Pareto sweep (Fig. 8's lambda or cap grid) compiles once and runs
+    as one XLA call.
+
+`al_minimize` is deliberately *not* jitted here: adapters wrap it in their
+own `jax.jit` entry points (with policy knobs as traced `hyper` arguments),
+so repeated solves of the same-shaped problem reuse one trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+# objective(x, hyper) -> scalar; residual(x, hyper) -> (n,) vector.
+Objective = Callable[[Array, Any], Array]
+Residual = Callable[[Array, Any], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for the projected-Adam / augmented-Lagrangian loop."""
+
+    inner_steps: int = 400     # Adam steps per multiplier round
+    outer_steps: int = 1       # multiplier rounds (1 = plain projected Adam)
+    lr: float = 0.05           # step size, scaled by the caller's step_scale
+    mu0: float = 10.0          # initial quadratic constraint weight
+    mu_growth: float = 2.0     # mu multiplier per outer round
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+def _residual_dim(fn: Residual | None, x0: Array, hyper: Any) -> int:
+    """Static length of a residual vector (abstract eval — no FLOPs)."""
+    if fn is None:
+        return 0
+    out = jax.eval_shape(
+        lambda x, h: jnp.atleast_1d(fn(x, h)).ravel(), x0, hyper)
+    return int(out.shape[0])
+
+
+def al_minimize(objective: Objective, project: Callable[[Array], Array],
+                x0: Array, *, hyper: Any = None,
+                eq_residual: Residual | None = None,
+                ineq_residual: Residual | None = None,
+                step_scale: Array | float = 1.0,
+                grad_transform: Callable[[Array], Array] | None = None,
+                cfg: EngineConfig = EngineConfig(),
+                ) -> tuple[Array, dict[str, Array]]:
+    """Minimize objective(x, hyper) s.t. eq(x)=0, ineq(x)>=0, x = project(x).
+
+    Pure and traceable: safe to call under `jit`/`vmap`/`grad`-of-solution.
+    `hyper` is an arbitrary pytree threaded to the callbacks (traced, so
+    sweeping it does not retrace). Returns (x, aux) with the final
+    multipliers in aux.
+
+    `grad_transform` (optional) preconditions the raw gradient before the
+    Adam update — e.g. projection onto the tangent space of an equality
+    manifold the post-step projection enforces. Without it, Adam's
+    per-coordinate sign normalization can emit near-uniform steps that the
+    projection then annihilates (uniform push − day-mean ≈ 0), stalling
+    progress along the manifold.
+    """
+    n_eq = _residual_dim(eq_residual, x0, hyper)
+    n_in = _residual_dim(ineq_residual, x0, hyper)
+
+    def eq_vec(x: Array) -> Array:
+        return jnp.atleast_1d(eq_residual(x, hyper)).ravel()
+
+    def ineq_vec(x: Array) -> Array:
+        return jnp.atleast_1d(ineq_residual(x, hyper)).ravel()
+
+    def lagrangian(x: Array, lam_eq: Array, lam_in: Array, mu: Array) -> Array:
+        val = objective(x, hyper)
+        if n_eq:
+            h = eq_vec(x)
+            val = val + lam_eq @ h + 0.5 * mu * (h @ h)
+        if n_in:
+            # AL for g(x) >= 0:  (mu/2)·[max(0, lam/mu − g)² − (lam/mu)²]
+            g = ineq_vec(x)
+            s = jnp.maximum(lam_in / mu - g, 0.0)
+            val = val + 0.5 * mu * (s @ s - (lam_in / mu) @ (lam_in / mu))
+        return val
+
+    grad_fn = jax.grad(lagrangian)
+
+    def outer_body(carry, _):
+        x, lam_eq, lam_in, mu = carry
+
+        def inner(c, _):
+            x, m, v, t = c
+            g = grad_fn(x, lam_eq, lam_in, mu)
+            if grad_transform is not None:
+                g = grad_transform(g)
+            t = t + 1
+            m = cfg.beta1 * m + (1.0 - cfg.beta1) * g
+            v = cfg.beta2 * v + (1.0 - cfg.beta2) * g * g
+            mhat = m / (1.0 - cfg.beta1 ** t)
+            vhat = v / (1.0 - cfg.beta2 ** t)
+            x = project(x - cfg.lr * step_scale * mhat
+                        / (jnp.sqrt(vhat) + cfg.eps))
+            return (x, m, v, t), None
+
+        (x, _, _, _), _ = jax.lax.scan(
+            inner, (x, jnp.zeros_like(x), jnp.zeros_like(x), 0), None,
+            length=cfg.inner_steps)
+        if n_eq:
+            lam_eq = lam_eq + mu * eq_vec(x)
+        if n_in:
+            lam_in = jnp.maximum(lam_in - mu * ineq_vec(x), 0.0)
+        return (x, lam_eq, lam_in, mu * cfg.mu_growth), None
+
+    carry0 = (project(x0), jnp.zeros((n_eq,), x0.dtype),
+              jnp.zeros((n_in,), x0.dtype), jnp.asarray(cfg.mu0, x0.dtype))
+    (x, lam_eq, lam_in, mu), _ = jax.lax.scan(
+        outer_body, carry0, None, length=cfg.outer_steps)
+    return x, {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu}
+
+
+def al_minimize_batched(objective: Objective,
+                        project: Callable[[Array], Array], x0: Array,
+                        hypers: Any, **kwargs) -> Array:
+    """vmap `al_minimize` over a stacked hyperparameter axis.
+
+    `hypers` is a pytree whose leaves carry a leading sweep axis; the whole
+    sweep shares one trace/compile (the Fig.-8 Pareto pattern). Returns the
+    stacked solutions (n_sweep, *x0.shape).
+    """
+    def one(h):
+        return al_minimize(objective, project, x0, hyper=h, **kwargs)[0]
+
+    return jax.vmap(one)(hypers)

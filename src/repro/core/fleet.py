@@ -94,8 +94,18 @@ class FleetCoordinator:
         models = tuple(_penalty_model(j, hours, templates)
                        for j in self.jobs)
         problem = DRProblem(models=models, mci=self.signal.mci)
-        spec = (cr2_spec(problem, self.cap_frac) if self.policy == "cr2"
-                else cr1_spec(problem, self.lam))
+        # A job can only shed its *dynamic* power by throttling — cuts past
+        # that saturate at the idle floor (throttle 0, i.e. killing the job
+        # for the hour). Tighten the box so plans stay realizable; CR2's
+        # fairness targets are computed under the same tightened box so its
+        # penalty-equality constraints remain attainable.
+        dyn = np.asarray([j.power.dynamic_fraction for j in self.jobs])
+        upper = np.minimum(problem.bounds()[1],
+                           0.95 * dyn[:, None] * problem.usage)
+        spec = (cr2_spec(problem, self.cap_frac, upper=upper)
+                if self.policy == "cr2"
+                else dataclasses.replace(cr1_spec(problem, self.lam),
+                                         upper=upper))
         use_slsqp = (self.solver == "slsqp"
                      or (self.solver == "auto" and len(self.jobs) <= 8))
         result = (solve_slsqp(spec) if use_slsqp else solve_adam(spec))

@@ -1,4 +1,4 @@
-"""Vectorized fleet-scale DR solver (beyond-paper).
+"""Vectorized fleet-scale DR solvers (beyond-paper), built on one engine.
 
 The paper solves 4 workloads × 48 h with SLSQP. A datacenter fleet has
 thousands of workloads; SLSQP's dense QP subproblems scale as O((W·T)³) and
@@ -10,8 +10,30 @@ workload's penalty model into arrays:
 
 so the whole fleet evaluates as a handful of (W, T) tensor ops — vmapped,
 jit-compiled, MXU-shaped (T padded to 128 lanes on TPU), with the Table-IV
-features optionally computed by the `dr_features` Pallas kernel. CR1 solves
-with projected Adam + exact preservation projection; one XLA call.
+features computed by the `dr_features` Pallas kernel on TPU (jnp fallback
+elsewhere; see `repro.kernels.dispatch`).
+
+Architecture: all three policies are thin adapters over
+`repro.core.engine.al_minimize` — a single projected-Adam +
+augmented-Lagrangian loop parameterized by (objective, eq/ineq residuals,
+projection). Each adapter is one jitted entry point:
+
+  * CR1 (`solve_cr1_fleet`): unconstrained trade-off objective
+    λ·penalty − carbon, projection only; λ is a traced hyperparameter, and
+    `solve_cr1_fleet_sweep` vmaps the whole Fig.-8 λ grid through one
+    compile.
+  * CR2 (`solve_cr2_fleet`): min −carbon s.t. C_i(d_i) = C_i(cap%) — one
+    equality multiplier per workload.
+  * CR3 (`solve_cr3_fleet`): the paper's decentralized taxes-and-rebates
+    game (Eqs. 5–8). All W selfish problems are separable, so one (W, T)
+    AL solve with a per-workload peak-allowance inequality IS the vmapped
+    best response; a python outer loop lowers the carbon price ρ until
+    taxes cover rebates (Eq. 6), one XLA call per clearing round.
+
+`FleetProblem` is a registered JAX pytree (arrays are leaves; `day_hours`
+etc. are static), so adapters jit directly over it, and
+`FleetProblem.from_problem`/`to_problem` convert to/from the per-workload
+`DRProblem` so the SLSQP stack serves as a validation reference.
 """
 from __future__ import annotations
 
@@ -23,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import EngineConfig, al_minimize
 from repro.core.penalty import PenaltyModel
 
 Array = jax.Array
@@ -30,7 +53,7 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class FleetProblem:
-    """Stacked-workload DR instance."""
+    """Stacked-workload DR instance (a JAX pytree; jit over it directly)."""
     usage: np.ndarray          # (W, T)
     entitlement: np.ndarray    # (W,)
     k: np.ndarray              # (W,)
@@ -42,6 +65,7 @@ class FleetProblem:
     mci: np.ndarray            # (T,)
     day_hours: int = 24
     max_curtail_frac: float = 0.5
+    names: tuple[str, ...] | None = None
 
     @property
     def W(self) -> int:
@@ -51,8 +75,66 @@ class FleetProblem:
     def T(self) -> int:
         return self.usage.shape[1]
 
+    @classmethod
+    def from_problem(cls, p) -> "FleetProblem":
+        """Stack a per-workload `DRProblem` into the fleet representation.
+
+        The fleet path implements the default DRProblem subset: equality
+        day-preservation, curtail-only RTS, and no datacenter capacity
+        inequality (Eq. 10 — never active for the paper fleet's 1.2
+        buffer; fleet-scale support is a ROADMAP item). Non-default
+        `preservation`/`rts_boost` settings would silently change meaning
+        here, so they are rejected."""
+        if p.preservation != "equality" or p.rts_boost:
+            raise ValueError(
+                "FleetProblem supports preservation='equality' and "
+                f"rts_boost=False only (got preservation={p.preservation!r},"
+                f" rts_boost={p.rts_boost})")
+        return from_models(p.models, p.mci, day_hours=p.day_hours,
+                           max_curtail_frac=p.max_curtail_frac)
+
+    def to_problem(self, **overrides):
+        """Rebuild the per-workload `DRProblem` (SLSQP reference) view."""
+        from repro.core.policies import DRProblem
+        names = self.names or tuple(f"w{i}" for i in range(self.W))
+        models = []
+        for i in range(self.W):
+            if bool(self.is_batch[i]):
+                slo = float(self.x2_kind[i]) > 0.5
+                models.append(PenaltyModel(
+                    name=names[i],
+                    kind="batch_slo" if slo else "batch_noslo",
+                    usage=np.asarray(self.usage[i]),
+                    entitlement=float(self.entitlement[i]),
+                    k=float(self.k[i]),
+                    params=tuple(float(b) for b in self.betas[i]),
+                    jobs=np.asarray(self.jobs[i]),
+                    feature_names=("waiting_time_power",
+                                   "waiting_time_squared" if slo
+                                   else "num_jobs_delayed")))
+            else:
+                models.append(PenaltyModel(
+                    name=names[i], kind="realtime",
+                    usage=np.asarray(self.usage[i]),
+                    entitlement=float(self.entitlement[i]),
+                    k=float(self.k[i]),
+                    params=tuple(float(a) for a in self.rts_coeffs[i])))
+        kw = dict(models=tuple(models), mci=np.asarray(self.mci),
+                  max_curtail_frac=self.max_curtail_frac,
+                  day_hours=self.day_hours)
+        kw.update(overrides)
+        return DRProblem(**kw)
+
+
+jax.tree_util.register_dataclass(
+    FleetProblem,
+    data_fields=["usage", "entitlement", "k", "rts_coeffs", "betas",
+                 "x2_kind", "jobs", "is_batch", "mci"],
+    meta_fields=["day_hours", "max_curtail_frac", "names"])
+
 
 def from_models(models: Sequence[PenaltyModel], mci: np.ndarray,
+                day_hours: int = 24, max_curtail_frac: float = 0.5,
                 ) -> FleetProblem:
     W = len(models)
     T = mci.shape[0]
@@ -75,7 +157,9 @@ def from_models(models: Sequence[PenaltyModel], mci: np.ndarray,
                 else 0.0
     return FleetProblem(usage=usage, entitlement=ent, k=k, rts_coeffs=rts,
                         betas=betas, x2_kind=x2k, jobs=jobs,
-                        is_batch=is_batch, mci=mci)
+                        is_batch=is_batch, mci=mci, day_hours=day_hours,
+                        max_curtail_frac=max_curtail_frac,
+                        names=tuple(m.name for m in models))
 
 
 def synthetic_fleet(num: int, hours: int = 48, seed: int = 0,
@@ -100,8 +184,16 @@ def synthetic_fleet(num: int, hours: int = 48, seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# Vectorized penalties
+# Vectorized penalties (backend-aware kernel dispatch)
 # ---------------------------------------------------------------------------
+def resolve_use_kernel(flag: bool | None) -> bool:
+    """None = auto: Pallas kernel on TPU, jnp path elsewhere."""
+    if flag is None:
+        from repro.kernels.dispatch import on_tpu
+        return on_tpu()
+    return bool(flag)
+
+
 def _features(d: Array, usage: Array, jobs: Array, use_kernel: bool) -> Array:
     """(W, 4): wait_jobs, wait_power, wait_sq, njobs — Table IV."""
     if use_kernel:
@@ -117,8 +209,9 @@ def _features(d: Array, usage: Array, jobs: Array, use_kernel: bool) -> Array:
 
 
 def fleet_penalties(p: FleetProblem, D: Array,
-                    use_kernel: bool = False) -> Array:
+                    use_kernel: bool | None = None) -> Array:
     """(W,) calibrated penalties — fully vectorized."""
+    use_kernel = resolve_use_kernel(use_kernel)
     usage = jnp.asarray(p.usage)
     delta = D / usage
     a3, a2, a1 = (jnp.asarray(p.rts_coeffs[:, i])[:, None] for i in range(3))
@@ -132,6 +225,14 @@ def fleet_penalties(p: FleetProblem, D: Array,
     return jnp.asarray(p.k) * raw
 
 
+# ---------------------------------------------------------------------------
+# Shared adapter plumbing: bounds, projection, reporting
+# ---------------------------------------------------------------------------
+def _jit_view(p: FleetProblem) -> FleetProblem:
+    """Strip reporting-only static metadata (`names`) before jit calls —
+    names live in the pytree treedef, so leaving them in would recompile
+    the adapters for every same-shaped fleet with different job names."""
+    return dataclasses.replace(p, names=None)
 @dataclasses.dataclass(frozen=True)
 class FleetSolveResult:
     D: np.ndarray
@@ -141,83 +242,110 @@ class FleetSolveResult:
     preservation_violation: float
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "use_kernel", "lam",
-                                             "day_hours"))
-def _solve_cr1(usage, lo, hi, mci, is_batch_f, k, rts, betas, x2k, jobs,
-               ent_sum, carbon_base, lam: float, steps: int,
-               use_kernel: bool, day_hours: int = 24):
-    W, T = usage.shape
-    n_days = T // day_hours
+def _bounds(p: FleetProblem) -> tuple[Array, Array]:
+    """Box bounds: curtail ≤ min(frac·E, U); batch may boost to U−d ≤ E."""
+    usage = jnp.asarray(p.usage)
+    E = jnp.asarray(p.entitlement)[:, None]
+    hi = jnp.minimum(p.max_curtail_frac * E, usage)
+    lo = jnp.where(jnp.asarray(p.is_batch)[:, None], -(E - usage), 0.0)
+    return lo, hi
 
-    p_like = FleetProblem(
-        usage=usage, entitlement=jnp.zeros(W), k=k, rts_coeffs=rts,
-        betas=betas, x2_kind=x2k, jobs=jobs,
-        is_batch=is_batch_f > 0.5, mci=mci)
 
-    def penalties(D):
-        return fleet_penalties(p_like, D, use_kernel)
+def _projection(p: FleetProblem, lo: Array, hi: Array):
+    """Alternating clip + batch day-preservation projection (3 rounds)."""
+    W, T = p.usage.shape
+    n_days = max(1, T // p.day_hours)
+    span = n_days * p.day_hours
+    is_batch = jnp.asarray(p.is_batch)[:, None, None]
 
-    pen_norm = 100.0 / ent_sum
-    car_norm = 100.0 / carbon_base
-
-    def objective(D):
-        return (lam * pen_norm * penalties(D).sum()
-                - car_norm * (D @ mci).sum())
-
-    grad = jax.grad(objective)
-
-    def project(D):
+    def project(D: Array) -> Array:
         D = jnp.clip(D, lo, hi)
         for _ in range(3):
-            Dd = D.reshape(W, n_days, day_hours)
+            Dd = D[:, :span].reshape(W, n_days, p.day_hours)
             mean = Dd.mean(axis=-1, keepdims=True)
-            Dd = jnp.where(is_batch_f[:, None, None] > 0.5, Dd - mean, Dd)
-            D = jnp.clip(Dd.reshape(W, T), lo, hi)
+            Dd = jnp.where(is_batch, Dd - mean, Dd)
+            D = jnp.clip(jnp.concatenate(
+                [Dd.reshape(W, span), D[:, span:]], axis=1), lo, hi)
         return D
 
-    scale = jnp.maximum(hi - lo, 1e-6).mean()
+    return project
 
-    def body(c, _):
-        D, m, v, t = c
-        g = grad(D)
-        t = t + 1
-        m = 0.9 * m + 0.1 * g
-        v = 0.999 * v + 0.001 * g * g
-        mhat = m / (1 - 0.9 ** t)
-        vhat = v / (1 - 0.999 ** t)
-        D = project(D - 0.05 * scale * mhat / (jnp.sqrt(vhat) + 1e-8))
-        return (D, m, v, t), None
 
-    D0 = jnp.zeros((W, T))
-    (D, _, _, _), _ = jax.lax.scan(
-        body, (D0, jnp.zeros_like(D0), jnp.zeros_like(D0), 0), None,
-        length=steps)
-    return D, penalties(D)
+def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
+            iters: int) -> FleetSolveResult:
+    mci = np.asarray(p.mci)
+    carbon_base = float((np.asarray(p.usage).sum(0) * mci).sum())
+    car = float((D @ mci).sum())
+    n_days = max(1, p.T // p.day_hours)
+    span = n_days * p.day_hours
+    sums = D[:, :span].reshape(p.W, n_days, p.day_hours).sum(-1)
+    is_batch = np.asarray(p.is_batch)
+    viol = float(np.abs(sums[is_batch]).max()) if is_batch.any() else 0.0
+    return FleetSolveResult(
+        D=D, carbon_reduction_pct=100 * car / carbon_base,
+        total_penalty_pct=100 * float(pens.sum())
+        / float(np.asarray(p.entitlement).sum()),
+        iters=iters, preservation_violation=viol)
+
+
+# ---------------------------------------------------------------------------
+# CR1 — Efficient DR at fleet scale (thin adapter over the engine)
+# ---------------------------------------------------------------------------
+def _cr1_pieces(p: FleetProblem, use_kernel: bool):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    pen_norm = 100.0 / jnp.asarray(p.entitlement).sum()
+    car_norm = 100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum()
+
+    def objective(D: Array, lam) -> Array:
+        return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
+                - car_norm * (D @ mci).sum())
+
+    project = _projection(p, lo, hi)
+    step_scale = jnp.maximum(hi - lo, 1e-6).mean()
+    return objective, project, step_scale
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
+def _cr1_run(p: FleetProblem, lam, steps: int, use_kernel: bool):
+    objective, project, step_scale = _cr1_pieces(p, use_kernel)
+    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                       hyper=lam, step_scale=step_scale,
+                       cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+    return D, fleet_penalties(p, D, use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
+def _cr1_sweep(p: FleetProblem, lams, steps: int, use_kernel: bool):
+    objective, project, step_scale = _cr1_pieces(p, use_kernel)
+
+    def solve_one(lam):
+        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                           hyper=lam, step_scale=step_scale,
+                           cfg=EngineConfig(inner_steps=steps,
+                                            outer_steps=1))
+        return D, fleet_penalties(p, D, use_kernel)
+
+    return jax.vmap(solve_one)(lams)
 
 
 def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
-                    use_kernel: bool = False) -> FleetSolveResult:
-    usage = jnp.asarray(p.usage)
-    E = p.entitlement[:, None]
-    hi = jnp.asarray(np.minimum(p.max_curtail_frac * E, p.usage))
-    lo = jnp.asarray(np.where(p.is_batch[:, None], -(E - p.usage), 0.0))
-    carbon_base = float((p.usage.sum(0) * p.mci).sum())
-    D, pens = _solve_cr1(usage, lo, hi, jnp.asarray(p.mci),
-                         jnp.asarray(p.is_batch, jnp.float32),
-                         jnp.asarray(p.k), jnp.asarray(p.rts_coeffs),
-                         jnp.asarray(p.betas), jnp.asarray(p.x2_kind),
-                         jnp.asarray(p.jobs), float(p.entitlement.sum()),
-                         carbon_base, lam, steps, use_kernel, p.day_hours)
-    D = np.asarray(D)
-    car = float((D @ p.mci).sum())
-    n_days = p.T // p.day_hours
-    sums = D.reshape(p.W, n_days, p.day_hours).sum(-1)
-    viol = float(np.abs(sums[p.is_batch]).max()) if p.is_batch.any() else 0.0
-    return FleetSolveResult(
-        D=D, carbon_reduction_pct=100 * car / carbon_base,
-        total_penalty_pct=100 * float(np.asarray(pens).sum())
-        / float(p.entitlement.sum()),
-        iters=steps, preservation_violation=viol)
+                    use_kernel: bool | None = None) -> FleetSolveResult:
+    use_kernel = resolve_use_kernel(use_kernel)
+    D, pens = _cr1_run(_jit_view(p), lam, steps, use_kernel)
+    return _report(p, np.asarray(D), np.asarray(pens), iters=steps)
+
+
+def solve_cr1_fleet_sweep(p: FleetProblem, lams: Sequence[float],
+                          steps: int = 600, use_kernel: bool | None = None,
+                          ) -> list[FleetSolveResult]:
+    """The Fig.-8 Pareto sweep as ONE XLA call: the λ grid rides a vmap
+    axis through the shared engine, so the sweep compiles once."""
+    use_kernel = resolve_use_kernel(use_kernel)
+    Ds, pens = _cr1_sweep(_jit_view(p), jnp.asarray(lams, jnp.float32),
+                          steps, use_kernel)
+    return [_report(p, D, pen, iters=steps)
+            for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
 
 
 # ---------------------------------------------------------------------------
@@ -226,83 +354,134 @@ def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
 def cr2_reference_fleet(p: FleetProblem, cap_frac: float) -> np.ndarray:
     """C_i under a hypothetical equal power cap at cap_frac·E (vectorized
     version of policies.cr2_reference_losses)."""
-    L = cap_frac * p.entitlement[:, None]
-    d_cap = np.maximum(p.usage - L, 0.0)
+    L = cap_frac * np.asarray(p.entitlement)[:, None]
+    d_cap = np.maximum(np.asarray(p.usage) - L, 0.0)
     return np.asarray(fleet_penalties(p, jnp.asarray(d_cap)))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
+def _cr2_run(p: FleetProblem, refs, steps: int, outer: int,
+             use_kernel: bool):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    car_norm = 100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum()
+    scale = jnp.maximum(refs.mean(), 1e-3)
+
+    def objective(D: Array, _) -> Array:
+        return -car_norm * (D @ mci).sum()
+
+    def eq(D: Array, _) -> Array:
+        return (fleet_penalties(p, D, use_kernel) - refs) / scale
+
+    project = _projection(p, lo, hi)
+    step_scale = jnp.maximum(hi - lo, 1e-6).mean()
+    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                       eq_residual=eq, step_scale=step_scale,
+                       cfg=EngineConfig(inner_steps=steps, outer_steps=outer,
+                                        mu0=10.0, mu_growth=2.0))
+    return D, fleet_penalties(p, D, use_kernel)
 
 
 def solve_cr2_fleet(p: FleetProblem, cap_frac: float = 0.78,
                     steps: int = 400, outer: int = 6,
-                    use_kernel: bool = False) -> FleetSolveResult:
+                    use_kernel: bool | None = None) -> FleetSolveResult:
     """min −carbon s.t. C_i(d_i) = C_i(cap%) ∀i — augmented Lagrangian with
     one multiplier per workload, everything vectorized over the fleet."""
+    use_kernel = resolve_use_kernel(use_kernel)
     refs = jnp.asarray(cr2_reference_fleet(p, cap_frac))
-    scale = jnp.maximum(refs.mean(), 1e-3)
+    D, pens = _cr2_run(_jit_view(p), refs, steps, outer, use_kernel)
+    return _report(p, np.asarray(D), np.asarray(pens), iters=steps * outer)
+
+
+# ---------------------------------------------------------------------------
+# CR3 at fleet scale — decentralized taxes and rebates (Eqs. 5–8)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
+def _cr3_best_response(p: FleetProblem, rho, tax_frac, steps: int,
+                       outer: int, use_kernel: bool):
+    """All W selfish problems in one AL solve. Each workload i minimizes its
+    own penalty s.t. the peak-allowance inequality (Eq. 5/8)
+
+        max_t (U_i − d_i) ≤ E_i − T_i + ρ·⟨mci, d_i⟩,   T_i = tax_frac·E_i
+
+    (smooth max as in `policies.cr3_workload_spec`). Objective, residual and
+    projection are all row-separable, so this single (W, T) engine call IS
+    the vmapped per-workload best response — one XLA call per round.
+
+    Numerics, validated against the per-workload SLSQP reference:
+      * tiny quadratic regularizer — a selfish workload takes the *minimal*
+        adjustment satisfying its allowance; the regularizer breaks the
+        zero-penalty plateau of batch models toward that minimal response
+        (without it, any deep-feasible point is an equally 'optimal' best
+        response with wildly overpaid rebates).
+      * day-tangent gradient projection (see engine.al_minimize docs).
+      * gentle μ schedule: the KKT multipliers here are O(1e-3), so a stiff
+        wall (μ≫1) just makes projected Adam bounce off the boundary.
+    """
+    lo, hi = _bounds(p)
     usage = jnp.asarray(p.usage)
-    E = p.entitlement[:, None]
-    hi = jnp.asarray(np.minimum(p.max_curtail_frac * E, p.usage))
-    lo = jnp.asarray(np.where(p.is_batch[:, None], -(E - p.usage), 0.0))
-    carbon_base = float((p.usage.sum(0) * p.mci).sum())
+    E = jnp.asarray(p.entitlement)
     mci = jnp.asarray(p.mci)
-    is_batch_f = jnp.asarray(p.is_batch, jnp.float32)
-    W, T = p.W, p.T
-    n_days = T // p.day_hours
-    car_norm = 100.0 / carbon_base
+    tau = 0.02 * E
 
-    def penalties(D):
-        return fleet_penalties(p, D, use_kernel)
+    def objective(D: Array, hyper) -> Array:
+        reg = 1e-3 * ((D / E[:, None]) ** 2).mean()
+        return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
 
-    def project(D):
-        D = jnp.clip(D, lo, hi)
-        for _ in range(3):
-            Dd = D.reshape(W, n_days, p.day_hours)
-            mean = Dd.mean(axis=-1, keepdims=True)
-            Dd = jnp.where(is_batch_f[:, None, None] > 0.5, Dd - mean, Dd)
-            D = jnp.clip(Dd.reshape(W, T), lo, hi)
-        return D
+    def ineq(D: Array, hyper) -> Array:
+        rho_, tax_ = hyper
+        rebate = rho_ * (D @ mci)
+        peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None], axis=1)
+        return ((1.0 - tax_) * E + rebate - peak) / E
 
-    step_scale = float(np.maximum(np.asarray(hi - lo), 1e-6).mean())
+    W, T = p.usage.shape
+    n_days = max(1, T // p.day_hours)
+    span = n_days * p.day_hours
+    is_batch = jnp.asarray(p.is_batch)[:, None, None]
 
-    @jax.jit
-    def run(D0):
-        def lagrangian(D, lam, mu):
-            h = (penalties(D) - refs) / scale
-            return (-car_norm * (D @ mci).sum() + lam @ h
-                    + 0.5 * mu * (h @ h))
+    def day_tangent(g: Array) -> Array:
+        Gd = g[:, :span].reshape(W, n_days, p.day_hours)
+        Gd = jnp.where(is_batch, Gd - Gd.mean(axis=-1, keepdims=True), Gd)
+        return jnp.concatenate([Gd.reshape(W, span), g[:, span:]], axis=1)
 
-        grad = jax.grad(lagrangian)
+    project = _projection(p, lo, hi)
+    step_scale = jnp.maximum(hi - lo, 1e-6).mean(axis=1, keepdims=True)
+    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                       hyper=(rho, tax_frac), ineq_residual=ineq,
+                       step_scale=step_scale, grad_transform=day_tangent,
+                       cfg=EngineConfig(inner_steps=steps, outer_steps=outer,
+                                        lr=0.005, mu0=0.01, mu_growth=2.0,
+                                        beta2=0.99))
+    return D, fleet_penalties(p, D, use_kernel)
 
-        def outer_body(carry, _):
-            D, lam, mu = carry
 
-            def inner(c, _):
-                D, m, v, t = c
-                g = grad(D, lam, mu)
-                t = t + 1
-                m = 0.9 * m + 0.1 * g
-                v = 0.999 * v + 0.001 * g * g
-                D = project(D - 0.05 * step_scale
-                            * (m / (1 - 0.9 ** t))
-                            / (jnp.sqrt(v / (1 - 0.999 ** t)) + 1e-8))
-                return (D, m, v, t), None
+def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
+                    tax_frac: float = 0.2, steps: int = 600, outer: int = 3,
+                    clearing_iters: int = 8,
+                    use_kernel: bool | None = None,
+                    ) -> tuple[FleetSolveResult, float]:
+    """Fleet-scale CR3: vmapped best responses + fiscal-balance clearing.
 
-            (D, _, _, _), _ = jax.lax.scan(
-                inner, (D, jnp.zeros_like(D), jnp.zeros_like(D), 0), None,
-                length=steps)
-            lam = lam + mu * (penalties(D) - refs) / scale
-            return (D, lam, mu * 2.0), None
-
-        (D, lam, _), _ = jax.lax.scan(
-            outer_body, (D0, jnp.zeros((W,)), jnp.asarray(10.0)), None,
-            length=outer)
-        return D
-
-    D = np.asarray(run(project(jnp.zeros((W, T)))))
-    car = float((D @ p.mci).sum())
-    pens = np.asarray(fleet_penalties(p, jnp.asarray(D)))
-    sums = D.reshape(W, n_days, p.day_hours).sum(-1)
-    viol = float(np.abs(sums[p.is_batch]).max()) if p.is_batch.any() else 0.0
-    return FleetSolveResult(
-        D=D, carbon_reduction_pct=100 * car / carbon_base,
-        total_penalty_pct=100 * float(pens.sum()) / float(p.entitlement.sum()),
-        iters=steps * outer, preservation_violation=viol)
+    The coordinator lowers the carbon price ρ until rebates are covered by
+    taxes (Eq. 6, `policies.cr3_fiscal_balance` semantics). Returns
+    (result, clearing ρ), mirroring `solver.solve_cr3`."""
+    use_kernel = resolve_use_kernel(use_kernel)
+    pj = _jit_view(p)
+    mci = np.asarray(p.mci)
+    collected = tax_frac * float(np.asarray(p.entitlement).sum())
+    rho_cur = float(rho)
+    D, pens = _cr3_best_response(pj, rho_cur, tax_frac, steps, outer,
+                                 use_kernel)
+    D = np.asarray(D)
+    rounds = 1
+    for _ in range(clearing_iters):
+        paid = rho_cur * float((D @ mci).sum())
+        if paid <= collected + 1e-9:
+            break
+        rho_cur *= max(0.5, 0.9 * collected / max(paid, 1e-9))
+        D, pens = _cr3_best_response(pj, rho_cur, tax_frac, steps, outer,
+                                     use_kernel)
+        D = np.asarray(D)
+        rounds += 1
+    return (_report(p, D, np.asarray(pens), iters=steps * outer * rounds),
+            rho_cur)

@@ -200,18 +200,25 @@ def cr1_spec(p: DRProblem, lam: float) -> PolicySpec:
 # ---------------------------------------------------------------------------
 # CR2 — Fair & Centralized (Eq. 4): min CF s.t. C_i(d_i) = C_i(cap%).
 # ---------------------------------------------------------------------------
-def cr2_reference_losses(p: DRProblem, cap_frac: float) -> np.ndarray:
+def cr2_reference_losses(p: DRProblem, cap_frac: float,
+                         upper: np.ndarray | None = None) -> np.ndarray:
     """C_i under a hypothetical equal power cap at cap_frac·E (the fairness
-    reference — CR2 'does not actually cap power')."""
+    reference — CR2 'does not actually cap power'). `upper` (optional,
+    (W, T)) clips the reference curtailments to a tightened box so the
+    equality targets stay attainable under the same bounds the solver
+    gets."""
     refs = []
-    for m in p.models:
+    for i, m in enumerate(p.models):
         d_cap = m.cap_curtailment(cap_frac)
+        if upper is not None:
+            d_cap = np.minimum(d_cap, upper[i])
         refs.append(float(m.penalty(jnp.asarray(d_cap), smooth=0.0)))
     return np.asarray(refs)
 
 
-def cr2_spec(p: DRProblem, cap_frac: float) -> PolicySpec:
-    refs = cr2_reference_losses(p, cap_frac)
+def cr2_spec(p: DRProblem, cap_frac: float,
+             upper: np.ndarray | None = None) -> PolicySpec:
+    refs = cr2_reference_losses(p, cap_frac, upper)
     scale = float(np.maximum(refs, 1e-3).mean())
     car_norm = 100.0 / p.total_carbon_baseline
 
@@ -223,7 +230,7 @@ def cr2_spec(p: DRProblem, cap_frac: float) -> PolicySpec:
 
     return PolicySpec(name=f"CR2(cap={cap_frac:g})", problem=p, objective=obj,
                       eq_constraints=(eq,),
-                      ineq_constraints=(_capacity_ineq(p),))
+                      ineq_constraints=(_capacity_ineq(p),), upper=upper)
 
 
 # ---------------------------------------------------------------------------

@@ -7,26 +7,32 @@ Two interchangeable backends consume a `PolicySpec`:
     Least Squares Programming"), with JAX-supplied exact gradients. This is
     the **paper-faithful reference**: fine for 4 workloads × 48 hours.
 
-  * `solve_adam` — beyond-paper fleet-scale solver: jit-compiled projected
+  * `solve_adam` — beyond-paper fleet-scale solver: a thin adapter over the
+    shared engine (`repro.core.engine.al_minimize`): jit-compiled projected
     Adam on an augmented Lagrangian. Box bounds and batch-preservation are
     handled by exact projection (both are cheap closed forms); equality /
     inequality constraints get multiplier + quadratic terms. One XLA call
     solves the whole problem; `vmap` over hyperparameters sweeps a Pareto
-    frontier in a single compile.
+    frontier in a single compile (see `fleet_solver.solve_cr1_fleet_sweep`).
 
 Both report final metrics with the *unsmoothed* models so numbers are
-comparable across solvers.
+comparable across solvers. With the vectorized `FleetProblem` stack (see
+`repro.core.fleet_solver`) carrying the production path, the SLSQP solver
+here is the *validation reference*: `FleetProblem.from_problem/to_problem`
+convert between the two representations so every fleet policy can be
+cross-checked against the paper's solver on small instances.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
+from repro.core.engine import EngineConfig, al_minimize
 from repro.core.policies import DRProblem, PolicySpec
 
 Array = jax.Array
@@ -122,7 +128,7 @@ def solve_slsqp(spec: PolicySpec, x0: np.ndarray | None = None,
                 "fun": lambda x: np.asarray(f(jnp.asarray(x))),
                 "jac": lambda x: np.asarray(j(jnp.asarray(x)))}
 
-    with jax.enable_x64(True):
+    with enable_x64(True):
         obj_grad = jax.jit(jax.value_and_grad(
             lambda x: spec.objective(x.reshape(W, T))))
 
@@ -193,72 +199,32 @@ def solve_adam(spec: PolicySpec, cfg: AdamALConfig = AdamALConfig(),
                 D = jnp.clip(D, lo, hi)
         return D
 
-    def eq_vec(D: Array) -> Array:
-        if not eqs:
-            return jnp.zeros((0,), jnp.float32)
-        return jnp.concatenate([jnp.atleast_1d(h(D)).ravel() for h in eqs])
+    eq_residual = None
+    if eqs:
+        def eq_residual(D: Array, _) -> Array:
+            return jnp.concatenate([jnp.atleast_1d(h(D)).ravel()
+                                    for h in eqs])
 
-    def ineq_vec(D: Array) -> Array:
-        if not ineqs:
-            return jnp.zeros((0,), jnp.float32)
-        return jnp.concatenate([jnp.atleast_1d(g(D)).ravel() for g in ineqs])
+    ineq_residual = None
+    if ineqs:
+        def ineq_residual(D: Array, _) -> Array:
+            return jnp.concatenate([jnp.atleast_1d(g(D)).ravel()
+                                    for g in ineqs])
 
-    n_eq = int(np.asarray(eq_vec(jnp.zeros((W, T)))).shape[0])
-    n_in = int(np.asarray(ineq_vec(jnp.zeros((W, T)))).shape[0])
+    def objective(D: Array, _) -> Array:
+        return spec.objective(D)
 
-    def lagrangian(D: Array, lam_eq: Array, lam_in: Array, mu: Array) -> Array:
-        val = spec.objective(D)
-        h = eq_vec(D)
-        if n_eq:
-            val = val + lam_eq @ h + 0.5 * mu * (h @ h)
-        g = ineq_vec(D)
-        if n_in:
-            # AL for g(D) >= 0:  (mu/2)·[max(0, lam/mu − g)² − (lam/mu)²]
-            s = jnp.maximum(lam_in / mu - g, 0.0)
-            val = val + 0.5 * mu * (s @ s - (lam_in / mu) @ (lam_in / mu))
-        return val
-
-    grad_fn = jax.grad(lagrangian)
-
-    @jax.jit
-    def run(D0: Array) -> tuple[Array, Array]:
-        lam_eq = jnp.zeros((n_eq,), jnp.float32)
-        lam_in = jnp.zeros((n_in,), jnp.float32)
-
-        def outer(carry, _):
-            D, lam_eq, lam_in, mu = carry
-
-            def inner(c, _):
-                D, m, v, t = c
-                g = grad_fn(D, lam_eq, lam_in, mu)
-                t = t + 1
-                m = 0.9 * m + 0.1 * g
-                v = 0.999 * v + 0.001 * g * g
-                mhat = m / (1 - 0.9 ** t)
-                vhat = v / (1 - 0.999 ** t)
-                D = project(D - cfg.lr * scale * mhat /
-                            (jnp.sqrt(vhat) + 1e-8))
-                return (D, m, v, t), None
-
-            (D, _, _, _), _ = jax.lax.scan(
-                inner, (D, jnp.zeros_like(D), jnp.zeros_like(D), 0),
-                None, length=cfg.inner_steps)
-            lam_eq = lam_eq + mu * eq_vec(D) if n_eq else lam_eq
-            lam_in = (jnp.maximum(lam_in - mu * ineq_vec(D), 0.0)
-                      if n_in else lam_in)
-            mu = mu * cfg.mu_growth
-            return (D, lam_eq, lam_in, mu), None
-
-        (D, lam_eq, lam_in, _), _ = jax.lax.scan(
-            outer, (D0, lam_eq, lam_in, jnp.asarray(cfg.mu0, jnp.float32)),
-            None, length=cfg.outer_steps)
-        return D, lam_eq
+    run = jax.jit(lambda D0: al_minimize(
+        objective, project, D0,
+        eq_residual=eq_residual, ineq_residual=ineq_residual,
+        step_scale=scale,
+        cfg=EngineConfig(inner_steps=cfg.inner_steps,
+                         outer_steps=cfg.outer_steps, lr=cfg.lr,
+                         mu0=cfg.mu0, mu_growth=cfg.mu_growth))[0])
 
     D0 = (jnp.zeros((W, T), jnp.float32) if x0 is None
           else jnp.asarray(x0, jnp.float32))
-    D0 = project(D0)
-    D, _ = run(D0)
-    D = np.asarray(D, np.float64)
+    D = np.asarray(run(D0), np.float64)
     return evaluate(spec, D, solver="adam-al",
                     nit=cfg.inner_steps * cfg.outer_steps)
 

@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.dispatch import tpu_compiler_params
 
 
 def _features_kernel(d_ref, u_ref, j_ref, o_ref):
@@ -35,11 +37,15 @@ def _features_kernel(d_ref, u_ref, j_ref, o_ref):
 
 
 def dr_features_pallas(d, usage, jobs, block_w: int = 128,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """d/usage/jobs: (W, T) -> (W, 4) feature matrix.
 
     Padding: W to block_w (zero rows are harmless — usage is padded with
-    ones to avoid 0/0)."""
+    ones to avoid 0/0). `interpret=None` resolves backend-aware via
+    `repro.kernels.dispatch.interpret_default`."""
+    if interpret is None:
+        from repro.kernels.dispatch import interpret_default
+        interpret = interpret_default()
     W, T = d.shape
     pw = (-W) % block_w
     dp = jnp.pad(d, ((0, pw), (0, 0)))
@@ -52,7 +58,7 @@ def dr_features_pallas(d, usage, jobs, block_w: int = 128,
         in_specs=[pl.BlockSpec((block_w, T), lambda i: (i, 0))] * 3,
         out_specs=pl.BlockSpec((block_w, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((dp.shape[0], 4), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(dp, up, jp)

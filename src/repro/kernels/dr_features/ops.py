@@ -1,14 +1,65 @@
-"""jit'd wrapper for the fleet DR feature kernel."""
+"""jit'd wrapper for the fleet DR feature kernel (backend-aware dispatch).
+
+The wrapper carries an analytic custom VJP: the solver hot loop
+differentiates penalties through these features every Adam step, and
+`pallas_call` has no registered transpose. The backward pass is closed
+form — each feature is Σ_t max(cumsum(r), 0) for a per-hour rate r, so
+∂/∂d is a reversed cumulative sum of the active-hinge indicator times
+∂r/∂d. Gradients flow to `d` only (usage/jobs are problem constants in
+every solver path).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels.dispatch import interpret_default
 from repro.kernels.dr_features.kernel import dr_features_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def dr_features(d, usage, jobs, interpret: bool = True):
-    """(W, T) fleet adjustment/usage/job matrices -> (W, 4) features."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dr_features(interpret: bool, d, usage, jobs):
     return dr_features_pallas(d, usage, jobs, interpret=interpret)
+
+
+def _fwd(interpret, d, usage, jobs):
+    return _dr_features(interpret, d, usage, jobs), (d, usage, jobs)
+
+
+def _revcum(x):
+    return jnp.flip(jnp.cumsum(jnp.flip(x, axis=1), axis=1), axis=1)
+
+
+def _bwd(interpret, res, ct):
+    d, usage, jobs = res
+    ju = jobs / usage
+    # Active-hinge indicators for the three cumulative features.
+    a0 = (jnp.cumsum(ju * d, axis=1) > 0).astype(d.dtype)          # wait_jobs
+    a1 = (jnp.cumsum(d, axis=1) > 0).astype(d.dtype)               # wait_power
+    a2 = (jnp.cumsum(ju * d * jnp.abs(d), axis=1) > 0).astype(d.dtype)
+    d_ct = (ct[:, 0:1] * ju * _revcum(a0)
+            + ct[:, 1:2] * _revcum(a1)
+            + ct[:, 2:3] * 2.0 * ju * jnp.abs(d) * _revcum(a2)
+            + ct[:, 3:4] * ju * (d > 0).astype(d.dtype))
+    return d_ct, jnp.zeros_like(usage), jnp.zeros_like(jobs)
+
+
+_dr_features.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dr_features_jit(d, usage, jobs, interpret: bool):
+    return _dr_features(interpret, d, usage, jobs)
+
+
+def dr_features(d, usage, jobs, interpret: bool | None = None):
+    """(W, T) fleet adjustment/usage/job matrices -> (W, 4) features.
+
+    `interpret=None` auto-selects: compiled kernel on TPU, interpret
+    fallback on CPU (override with REPRO_PALLAS_INTERPRET). Resolved
+    *outside* the jit boundary so a changed env override is not masked by
+    a stale trace cached under the `None` key.
+    """
+    return _dr_features_jit(d, usage, jobs, interpret_default(interpret))

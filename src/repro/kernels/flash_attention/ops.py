@@ -11,26 +11,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import interpret_default
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool | None = None):
-    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh/Dv) -> (B, Sq, H, Dv)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+def _flash_attention_jit(q, k, v, causal: bool, block_q: int, block_k: int,
+                         interpret: bool):
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = flash_attention_pallas(qt, kt, vt, causal=causal, block_q=block_q,
                                  block_k=block_k, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh/Dv) -> (B, Sq, H, Dv).
+
+    interpret resolved outside jit so env overrides aren't masked by a
+    trace cached under the `None` key."""
+    return _flash_attention_jit(q, k, v, causal, block_q, block_k,
+                                interpret_default(interpret))

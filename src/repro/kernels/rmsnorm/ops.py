@@ -5,12 +5,19 @@ import functools
 
 import jax
 
+from repro.kernels.dispatch import interpret_default
 from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = True):
+def _rmsnorm_jit(x, scale, eps: float, interpret: bool):
     shape = x.shape
     flat = x.reshape(-1, shape[-1])
     out = rmsnorm_pallas(flat, scale, eps=eps, interpret=interpret)
     return out.reshape(shape)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool | None = None):
+    # interpret resolved outside jit so env overrides aren't masked by a
+    # trace cached under the `None` key.
+    return _rmsnorm_jit(x, scale, eps, interpret_default(interpret))

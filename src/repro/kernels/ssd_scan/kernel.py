@@ -16,7 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.dispatch import tpu_compiler_params
 
 
 def _ssd_scan_kernel(states_ref, decay_ref, hprev_ref, hlast_ref, h_ref):
@@ -59,7 +61,7 @@ def ssd_scan_pallas(states, chunk_decay, interpret: bool = True):
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(states, dec)

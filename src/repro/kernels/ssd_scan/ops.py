@@ -5,9 +5,16 @@ import functools
 
 import jax
 
+from repro.kernels.dispatch import interpret_default
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ssd_scan(states, chunk_decay, interpret: bool = True):
+def _ssd_scan_jit(states, chunk_decay, interpret: bool):
     return ssd_scan_pallas(states, chunk_decay, interpret=interpret)
+
+
+def ssd_scan(states, chunk_decay, interpret: bool | None = None):
+    # interpret resolved outside jit so env overrides aren't masked by a
+    # trace cached under the `None` key.
+    return _ssd_scan_jit(states, chunk_decay, interpret_default(interpret))

@@ -96,6 +96,9 @@ class CheckpointManager:
                       if p.is_dir() and not p.name.endswith(".tmp"))
 
     def latest_step(self) -> int | None:
+        # Flush any in-flight async save: a restore after `save()` returned
+        # must see that checkpoint (the recovery path depends on it).
+        self.wait()
         steps = self.all_steps()
         return steps[-1] if steps else None
 

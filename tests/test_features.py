@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from hypothesis_compat import given, hnp, settings, st
 
 from repro.core import features as feat
 

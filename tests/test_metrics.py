@@ -1,8 +1,7 @@
 """Fairness metric tests (paper §VI-E)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from hypothesis_compat import given, hnp, settings, st
 
 from repro.core.metrics import (box_stats, capacity_scaled_entropy,
                                 pareto_frontier)

@@ -138,8 +138,12 @@ e = init_error(g)
 def f(g, e):
     out, new_e = compressed_psum_pod(g, e, "pod")
     return out, new_e
-fn = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                   out_specs=(P("pod"), P("pod")))
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+fn = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+               out_specs=(P("pod"), P("pod")))
 out, new_e = fn(g, e)
 exact = (np.asarray(g["w"])[0] + np.asarray(g["w"])[1]) / 2
 got = np.asarray(out["w"])
