@@ -1,6 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verify (ROADMAP.md), runnable from a fresh checkout:
-#   pip install -r requirements.txt && scripts/ci.sh
+# CI entry, runnable from a fresh checkout:
+#   pip install -r requirements.txt && scripts/ci.sh          # fast lane
+#   scripts/ci.sh --full                                      # tier-1 suite
+#
+# The fast lane deselects @pytest.mark.slow (the long solver-convergence
+# and end-to-end tests, ~8 min on CPU) and finishes in a couple of
+# minutes. The tier-1 verify documented in ROADMAP.md is the --full lane:
+#   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+lane=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+  shift
+  lane=()
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q ${lane[@]+"${lane[@]}"} "$@"

@@ -12,6 +12,11 @@ shape statistics:
     peak by 2050"), with some states reaching zero-MCI periods.
 
 All series are hourly, in kg CO2 / MWh, deterministic given a seed.
+
+For *online* operation, `ForecastStream` turns any realized series into a
+sequence of revised day-ahead forecasts (persistence + lead-time noise, or
+replayed snapshots) — the input signal of the rolling-horizon solver in
+`repro.core.streaming`.
 """
 from __future__ import annotations
 
@@ -104,6 +109,81 @@ def projection(year: int, state: str = "CA", hours: int = 48,
         peak = CAISO_2021_PEAK * 0.85
     mci = _duck_curve(hours, peak, trough, solar_width=5.0, seed=seed + idx)
     return CarbonSignal(mci=mci, label=f"cambium-{year}-{state}-synthetic")
+
+
+# ---------------------------------------------------------------------------
+# Streaming forecasts (rolling-horizon operation, ROADMAP "Streaming MCI")
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ForecastStream:
+    """Revised MCI forecasts over a sliding horizon — the online DR signal.
+
+    At tick `t` (one tick = one hour), `forecast(t)` returns the current
+    `(horizon,)` day-ahead MCI estimate for hours `[t, t + horizon)`;
+    `realized(t)` is the actual MCI of hour `t`, known only once it has
+    elapsed. Two modes:
+
+      * revision model (default): persistence + lead-time noise over the
+        `actual` series — the hour about to be committed is known almost
+        exactly, while hours `k` ahead carry multiplicative error growing
+        as `revision_sigma * sqrt(k)` (forecast skill decays with lead
+        time, the shape WattTime/Cambium day-ahead products exhibit).
+        Deterministic given `seed`: re-asking for tick t re-issues the
+        *same* revised forecast.
+      * replay (`replay=(n_ticks, horizon)` array): serve pre-recorded
+        forecast snapshots verbatim — for backtesting against logged
+        forecast revisions.
+    """
+
+    actual: np.ndarray                 # (n_hours,) realized MCI
+    horizon: int = 48                  # forecast window length T
+    revision_sigma: float = 0.03       # per-sqrt-hour multiplicative error
+    seed: int = 0
+    replay: np.ndarray | None = None   # (n_ticks, horizon) snapshots
+
+    def __post_init__(self):
+        if self.replay is not None:
+            r = np.asarray(self.replay)
+            if r.ndim != 2 or r.shape[1] != self.horizon:
+                raise ValueError(
+                    f"replay must be (n_ticks, horizon={self.horizon}); "
+                    f"got {r.shape}")
+
+    @property
+    def n_ticks(self) -> int:
+        """Ticks for which a full horizon (and its realized hour) exist."""
+        if self.replay is not None:
+            return int(np.asarray(self.replay).shape[0])
+        return max(0, int(self.actual.shape[0]) - self.horizon + 1)
+
+    def forecast(self, tick: int) -> np.ndarray:
+        """(horizon,) MCI forecast issued at `tick` for [tick, tick+T)."""
+        if not 0 <= tick < self.n_ticks:
+            raise IndexError(f"tick {tick} out of range [0, {self.n_ticks})")
+        if self.replay is not None:
+            return np.asarray(self.replay[tick], dtype=float).copy()
+        window = np.asarray(self.actual[tick:tick + self.horizon], float)
+        rng = np.random.default_rng((self.seed, tick))
+        # sqrt-lead error growth with a small nowcast floor: even the hour
+        # being committed is a forecast, not a meter reading.
+        lead = np.arange(self.horizon, dtype=float)
+        err = (self.revision_sigma * np.sqrt(lead + 0.25)
+               * rng.standard_normal(self.horizon))
+        return np.clip(window * (1.0 + err), 0.0, None)
+
+    def realized(self, tick: int) -> float:
+        """Actual MCI of hour `tick` (available once the hour elapses)."""
+        return float(self.actual[tick])
+
+    @classmethod
+    def caiso(cls, n_ticks: int, horizon: int = 48,
+              revision_sigma: float = 0.03, seed: int = 0,
+              ) -> "ForecastStream":
+        """Stream over a CAISO-2021-shaped actual series long enough for
+        `n_ticks` rolling solves of `horizon` hours each."""
+        sig = caiso_2021(hours=n_ticks + horizon, seed=seed)
+        return cls(actual=sig.mci, horizon=horizon,
+                   revision_sigma=revision_sigma, seed=seed)
 
 
 def carbon_footprint_delta(mci: np.ndarray, adjustments: np.ndarray) -> float:

@@ -21,6 +21,16 @@ augmented Lagrangian. This module is the single implementation:
 `al_minimize` is deliberately *not* jitted here: adapters wrap it in their
 own `jax.jit` entry points (with policy knobs as traced `hyper` arguments),
 so repeated solves of the same-shaped problem reuse one trace.
+
+Warm starts (rolling-horizon streaming): `al_minimize` accepts an optional
+`init: EngineState` — the `(x, lam_eq, lam_in, mu)` carry of a previous
+solve — and always returns the final `EngineState` in `aux["state"]`.
+`EngineState` is a registered pytree whose leaves are all arrays, so a
+warm re-solve is *the same trace* as a cold solve: cold is just
+`EngineState.cold(...)` (zeros) flowing through the identical jitted entry
+point. A rolling-horizon controller shifts `state.x` along the time axis,
+keeps the multipliers (they price per-workload constraints, not hours),
+and re-solves with far fewer inner steps than a cold solve needs.
 """
 from __future__ import annotations
 
@@ -45,9 +55,50 @@ class EngineConfig:
     lr: float = 0.05           # step size, scaled by the caller's step_scale
     mu0: float = 10.0          # initial quadratic constraint weight
     mu_growth: float = 2.0     # mu multiplier per outer round
+    mu_max: float = 1e6        # cap — keeps chained warm re-solves finite
     beta1: float = 0.9
     beta2: float = 0.999
     eps: float = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Reusable solver carry: primal point + AL multipliers + penalty weight.
+
+    A pure-array pytree, so adapters jit over it directly and a warm
+    re-solve shares the cold solve's trace. Obtain one from
+    `aux["state"]` of a previous `al_minimize`, or build a cold start
+    with `EngineState.cold`.
+    """
+
+    x: Array           # primal iterate (the previous solution)
+    lam_eq: Array      # (n_eq,) equality multipliers
+    lam_in: Array      # (n_in,) inequality multipliers (>= 0)
+    mu: Array          # scalar quadratic penalty weight
+
+    @classmethod
+    def cold(cls, x0: Array, n_eq: int = 0, n_in: int = 0,
+             mu0: float = EngineConfig.mu0) -> "EngineState":
+        """Zero-multiplier start — the classic cold solve."""
+        x0 = jnp.asarray(x0)
+        return cls(x=x0, lam_eq=jnp.zeros((n_eq,), x0.dtype),
+                   lam_in=jnp.zeros((n_in,), x0.dtype),
+                   mu=jnp.asarray(mu0, x0.dtype))
+
+    def shifted(self, hours: int = 1, fill: float = 0.0) -> "EngineState":
+        """Roll the primal along its trailing (time) axis by `hours` —
+        the rolling-horizon warm start. Vacated trailing hours get
+        `fill`; multipliers and mu are carried unchanged (they attach to
+        workloads/constraints, not to wall-clock hours)."""
+        x = jnp.roll(self.x, -hours, axis=-1)
+        if hours > 0:
+            x = x.at[..., -hours:].set(fill)
+        return dataclasses.replace(self, x=x)
+
+
+jax.tree_util.register_dataclass(
+    EngineState, data_fields=["x", "lam_eq", "lam_in", "mu"],
+    meta_fields=[])
 
 
 def _residual_dim(fn: Residual | None, x0: Array, hyper: Any) -> int:
@@ -66,13 +117,22 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
                 step_scale: Array | float = 1.0,
                 grad_transform: Callable[[Array], Array] | None = None,
                 cfg: EngineConfig = EngineConfig(),
+                init: EngineState | None = None,
                 ) -> tuple[Array, dict[str, Array]]:
     """Minimize objective(x, hyper) s.t. eq(x)=0, ineq(x)>=0, x = project(x).
 
     Pure and traceable: safe to call under `jit`/`vmap`/`grad`-of-solution.
     `hyper` is an arbitrary pytree threaded to the callbacks (traced, so
     sweeping it does not retrace). Returns (x, aux) with the final
-    multipliers in aux.
+    multipliers in aux, plus `aux["state"]`: an `EngineState` to warm-start
+    a subsequent solve of the same-shaped problem.
+
+    `init` (optional) warm-starts the whole carry — primal iterate AND
+    multipliers AND mu — from a previous solve's `aux["state"]`. When given,
+    `x0` is ignored and `init.x` is projected instead; `init.lam_eq`/
+    `init.lam_in` must have the residual dimensions of *this* problem.
+    Because `EngineState` leaves are plain arrays, warm and cold solves
+    share one trace under the caller's `jit`.
 
     `grad_transform` (optional) preconditions the raw gradient before the
     Adam update — e.g. projection onto the tangent space of an equality
@@ -128,13 +188,19 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
             lam_eq = lam_eq + mu * eq_vec(x)
         if n_in:
             lam_in = jnp.maximum(lam_in - mu * ineq_vec(x), 0.0)
-        return (x, lam_eq, lam_in, mu * cfg.mu_growth), None
+        return (x, lam_eq, lam_in,
+                jnp.minimum(mu * cfg.mu_growth, cfg.mu_max)), None
 
-    carry0 = (project(x0), jnp.zeros((n_eq,), x0.dtype),
-              jnp.zeros((n_in,), x0.dtype), jnp.asarray(cfg.mu0, x0.dtype))
+    if init is None:
+        init = EngineState.cold(x0, n_eq, n_in, cfg.mu0)
+    carry0 = (project(init.x), init.lam_eq.astype(init.x.dtype),
+              init.lam_in.astype(init.x.dtype),
+              jnp.asarray(init.mu, init.x.dtype))
     (x, lam_eq, lam_in, mu), _ = jax.lax.scan(
         outer_body, carry0, None, length=cfg.outer_steps)
-    return x, {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu}
+    return x, {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu,
+               "state": EngineState(x=x, lam_eq=lam_eq, lam_in=lam_in,
+                                    mu=mu)}
 
 
 def al_minimize_batched(objective: Objective,

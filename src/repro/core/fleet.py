@@ -18,7 +18,7 @@ from typing import Literal, Sequence
 import numpy as np
 
 from repro.core import penalty as pen
-from repro.core.carbon import CarbonSignal
+from repro.core.carbon import CarbonSignal, ForecastStream
 from repro.core.policies import DRProblem, cr1_spec, cr2_spec
 from repro.core.solver import SolveResult, solve_adam, solve_slsqp
 from repro.power.model import JobPowerModel
@@ -59,8 +59,13 @@ def _penalty_model(job: FleetJob, hours: int,
                    templates: dict[str, pen.PenaltyModel],
                    ) -> pen.PenaltyModel:
     usage = _usage_trace(job, hours)
-    headroom = 1.0 / max(job.power.dynamic_fraction + (1.0 - 1.0), 0.5)
-    entitlement = float(usage.max() * 1.15)
+    # Entitlement headroom above peak draw scales with the job's *static*
+    # power share: a mostly-static job (low dynamic_fraction) cannot shed
+    # load on request, so its NP contract books the full 15% cushion; a
+    # fully dynamic job can ride out grid events by throttling and books
+    # half that.
+    headroom = 1.0 / max(job.power.dynamic_fraction, 0.5)
+    entitlement = float(usage.max() * (1.0 + 0.075 * headroom))
     if job.role == "serve":
         base = templates["RTS1"]
         return dataclasses.replace(base, name=job.name, usage=usage,
@@ -86,22 +91,41 @@ class FleetCoordinator:
         self.cap_frac = cap_frac
         self.solver = solver
 
+    def _models(self, hours: int) -> tuple[pen.PenaltyModel, ...]:
+        from repro.core.fleetcache import cached_paper_fleet
+        templates = cached_paper_fleet(hours=hours)
+        return tuple(_penalty_model(j, hours, templates)
+                     for j in self.jobs)
+
+    def _dynamic_cap(self, usage: np.ndarray) -> np.ndarray:
+        """(W, T) realizable curtailment cap: a job can only shed its
+        *dynamic* power by throttling — cuts past that saturate at the
+        idle floor (throttle 0, i.e. killing the job for the hour)."""
+        dyn = np.asarray([j.power.dynamic_fraction for j in self.jobs])
+        return 0.95 * dyn[:, None] * np.asarray(usage)
+
+    @staticmethod
+    def _schedule(job: FleetJob, cuts: np.ndarray,
+                  usage: np.ndarray) -> ThrottleSchedule:
+        """Hourly throttles enforcing `cuts` (NP) against `usage` (NP)."""
+        cut_frac = np.clip(np.asarray(cuts) / np.maximum(usage, 1e-9),
+                           -1, 1)
+        throttle = np.asarray(
+            [job.power.throttle_for_power_cut(max(c, 0.0))
+             for c in cut_frac])
+        return ThrottleSchedule(name=job.name, throttle=throttle,
+                                power_cut_np=np.asarray(cuts))
+
     def plan(self) -> tuple[dict[str, ThrottleSchedule], SolveResult]:
         """Solve the DR problem and emit per-job throttle schedules."""
         hours = self.signal.hours
-        from repro.core.fleetcache import cached_paper_fleet
-        templates = cached_paper_fleet(hours=hours)
-        models = tuple(_penalty_model(j, hours, templates)
-                       for j in self.jobs)
+        models = self._models(hours)
         problem = DRProblem(models=models, mci=self.signal.mci)
-        # A job can only shed its *dynamic* power by throttling — cuts past
-        # that saturate at the idle floor (throttle 0, i.e. killing the job
-        # for the hour). Tighten the box so plans stay realizable; CR2's
+        # Tighten the box to the realizable (dynamic-range) cap; CR2's
         # fairness targets are computed under the same tightened box so its
         # penalty-equality constraints remain attainable.
-        dyn = np.asarray([j.power.dynamic_fraction for j in self.jobs])
         upper = np.minimum(problem.bounds()[1],
-                           0.95 * dyn[:, None] * problem.usage)
+                           self._dynamic_cap(problem.usage))
         spec = (cr2_spec(problem, self.cap_frac, upper=upper)
                 if self.policy == "cr2"
                 else dataclasses.replace(cr1_spec(problem, self.lam),
@@ -109,13 +133,48 @@ class FleetCoordinator:
         use_slsqp = (self.solver == "slsqp"
                      or (self.solver == "auto" and len(self.jobs) <= 8))
         result = (solve_slsqp(spec) if use_slsqp else solve_adam(spec))
-        schedules: dict[str, ThrottleSchedule] = {}
-        for i, job in enumerate(self.jobs):
-            usage = problem.usage[i]
-            cut_frac = np.clip(result.D[i] / np.maximum(usage, 1e-9), -1, 1)
-            throttle = np.asarray(
-                [job.power.throttle_for_power_cut(max(c, 0.0))
-                 for c in cut_frac])
-            schedules[job.name] = ThrottleSchedule(
-                name=job.name, throttle=throttle, power_cut_np=result.D[i])
+        schedules = {
+            job.name: self._schedule(job, result.D[i], problem.usage[i])
+            for i, job in enumerate(self.jobs)}
         return schedules, result
+
+    def plan_streaming(self, n_ticks: int = 24,
+                       stream: ForecastStream | None = None,
+                       revision_sigma: float = 0.03, seed: int = 0,
+                       cold_steps: int = 600, warm_steps: int = 150):
+        """Online operation: rolling-horizon re-solves as forecasts revise.
+
+        Instead of one day-ahead plan, run `n_ticks` hourly re-solves
+        (warm-started — see `repro.core.streaming`), committing one hour
+        each tick. Returns `(schedules, report)`: per-job throttle
+        schedules covering the `n_ticks` *committed* hours, and the
+        `StreamingReport` with realized-vs-forecast carbon accounting.
+
+        `stream` defaults to a revision-model stream whose realized series
+        periodically extends this coordinator's carbon signal. As in
+        `plan`, the solve box is tightened to each job's realizable
+        dynamic-power range (`FleetProblem.upper`), so committed cuts are
+        deliverable and the carbon ledger is honest."""
+        from repro.core.fleet_solver import from_models
+        from repro.core.streaming import RollingHorizonSolver
+        hours = self.signal.hours
+        fp = from_models(self._models(hours), self.signal.mci)
+        fp = dataclasses.replace(fp, upper=self._dynamic_cap(fp.usage))
+        if stream is None:
+            stream = ForecastStream(
+                actual=np.resize(self.signal.mci, n_ticks + hours),
+                horizon=hours, revision_sigma=revision_sigma, seed=seed)
+        policy = self.policy if self.policy in ("cr1", "cr2", "cr3") \
+            else "cr1"
+        solver = RollingHorizonSolver(
+            fp, stream, policy=policy, lam=self.lam,
+            cap_frac=self.cap_frac, cold_steps=cold_steps,
+            warm_steps=warm_steps)
+        report = solver.run(n_ticks)
+        usage = np.asarray(fp.usage)
+        ticks = np.arange(n_ticks) % hours
+        schedules = {
+            job.name: self._schedule(job, report.committed[i],
+                                     usage[i, ticks])
+            for i, job in enumerate(self.jobs)}
+        return schedules, report

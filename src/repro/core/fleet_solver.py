@@ -39,16 +39,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EngineConfig, al_minimize
+from repro.core.engine import EngineConfig, EngineState, al_minimize
 from repro.core.penalty import PenaltyModel
 
 Array = jax.Array
+
+# Initial AL penalty weights per policy — the single source for both the
+# adapters below and the streaming controller's per-tick μ reset
+# (`repro.core.streaming.RollingHorizonSolver`). CR3's gentle wall is
+# deliberate; see `_cr3_best_response`.
+CR1_MU0 = 10.0
+CR2_MU0 = 10.0
+CR3_MU0 = 0.01
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +75,11 @@ class FleetProblem:
     day_hours: int = 24
     max_curtail_frac: float = 0.5
     names: tuple[str, ...] | None = None
+    # Optional (W, T) operational cap on curtailment, intersected with the
+    # entitlement/usage box — e.g. the dynamic-power range a job can
+    # actually shed by throttling (FleetCoordinator realizability). Not a
+    # penalty-model property, so `to_problem` drops it.
+    upper: np.ndarray | None = None
 
     @property
     def W(self) -> int:
@@ -129,7 +143,7 @@ class FleetProblem:
 jax.tree_util.register_dataclass(
     FleetProblem,
     data_fields=["usage", "entitlement", "k", "rts_coeffs", "betas",
-                 "x2_kind", "jobs", "is_batch", "mci"],
+                 "x2_kind", "jobs", "is_batch", "mci", "upper"],
     meta_fields=["day_hours", "max_curtail_frac", "names"])
 
 
@@ -240,13 +254,23 @@ class FleetSolveResult:
     total_penalty_pct: float
     iters: int
     preservation_violation: float
+    # Reusable engine carry for warm-started re-solves (rolling horizon).
+    state: EngineState | None = None
+    # CR3 fiscal clearing (Eq. 6): did taxes cover rebates, and by how much
+    # were they short when they didn't? Always balanced for CR1/CR2.
+    balanced: bool = True
+    fiscal_deficit: float = 0.0
 
 
 def _bounds(p: FleetProblem) -> tuple[Array, Array]:
-    """Box bounds: curtail ≤ min(frac·E, U); batch may boost to U−d ≤ E."""
+    """Box bounds: curtail ≤ min(frac·E, U); batch may boost to U−d ≤ E.
+    An operational `p.upper` cap (e.g. throttleable dynamic power)
+    tightens the curtail side further."""
     usage = jnp.asarray(p.usage)
     E = jnp.asarray(p.entitlement)[:, None]
     hi = jnp.minimum(p.max_curtail_frac * E, usage)
+    if p.upper is not None:
+        hi = jnp.minimum(hi, jnp.asarray(p.upper))
     lo = jnp.where(jnp.asarray(p.is_batch)[:, None], -(E - usage), 0.0)
     return lo, hi
 
@@ -272,7 +296,8 @@ def _projection(p: FleetProblem, lo: Array, hi: Array):
 
 
 def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
-            iters: int) -> FleetSolveResult:
+            iters: int, state: EngineState | None = None,
+            **extra) -> FleetSolveResult:
     mci = np.asarray(p.mci)
     carbon_base = float((np.asarray(p.usage).sum(0) * mci).sum())
     car = float((D @ mci).sum())
@@ -285,7 +310,7 @@ def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
         D=D, carbon_reduction_pct=100 * car / carbon_base,
         total_penalty_pct=100 * float(pens.sum())
         / float(np.asarray(p.entitlement).sum()),
-        iters=iters, preservation_violation=viol)
+        iters=iters, preservation_violation=viol, state=state, **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -307,12 +332,13 @@ def _cr1_pieces(p: FleetProblem, use_kernel: bool):
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
-def _cr1_run(p: FleetProblem, lam, steps: int, use_kernel: bool):
+def _cr1_run(p: FleetProblem, lam, state0: EngineState, steps: int,
+             use_kernel: bool):
     objective, project, step_scale = _cr1_pieces(p, use_kernel)
-    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                       hyper=lam, step_scale=step_scale,
-                       cfg=EngineConfig(inner_steps=steps, outer_steps=1))
-    return D, fleet_penalties(p, D, use_kernel)
+    D, aux = al_minimize(objective, project, state0.x, hyper=lam,
+                         step_scale=step_scale, init=state0,
+                         cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
@@ -330,10 +356,17 @@ def _cr1_sweep(p: FleetProblem, lams, steps: int, use_kernel: bool):
 
 
 def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
-                    use_kernel: bool | None = None) -> FleetSolveResult:
+                    use_kernel: bool | None = None,
+                    warm: EngineState | None = None) -> FleetSolveResult:
+    """CR1 fleet solve. Pass `warm` (a previous result's `.state`, e.g.
+    shifted by `EngineState.shifted`) to warm-start: same jit trace as the
+    cold solve, typically needing far fewer `steps`."""
     use_kernel = resolve_use_kernel(use_kernel)
-    D, pens = _cr1_run(_jit_view(p), lam, steps, use_kernel)
-    return _report(p, np.asarray(D), np.asarray(pens), iters=steps)
+    if warm is None:
+        warm = EngineState.cold(jnp.zeros(p.usage.shape))
+    D, pens, state = _cr1_run(_jit_view(p), lam, warm, steps, use_kernel)
+    return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
+                   state=state)
 
 
 def solve_cr1_fleet_sweep(p: FleetProblem, lams: Sequence[float],
@@ -360,8 +393,8 @@ def cr2_reference_fleet(p: FleetProblem, cap_frac: float) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
-def _cr2_run(p: FleetProblem, refs, steps: int, outer: int,
-             use_kernel: bool):
+def _cr2_run(p: FleetProblem, refs, state0: EngineState, steps: int,
+             outer: int, use_kernel: bool):
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
     car_norm = 100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum()
@@ -375,30 +408,41 @@ def _cr2_run(p: FleetProblem, refs, steps: int, outer: int,
 
     project = _projection(p, lo, hi)
     step_scale = jnp.maximum(hi - lo, 1e-6).mean()
-    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                       eq_residual=eq, step_scale=step_scale,
-                       cfg=EngineConfig(inner_steps=steps, outer_steps=outer,
-                                        mu0=10.0, mu_growth=2.0))
-    return D, fleet_penalties(p, D, use_kernel)
+    D, aux = al_minimize(objective, project, state0.x,
+                         eq_residual=eq, step_scale=step_scale, init=state0,
+                         cfg=EngineConfig(inner_steps=steps,
+                                          outer_steps=outer,
+                                          mu0=CR2_MU0, mu_growth=2.0))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
 
 def solve_cr2_fleet(p: FleetProblem, cap_frac: float = 0.78,
                     steps: int = 400, outer: int = 6,
-                    use_kernel: bool | None = None) -> FleetSolveResult:
+                    use_kernel: bool | None = None,
+                    warm: EngineState | None = None) -> FleetSolveResult:
     """min −carbon s.t. C_i(d_i) = C_i(cap%) ∀i — augmented Lagrangian with
-    one multiplier per workload, everything vectorized over the fleet."""
+    one multiplier per workload, everything vectorized over the fleet.
+
+    `warm` carries a previous solve's primal AND its W equality multipliers
+    (the per-workload fairness prices), so a rolling re-solve converges in
+    a fraction of the cold outer/inner budget."""
     use_kernel = resolve_use_kernel(use_kernel)
     refs = jnp.asarray(cr2_reference_fleet(p, cap_frac))
-    D, pens = _cr2_run(_jit_view(p), refs, steps, outer, use_kernel)
-    return _report(p, np.asarray(D), np.asarray(pens), iters=steps * outer)
+    if warm is None:
+        warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
+                                mu0=CR2_MU0)
+    D, pens, state = _cr2_run(_jit_view(p), refs, warm, steps, outer,
+                              use_kernel)
+    return _report(p, np.asarray(D), np.asarray(pens), iters=steps * outer,
+                   state=state)
 
 
 # ---------------------------------------------------------------------------
 # CR3 at fleet scale — decentralized taxes and rebates (Eqs. 5–8)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
-def _cr3_best_response(p: FleetProblem, rho, tax_frac, steps: int,
-                       outer: int, use_kernel: bool):
+def _cr3_best_response(p: FleetProblem, rho, tax_frac, state0: EngineState,
+                       steps: int, outer: int, use_kernel: bool):
     """All W selfish problems in one AL solve. Each workload i minimizes its
     own penalty s.t. the peak-allowance inequality (Eq. 5/8)
 
@@ -446,42 +490,70 @@ def _cr3_best_response(p: FleetProblem, rho, tax_frac, steps: int,
 
     project = _projection(p, lo, hi)
     step_scale = jnp.maximum(hi - lo, 1e-6).mean(axis=1, keepdims=True)
-    D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                       hyper=(rho, tax_frac), ineq_residual=ineq,
-                       step_scale=step_scale, grad_transform=day_tangent,
-                       cfg=EngineConfig(inner_steps=steps, outer_steps=outer,
-                                        lr=0.005, mu0=0.01, mu_growth=2.0,
-                                        beta2=0.99))
-    return D, fleet_penalties(p, D, use_kernel)
+    D, aux = al_minimize(objective, project, state0.x,
+                         hyper=(rho, tax_frac), ineq_residual=ineq,
+                         step_scale=step_scale, grad_transform=day_tangent,
+                         init=state0,
+                         cfg=EngineConfig(inner_steps=steps,
+                                          outer_steps=outer,
+                                          lr=0.005, mu0=CR3_MU0,
+                                          mu_growth=2.0, beta2=0.99))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
 
 def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
                     tax_frac: float = 0.2, steps: int = 600, outer: int = 3,
                     clearing_iters: int = 8,
                     use_kernel: bool | None = None,
+                    warm: EngineState | None = None,
                     ) -> tuple[FleetSolveResult, float]:
     """Fleet-scale CR3: vmapped best responses + fiscal-balance clearing.
 
     The coordinator lowers the carbon price ρ until rebates are covered by
     taxes (Eq. 6, `policies.cr3_fiscal_balance` semantics). Returns
-    (result, clearing ρ), mirroring `solver.solve_cr3`."""
+    (result, clearing ρ), mirroring `solver.solve_cr3`.
+
+    Each clearing round warm-starts from the previous round's engine state
+    (the allowance multipliers track the shrinking ρ smoothly); `warm`
+    seeds round 0 the same way for rolling-horizon re-solves.
+
+    If `clearing_iters` is exhausted with rebates still exceeding taxes,
+    the result carries `balanced=False` and the remaining `fiscal_deficit`
+    (rebates − taxes, NP·kgCO2/MWh), and a `RuntimeWarning` is emitted —
+    callers must not treat the returned ρ as market-clearing then."""
     use_kernel = resolve_use_kernel(use_kernel)
     pj = _jit_view(p)
     mci = np.asarray(p.mci)
     collected = tax_frac * float(np.asarray(p.entitlement).sum())
     rho_cur = float(rho)
-    D, pens = _cr3_best_response(pj, rho_cur, tax_frac, steps, outer,
-                                 use_kernel)
+    state = warm if warm is not None else EngineState.cold(
+        jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
+    D, pens, state = _cr3_best_response(pj, rho_cur, tax_frac, state, steps,
+                                        outer, use_kernel)
     D = np.asarray(D)
     rounds = 1
+    paid = rho_cur * float((D @ mci).sum())
     for _ in range(clearing_iters):
-        paid = rho_cur * float((D @ mci).sum())
         if paid <= collected + 1e-9:
             break
         rho_cur *= max(0.5, 0.9 * collected / max(paid, 1e-9))
-        D, pens = _cr3_best_response(pj, rho_cur, tax_frac, steps, outer,
-                                     use_kernel)
+        # Carry primal + allowance multipliers; restart the μ schedule so
+        # every round keeps the gentle wall the best response relies on.
+        state = dataclasses.replace(
+            state, mu=jnp.full_like(state.mu, CR3_MU0))
+        D, pens, state = _cr3_best_response(pj, rho_cur, tax_frac, state,
+                                            steps, outer, use_kernel)
         D = np.asarray(D)
         rounds += 1
-    return (_report(p, D, np.asarray(pens), iters=steps * outer * rounds),
+        paid = rho_cur * float((D @ mci).sum())
+    balanced = paid <= collected + 1e-9
+    deficit = 0.0 if balanced else paid - collected
+    if not balanced:
+        warnings.warn(
+            f"solve_cr3_fleet: fiscal clearing did not converge in "
+            f"{clearing_iters} iterations — rebates exceed taxes by "
+            f"{deficit:.4g} at rho={rho_cur:.4g} (Eq. 6 unmet)",
+            RuntimeWarning, stacklevel=2)
+    return (_report(p, D, np.asarray(pens), iters=steps * outer * rounds,
+                    state=state, balanced=balanced, fiscal_deficit=deficit),
             rho_cur)

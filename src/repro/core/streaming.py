@@ -1,0 +1,229 @@
+"""Rolling-horizon streaming DR: re-solve as MCI forecasts revise.
+
+The paper plans against a *static* day-ahead marginal-carbon-intensity
+trace. A deployed Carbon Responder runs online: every hour the forecast
+provider re-issues the day-ahead horizon (WattTime-style revisions), the
+coordinator re-solves, commits only the first hour of the new plan, and
+the window slides forward. This module is that control loop:
+
+  * `ForecastStream` (`repro.core.carbon`) supplies the revised horizons —
+    a persistence + lead-time-noise revision model, or replayed snapshots.
+  * `RollingHorizonSolver` holds a `FleetProblem` template and, per tick:
+      1. slides the usage/jobs window one hour and swaps in the fresh
+         `(T,)` forecast,
+      2. warm-starts the policy adapter from the previous tick's
+         `EngineState`, shifted one hour along time
+         (`EngineState.shifted`) — multipliers carry over as-is since
+         they price per-workload constraints, not hours,
+      3. commits hour 0 of the new plan and logs forecast vs realized
+         carbon for the committed hour.
+
+Because `EngineState` is a pure-array pytree and every tick's problem has
+identical shapes, all warm re-solves reuse ONE jitted trace (per policy):
+the hot path is a single XLA call per tick, and the warm start lets it run
+with a fraction of the cold solve's inner Adam steps
+(`benchmarks.perf_micro.streaming_resolve` measures the latency and
+solution gap).
+
+Receding-horizon caveat: batch day-preservation is enforced over the
+sliding window's 24 h blocks each re-solve (the standard receding-horizon
+relaxation); only committed hours are binding, so small per-window
+residuals wash out as the window slides.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.carbon import ForecastStream
+from repro.core.engine import EngineState
+from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
+                                     FleetProblem, FleetSolveResult,
+                                     solve_cr1_fleet, solve_cr2_fleet,
+                                     solve_cr3_fleet)
+
+
+@dataclasses.dataclass(frozen=True)
+class TickResult:
+    """One committed hour of online operation.
+
+    `plan` (the full-horizon solve: D matrix, engine state, ...) is only
+    retained on the *latest* tick — older history entries drop it so a
+    long-lived controller holds O(W) per tick, not O(W·T)."""
+    tick: int
+    committed: np.ndarray        # (W,) NP adjustments enforced this hour
+    forecast_mci: float          # hour-0 forecast the plan was solved with
+    realized_mci: float          # actual MCI once the hour elapsed
+    inner_steps: int             # engine iterations spent on this re-solve
+    plan: FleetSolveResult | None
+
+    @property
+    def forecast_carbon(self) -> float:
+        """kg CO2 the plan *expected* to eliminate this hour."""
+        return float(self.committed.sum() * self.forecast_mci)
+
+    @property
+    def realized_carbon(self) -> float:
+        """kg CO2 actually eliminated this hour."""
+        return float(self.committed.sum() * self.realized_mci)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingReport:
+    """Aggregate of a rolling-horizon run."""
+    ticks: tuple[TickResult, ...]
+    committed: np.ndarray        # (W, n_ticks)
+    realized_carbon: float       # kg CO2 eliminated, priced at actual MCI
+    forecast_carbon: float       # same hours priced at solve-time forecasts
+    realized_baseline: float     # no-DR carbon of the committed hours
+    total_inner_steps: int
+
+    @property
+    def realized_reduction_pct(self) -> float:
+        return 100.0 * self.realized_carbon / max(self.realized_baseline,
+                                                  1e-12)
+
+    @property
+    def forecast_error_pct(self) -> float:
+        """|forecast − realized| carbon for committed hours, % of realized."""
+        return 100.0 * abs(self.forecast_carbon - self.realized_carbon) \
+            / max(abs(self.realized_carbon), 1e-12)
+
+
+class RollingHorizonSolver:
+    """Online DR controller: warm-started re-solves over a sliding window.
+
+    Args:
+      problem: fleet template; `usage`/`jobs` are treated as periodic
+        traces that slide with the window (`np.roll` along time).
+      stream: revised-forecast source; `stream.horizon` must equal
+        `problem.T`.
+      policy: "cr1" | "cr2" | "cr3".
+      cold_steps: inner Adam steps for the tick-0 cold solve.
+      warm_steps: inner steps for warm-started re-solves — the streaming
+        speedup is `cold_steps / warm_steps` per multiplier round.
+      policy knobs: `lam` (CR1), `cap_frac`/`outer` (CR2),
+        `rho`/`tax_frac`/`outer` (CR3).
+    """
+
+    def __init__(self, problem: FleetProblem, stream: ForecastStream, *,
+                 policy: str = "cr1", lam: float = 1.45,
+                 cap_frac: float = 0.78, rho: float = 0.02,
+                 tax_frac: float = 0.2, cold_steps: int = 600,
+                 warm_steps: int = 150, outer: int = 4,
+                 use_kernel: bool | None = None):
+        if stream.horizon != problem.T:
+            raise ValueError(
+                f"stream horizon {stream.horizon} != problem.T {problem.T}")
+        if policy not in ("cr1", "cr2", "cr3"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.problem = problem
+        self.stream = stream
+        self.policy = policy
+        self.lam = lam
+        self.cap_frac = cap_frac
+        self.rho = rho               # configured CR3 price; never ratchets
+        self.last_rho = rho          # most recent cleared price (CR3)
+        self.tax_frac = tax_frac
+        self.cold_steps = cold_steps
+        self.warm_steps = warm_steps
+        self.outer = outer
+        self.use_kernel = use_kernel
+        self._state: EngineState | None = None
+        self._tick = 0
+        self._history: list[TickResult] = []
+
+    # -- per-tick plumbing --------------------------------------------------
+    def _window_problem(self, tick: int, mci: np.ndarray) -> FleetProblem:
+        """Slide usage/jobs (and any operational cap) to hours
+        [tick, tick+T) and install `mci`."""
+        p = self.problem
+        return dataclasses.replace(
+            p, mci=np.asarray(mci),
+            usage=np.roll(p.usage, -tick, axis=1),
+            jobs=np.roll(p.jobs, -tick, axis=1),
+            upper=None if p.upper is None
+            else np.roll(p.upper, -tick, axis=1))
+
+    # Per-policy initial AL penalty weight (the adapters' own constants).
+    _MU0 = {"cr1": CR1_MU0, "cr2": CR2_MU0, "cr3": CR3_MU0}
+
+    def _solve(self, p: FleetProblem, warm: EngineState | None,
+               steps: int) -> FleetSolveResult:
+        if self.policy == "cr1":
+            return solve_cr1_fleet(p, lam=self.lam, steps=steps,
+                                   use_kernel=self.use_kernel, warm=warm)
+        if self.policy == "cr2":
+            return solve_cr2_fleet(p, cap_frac=self.cap_frac, steps=steps,
+                                   outer=self.outer,
+                                   use_kernel=self.use_kernel, warm=warm)
+        # Re-clear every window from the *configured* price: clearing only
+        # ever lowers rho, so carrying a lowered price forward would ratchet
+        # the fleet onto a permanently depressed carbon price after one
+        # transient tick. `last_rho` exposes the latest cleared price.
+        result, self.last_rho = solve_cr3_fleet(
+            p, rho=self.rho, tax_frac=self.tax_frac, steps=steps,
+            outer=self.outer, use_kernel=self.use_kernel, warm=warm)
+        return result
+
+    def step(self) -> TickResult:
+        """Ingest the next forecast revision, re-solve, commit hour 0."""
+        tick = self._tick
+        mci_hat = self.stream.forecast(tick)
+        p_t = self._window_problem(tick, mci_hat)
+        if self._state is None:
+            warm = None
+        else:
+            # Shift the plan one hour; restart the mu schedule at the
+            # policy's mu0 — without the reset, mu compounds by
+            # mu_growth^outer per tick and CR2/CR3's walls turn stiff
+            # within a handful of ticks (multipliers still carry the
+            # constraint prices).
+            warm = self._state.shifted(1)
+            warm = dataclasses.replace(
+                warm, mu=jnp.full_like(warm.mu, self._MU0[self.policy]))
+        steps = self.cold_steps if warm is None else self.warm_steps
+        plan = self._solve(p_t, warm, steps)
+        self._state = plan.state
+        self._tick = tick + 1
+        out = TickResult(
+            tick=tick, committed=np.asarray(plan.D[:, 0]),
+            forecast_mci=float(mci_hat[0]),
+            realized_mci=self.stream.realized(tick),
+            inner_steps=plan.iters, plan=plan)
+        if self._history:   # bound memory: full plans live on the
+            self._history[-1] = dataclasses.replace(   # latest tick only
+                self._history[-1], plan=None)
+        self._history.append(out)
+        return out
+
+    def run(self, n_ticks: int | None = None,
+            on_tick: Callable[[TickResult], None] | None = None,
+            ) -> StreamingReport:
+        """Run `n_ticks` hours (default: all the stream supports)."""
+        n = self.stream.n_ticks - self._tick if n_ticks is None else n_ticks
+        for _ in range(n):
+            out = self.step()
+            if on_tick is not None:
+                on_tick(out)
+        return self.report()
+
+    def report(self) -> StreamingReport:
+        ticks = tuple(self._history)
+        if not ticks:
+            raise RuntimeError("no ticks committed yet — call step()/run()")
+        committed = np.stack([t.committed for t in ticks], axis=1)
+        base_usage = np.asarray(self.problem.usage)
+        baseline = sum(
+            t.realized_mci * float(base_usage[:, t.tick % base_usage.shape[1]]
+                                   .sum())
+            for t in ticks)
+        return StreamingReport(
+            ticks=ticks, committed=committed,
+            realized_carbon=sum(t.realized_carbon for t in ticks),
+            forecast_carbon=sum(t.forecast_carbon for t in ticks),
+            realized_baseline=float(baseline),
+            total_inner_steps=sum(t.inner_steps for t in ticks))

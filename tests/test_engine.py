@@ -125,6 +125,7 @@ def test_problem_round_trip(dr_problem, fp4, rng):
 # ---------------------------------------------------------------------------
 # Policy adapters vs the SLSQP validation reference (4-workload paper fleet)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_cr1_fleet_matches_slsqp_per_workload(dr_problem, fp4):
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
@@ -138,6 +139,7 @@ def test_cr1_fleet_matches_slsqp_per_workload(dr_problem, fp4):
         np.abs(pens - ref.per_penalty) / np.asarray(fp4.entitlement), 0.03)
 
 
+@pytest.mark.slow
 def test_cr2_fleet_matches_slsqp_per_workload(dr_problem, fp4):
     """RTS rows match the SLSQP stack's penalties; batch rows land at or
     below them (the preservation projection bounds attainable deferral
@@ -157,6 +159,7 @@ def test_cr2_fleet_matches_slsqp_per_workload(dr_problem, fp4):
     assert (pens[~rts] <= ref.per_penalty[~rts] + 0.05).all()
 
 
+@pytest.mark.slow
 def test_cr3_fleet_matches_slsqp_reference(dr_problem, fp4):
     """Acceptance: decentralized fleet CR3 within 2% of the paper-stack
     CR3 on carbon reduction and total penalty, and fiscally balanced."""
@@ -180,6 +183,7 @@ def test_cr1_sweep_matches_single_solves(fp4):
         assert abs(r.total_penalty_pct - one.total_penalty_pct) < 1e-4
 
 
+@pytest.mark.slow
 def test_cr3_fleet_scales_to_512_workloads():
     p = synthetic_fleet(512)
     r, rho = solve_cr3_fleet(p, steps=150, outer=2, clearing_iters=2)

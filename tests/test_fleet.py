@@ -1,0 +1,81 @@
+"""FleetCoordinator unit tests: entitlement headroom and streaming plans."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import caiso_2021
+from repro.core.fleet import FleetJob, _penalty_model, _usage_trace
+from repro.core.fleetcache import cached_paper_fleet
+from repro.power.model import JobPowerModel
+
+
+@pytest.fixture(scope="module")
+def templates():
+    return cached_paper_fleet(hours=48)
+
+
+def _serve_job(t_compute=0.01, t_step=0.02):
+    return FleetJob("serve-x", "serve",
+                    JobPowerModel("s", chips=64, t_compute_s=t_compute,
+                                  t_step_s=t_step))
+
+
+def test_serve_entitlement_headroom_from_dynamic_fraction(templates):
+    """Regression for the dead-code headroom bug: entitlement must carry a
+    cushion of 7.5% x 1/max(dynamic_fraction, 0.5) above peak usage."""
+    job = _serve_job()
+    model = _penalty_model(job, 48, templates)
+    usage = _usage_trace(job, 48)
+    headroom = 1.0 / max(job.power.dynamic_fraction, 0.5)
+    expect = float(usage.max() * (1.0 + 0.075 * headroom))
+    assert model.entitlement == pytest.approx(expect, rel=1e-12)
+    # this job is static-heavy (dyn < 0.5), so it books the full 15%
+    assert job.power.dynamic_fraction < 0.5
+    assert model.entitlement == pytest.approx(float(usage.max()) * 1.15,
+                                              rel=1e-12)
+
+
+def test_entitlement_cushion_shrinks_for_dynamic_jobs(templates):
+    """A fully utilized (high dynamic-fraction) job books a smaller cushion
+    than a static-heavy one: it can shed load on request instead."""
+    static_heavy = _serve_job(t_compute=0.01, t_step=0.02)   # util 0.5
+    dynamic = _serve_job(t_compute=0.02, t_step=0.02)        # util 1.0
+    assert dynamic.power.dynamic_fraction > \
+        static_heavy.power.dynamic_fraction
+    m_static = _penalty_model(static_heavy, 48, templates)
+    m_dyn = _penalty_model(dynamic, 48, templates)
+    peak_s = _usage_trace(static_heavy, 48).max()
+    peak_d = _usage_trace(dynamic, 48).max()
+    assert m_dyn.entitlement / peak_d < m_static.entitlement / peak_s
+
+
+@pytest.mark.slow
+def test_plan_streaming_emits_online_schedules():
+    from repro.core.fleet import FleetCoordinator
+    from repro.core.streaming import StreamingReport
+    jobs = [
+        FleetJob("train-a", "train",
+                 JobPowerModel("t", chips=128, t_compute_s=0.4,
+                               t_step_s=0.5)),
+        FleetJob("serve-b", "serve",
+                 JobPowerModel("s", chips=64, t_compute_s=0.01,
+                               t_step_s=0.02)),
+    ]
+    coord = FleetCoordinator(jobs, caiso_2021(48), lam=1.3)
+    schedules, report = coord.plan_streaming(n_ticks=3, cold_steps=200,
+                                             warm_steps=60)
+    assert isinstance(report, StreamingReport)
+    assert set(schedules) == {"train-a", "serve-b"}
+    for s in schedules.values():
+        assert s.throttle.shape == (3,)            # committed hours only
+        assert (s.throttle > 0).all() and (s.throttle <= 1.0 + 1e-9).all()
+        assert s.power_cut_np.shape == (3,)
+    # warm ticks ran at the reduced budget
+    assert [t.inner_steps for t in report.ticks] == [200, 60, 60]
+    # committed cuts stay inside each job's dynamic (deliverable) range, so
+    # no throttle saturates and the carbon ledger never credits
+    # unenforceable curtailment
+    for job in jobs:
+        usage = _usage_trace(job, 48)
+        cap = 0.95 * job.power.dynamic_fraction * usage[np.arange(3) % 48]
+        assert (schedules[job.name].power_cut_np <= cap + 1e-6).all()
+        assert (schedules[job.name].throttle > 0).all()

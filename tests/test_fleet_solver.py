@@ -1,10 +1,14 @@
 """Vectorized fleet solver tests (beyond-paper scaling path)."""
+import dataclasses
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fleet_solver import (fleet_penalties, from_models,
-                                     solve_cr1_fleet, synthetic_fleet)
+from repro.core.fleet_solver import (FleetProblem, fleet_penalties,
+                                     from_models, solve_cr1_fleet,
+                                     solve_cr3_fleet, synthetic_fleet)
 
 
 @pytest.fixture(scope="module")
@@ -28,6 +32,7 @@ def test_kernel_path_matches_jnp_path(fp4):
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_fleet_solver_matches_slsqp(dr_problem, fp4):
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
@@ -49,6 +54,64 @@ def test_fleet_scales_to_many_workloads():
     assert (r.D <= hi + 1e-5).all()
     rts = ~p.is_batch
     assert (r.D[rts] >= -1e-6).all()       # RTS curtail-only
+
+
+@pytest.mark.parametrize("W", [3, 10])
+def test_mixed_fleet_round_trip(W):
+    """from_problem/to_problem round-trips a mixed RTS/batch fleet: models,
+    masks, and penalties all survive both directions."""
+    fp = synthetic_fleet(W, seed=W)
+    assert fp.is_batch.any() and (~fp.is_batch).any()   # genuinely mixed
+    p = fp.to_problem()
+    assert p.W == W
+    assert p.names == fp.names
+    rng = np.random.default_rng(W)
+    D = jnp.asarray(rng.uniform(-0.3, 0.3, size=(W, fp.T))
+                    * fp.usage)
+    np.testing.assert_allclose(np.asarray(p.penalties(D, smooth=0.0)),
+                               np.asarray(fleet_penalties(fp, D)),
+                               rtol=1e-5, atol=1e-5)
+    fp2 = FleetProblem.from_problem(p)
+    for field in ("usage", "entitlement", "k", "rts_coeffs", "betas",
+                  "x2_kind", "jobs", "mci"):
+        np.testing.assert_allclose(getattr(fp2, field),
+                                   getattr(fp, field), rtol=1e-12,
+                                   err_msg=field)
+    np.testing.assert_array_equal(fp2.is_batch, fp.is_batch)
+    assert fp2.names == fp.names
+
+
+def test_from_problem_rejects_non_default_semantics():
+    fp = synthetic_fleet(3)
+    p = fp.to_problem(preservation="inequality")
+    with pytest.raises(ValueError, match="preservation"):
+        FleetProblem.from_problem(p)
+
+
+def test_cr3_unbalanced_clearing_warns():
+    """When clearing_iters runs out with rebates still exceeding taxes
+    (Eq. 6 unmet), the result must say so instead of silently returning
+    the last rho."""
+    p = synthetic_fleet(4)
+    # Entitlements below peak usage make the allowance unmeetable without
+    # deep curtailment, and a huge rho prices those rebates far beyond the
+    # tax pool; one clearing iteration can at most halve rho.
+    tight = dataclasses.replace(p, entitlement=0.6 * p.usage.max(axis=1))
+    with pytest.warns(RuntimeWarning, match="did not converge"):
+        r, rho = solve_cr3_fleet(tight, rho=1e4, tax_frac=0.1, steps=100,
+                                 outer=2, clearing_iters=1)
+    assert not r.balanced
+    assert r.fiscal_deficit > 0
+    assert rho < 1e4                                  # it did try
+
+
+def test_cr3_balanced_clearing_reports_clean(fp4):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        r, rho = solve_cr3_fleet(fp4, rho=0.02, steps=150, outer=2,
+                                 clearing_iters=8)
+    assert r.balanced
+    assert r.fiscal_deficit == 0.0
 
 
 def test_cr2_fleet_hits_rts_targets(dr_problem, fp4):

@@ -16,6 +16,7 @@ CFG = reduced(get_config("stablelm-3b"), layers=2, d_model=64)
 SHAPE = ShapeCell("t", 64, 4, "train")
 
 
+@pytest.mark.slow
 def test_training_loss_decreases(tmp_path):
     report = train(CFG, SHAPE, steps=40, ckpt_dir=str(tmp_path))
     losses = report["losses"]
@@ -23,6 +24,7 @@ def test_training_loss_decreases(tmp_path):
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
 
+@pytest.mark.slow
 def test_training_with_injected_failure_completes(tmp_path):
     report = train(CFG, SHAPE, steps=30, ckpt_dir=str(tmp_path),
                    failure_plan=FailurePlan(fail_steps=(13,)))
@@ -30,6 +32,7 @@ def test_training_with_injected_failure_completes(tmp_path):
     assert any(e["event"] == "restored" for e in report["events"])
 
 
+@pytest.mark.slow
 def test_dr_throttled_training(tmp_path):
     throttle = np.asarray([1.0, 0.4, 1.0, 0.4])
     report = train(CFG, SHAPE, steps=24, ckpt_dir=str(tmp_path),
@@ -73,6 +76,7 @@ def test_power_model_roundtrip():
     assert m.throttle_for_power_cut(0.99) == 0.0
 
 
+@pytest.mark.slow
 def test_serving_qos_degrades_under_power_cap():
     from repro.launch.serve import Request, serve_requests
     from repro.models import transformer as tf

@@ -35,6 +35,7 @@ def make_batch(cfg, B=2, S=16):
 
 
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.slow
 def test_arch_smoke_forward_and_train_step(arch_id):
     cfg = reduced(get_config(arch_id))
     mod = encdec if cfg.family == "encdec" else tf
@@ -61,6 +62,7 @@ def test_arch_smoke_forward_and_train_step(arch_id):
 @pytest.mark.parametrize("arch_id", ["stablelm-3b", "granite-20b",
                                      "qwen3-moe-30b-a3b", "mamba2-780m",
                                      "jamba-v0.1-52b", "deepseek-v3-671b"])
+@pytest.mark.slow
 def test_decode_matches_forward(arch_id):
     """Teacher-forced forward and step-by-step decode agree on logits —
     the serving-path correctness invariant."""
@@ -81,6 +83,7 @@ def test_decode_matches_forward(arch_id):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_forward():
     cfg = reduced(get_config("whisper-large-v3"))
     params = encdec.init_params(cfg, KEY)
@@ -141,6 +144,7 @@ def test_mamba_long_context_flag():
     assert not get_config("qwen3-32b").long_context_ok
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_close_to_exact():
     """int8 KV cache (serving memory optimization) stays within quantization
     tolerance of the exact decode path."""

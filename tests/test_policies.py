@@ -32,6 +32,7 @@ def test_cr1_respects_constraints(dr_problem, cr1_result):
     assert r.carbon_reduction_pct > 0
 
 
+@pytest.mark.slow
 def test_cr1_lambda_sweeps_tradeoff(dr_problem, cr1_result):
     aggressive = cr1_result
     conservative = solve_slsqp(cr1_spec(dr_problem, 2.6), maxiter=200)
@@ -56,6 +57,7 @@ def test_cr1_more_efficient_than_b1(dr_problem, cr1_result):
         > best.carbon_reduction / max(best.total_penalty, 1e-9)
 
 
+@pytest.mark.slow
 def test_cr2_matches_reference_losses(dr_problem):
     cap = 0.78
     r = solve_slsqp(cr2_spec(dr_problem, cap), maxiter=250)
@@ -68,6 +70,7 @@ def test_cr2_matches_reference_losses(dr_problem):
                        atol=0.05 * max(refs.max(), 1.0))
 
 
+@pytest.mark.slow
 def test_cr2_fairer_than_cr1(dr_problem, cr1_result):
     r2 = solve_slsqp(cr2_spec(dr_problem, 0.78), maxiter=250)
     e1 = capacity_scaled_entropy(cr1_result.per_penalty,
@@ -76,6 +79,7 @@ def test_cr2_fairer_than_cr1(dr_problem, cr1_result):
     assert e2 > e1
 
 
+@pytest.mark.slow
 def test_cr3_fiscal_balance(dr_problem):
     r, rho = solve_cr3(dr_problem, rho=0.02)
     paid, collected = cr3_fiscal_balance(dr_problem, r.D, rho)
@@ -121,6 +125,7 @@ def test_b3_priority_order(dr_problem):
     assert np.abs(D[dr_problem.batch_mask]).max() == 0.0
 
 
+@pytest.mark.slow
 def test_b4_protects_realtime(dr_problem):
     r = solve_slsqp(b4_spec(dr_problem, 0.05), maxiter=150)
     rts = ~dr_problem.batch_mask

@@ -81,6 +81,7 @@ def batches():
         step += 1
 
 
+@pytest.mark.slow
 def test_ft_runner_trains(tmp_path):
     runner, mgr = make_runner(tmp_path)
     params, opt = tiny_state()
@@ -90,6 +91,7 @@ def test_ft_runner_trains(tmp_path):
     assert mgr.latest_step() == 12
 
 
+@pytest.mark.slow
 def test_ft_runner_recovers_from_failure(tmp_path):
     plan = FailurePlan(fail_steps=(7,))
     runner, mgr = make_runner(tmp_path, plan, ckpt_every=5)
@@ -102,6 +104,7 @@ def test_ft_runner_recovers_from_failure(tmp_path):
     assert mgr.latest_step() == 15
 
 
+@pytest.mark.slow
 def test_ft_runner_flags_stragglers(tmp_path):
     plan = FailurePlan(slow_steps=tuple(range(20, 24)), slow_seconds=0.4)
     runner, mgr = make_runner(tmp_path, plan, ckpt_every=50)
@@ -158,6 +161,7 @@ print("OK", err)
 # ---------------------------------------------------------------------------
 # elastic resize
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_elastic_resize_preserves_params():
     from conftest import run_in_subprocess
     run_in_subprocess("""

@@ -56,6 +56,7 @@ def test_norm_scales_replicated():
     assert tuple(specs["ln_f"]["scale"]) == (None,)
 
 
+@pytest.mark.slow
 def test_small_mesh_compile_with_policies():
     """seq_shard / fsdp knobs still produce compilable programs."""
     from conftest import run_in_subprocess

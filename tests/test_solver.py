@@ -8,6 +8,7 @@ from repro.core.policies import cr1_spec
 from repro.core.solver import AdamALConfig, solve_adam, solve_slsqp
 
 
+@pytest.mark.slow
 def test_solvers_agree_on_cr1(dr_problem):
     """The fleet-scale Adam-AL solver must track the paper's SLSQP within a
     few percent of objective value (it's the same problem)."""

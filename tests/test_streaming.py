@@ -1,0 +1,190 @@
+"""Rolling-horizon streaming DR: forecast streams, engine warm starts,
+warm-vs-cold re-solve quality, and the online control loop."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.carbon import ForecastStream, caiso_2021
+from repro.core.engine import EngineConfig, EngineState, al_minimize
+from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.core.streaming import RollingHorizonSolver
+
+
+# ---------------------------------------------------------------------------
+# ForecastStream
+# ---------------------------------------------------------------------------
+def test_forecast_stream_shapes_and_determinism():
+    s = ForecastStream.caiso(n_ticks=6, horizon=48, seed=3)
+    assert s.n_ticks >= 6
+    f0 = s.forecast(2)
+    assert f0.shape == (48,)
+    assert (f0 >= 0).all()
+    np.testing.assert_array_equal(f0, s.forecast(2))   # re-issue == same
+    assert not np.array_equal(f0, s.forecast(3))       # revisions differ
+
+
+def test_forecast_error_grows_with_lead_time():
+    s = ForecastStream.caiso(n_ticks=40, horizon=48, seed=0,
+                             revision_sigma=0.05)
+    near, far = [], []
+    for t in range(40):
+        f = s.forecast(t)
+        actual = s.actual[t:t + 48]
+        rel = np.abs(f / np.maximum(actual, 1e-9) - 1.0)
+        near.append(rel[0])
+        far.append(rel[-1])
+    # committed-hour (nowcast) error is small; day-ahead tail error larger
+    assert np.mean(near) < 0.05
+    assert np.mean(far) > 2.0 * np.mean(near)
+
+
+def test_forecast_stream_replay_mode():
+    snaps = np.arange(3 * 8, dtype=float).reshape(3, 8)
+    s = ForecastStream(actual=np.ones(16), horizon=8, replay=snaps)
+    assert s.n_ticks == 3
+    np.testing.assert_array_equal(s.forecast(1), snaps[1])
+    with pytest.raises(IndexError):
+        s.forecast(3)
+    with pytest.raises(ValueError):
+        ForecastStream(actual=np.ones(16), horizon=8,
+                       replay=np.ones((3, 7)))
+
+
+def test_forecast_stream_realized_is_actual():
+    sig = caiso_2021(60)
+    s = ForecastStream(actual=sig.mci, horizon=48)
+    assert s.realized(5) == float(sig.mci[5])
+
+
+# ---------------------------------------------------------------------------
+# Engine warm starts
+# ---------------------------------------------------------------------------
+def test_engine_state_shifted_rolls_time_axis():
+    st = EngineState(x=jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]]),
+                     lam_eq=jnp.asarray([7.0]), lam_in=jnp.zeros(0),
+                     mu=jnp.asarray(0.5))
+    sh = st.shifted(1)
+    np.testing.assert_allclose(np.asarray(sh.x),
+                               [[2.0, 3.0, 0.0], [5.0, 6.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(sh.lam_eq), [7.0])   # carried
+    assert float(sh.mu) == 0.5
+
+
+def test_engine_warm_start_preserves_optimum():
+    """A converged state re-entered with a tiny budget stays converged."""
+    c = jnp.asarray([2.0, -1.0, 0.5, 0.5])
+
+    def obj(x, _):
+        return ((x - c) ** 2).sum()
+
+    def eq(x, _):
+        return jnp.atleast_1d(x.sum() - 1.0)
+
+    _, aux = al_minimize(obj, lambda x: x, jnp.zeros(4), eq_residual=eq,
+                         cfg=EngineConfig(inner_steps=300, outer_steps=6,
+                                          lr=0.05, mu0=1.0))
+    x2, aux2 = al_minimize(obj, lambda x: x, jnp.zeros(4), eq_residual=eq,
+                           init=aux["state"],
+                           cfg=EngineConfig(inner_steps=25, outer_steps=1,
+                                            lr=0.05, mu0=1.0))
+    expect = np.asarray(c) + (1.0 - float(c.sum())) / 4.0
+    np.testing.assert_allclose(np.asarray(x2), expect, atol=1e-2)
+    assert isinstance(aux2["state"], EngineState)
+
+
+def test_engine_cold_state_equals_default_path():
+    """init=EngineState.cold(...) is byte-for-byte the legacy cold solve."""
+    def obj(x, _):
+        return ((x - 0.3) ** 2).sum()
+
+    cfg = EngineConfig(inner_steps=50, outer_steps=2, mu0=2.0)
+
+    def g(x, _):
+        return x
+
+    x_a, _ = al_minimize(obj, lambda x: x, jnp.zeros(3), ineq_residual=g,
+                         cfg=cfg)
+    x_b, _ = al_minimize(obj, lambda x: x, jnp.zeros(3), ineq_residual=g,
+                         init=EngineState.cold(jnp.zeros(3), n_in=3,
+                                               mu0=2.0), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(x_a), np.asarray(x_b))
+
+
+# ---------------------------------------------------------------------------
+# Warm-started fleet re-solves on a shifted horizon
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_warm_resolve_matches_cold_on_shifted_horizon():
+    """Shift the window one hour, warm-start at 1/4 the budget: the re-solve
+    must reach the cold solve's CR1 objective (pp units) to 0.1 pp."""
+    lam = 1.45
+    p = synthetic_fleet(8)
+    prev = solve_cr1_fleet(p, lam=lam, steps=600)
+    shifted = dataclasses.replace(
+        p, mci=np.roll(p.mci, -1), usage=np.roll(p.usage, -1, axis=1),
+        jobs=np.roll(p.jobs, -1, axis=1))
+    warm = solve_cr1_fleet(shifted, lam=lam, steps=150,
+                           warm=prev.state.shifted(1))
+    cold = solve_cr1_fleet(shifted, lam=lam, steps=600)
+
+    def obj(r):
+        return lam * r.total_penalty_pct - r.carbon_reduction_pct
+
+    assert obj(warm) <= obj(cold) + 0.1
+    assert warm.preservation_violation < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# RollingHorizonSolver control loop
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_rolling_horizon_cr1_commits_and_accounts():
+    p = synthetic_fleet(6)
+    stream = ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=1)
+    rhs = RollingHorizonSolver(p, stream, policy="cr1",
+                               cold_steps=300, warm_steps=80)
+    report = rhs.run(4)
+    assert report.committed.shape == (6, 4)
+    # tick 0 cold, then warm budgets
+    assert [t.inner_steps for t in report.ticks] == [300, 80, 80, 80]
+    assert report.total_inner_steps == 300 + 3 * 80
+    # committed hours respect the fleet box of their window
+    for tk in report.ticks:
+        u_t = np.roll(p.usage, -tk.tick, axis=1)[:, 0]
+        hi = np.minimum(0.5 * p.entitlement, u_t)
+        assert (tk.committed <= hi + 1e-4).all()
+        assert (tk.committed[~p.is_batch] >= -1e-5).all()
+    # ledger identities
+    assert report.realized_carbon == pytest.approx(
+        sum(t.committed.sum() * t.realized_mci for t in report.ticks))
+    assert 0 < report.realized_reduction_pct < 100
+    assert np.isfinite(report.forecast_error_pct)
+
+
+def test_rolling_horizon_validates_inputs():
+    p = synthetic_fleet(2)
+    stream = ForecastStream.caiso(n_ticks=2, horizon=24)
+    with pytest.raises(ValueError):
+        RollingHorizonSolver(p, stream)          # horizon mismatch
+    stream48 = ForecastStream.caiso(n_ticks=2, horizon=p.T)
+    with pytest.raises(ValueError):
+        RollingHorizonSolver(p, stream48, policy="cr9")
+    rhs = RollingHorizonSolver(p, stream48, cold_steps=50, warm_steps=20)
+    with pytest.raises(RuntimeError):
+        rhs.report()                             # nothing committed yet
+
+
+@pytest.mark.slow
+def test_rolling_horizon_cr2_carries_multipliers():
+    p = synthetic_fleet(4)
+    stream = ForecastStream.caiso(n_ticks=3, horizon=p.T, seed=2)
+    rhs = RollingHorizonSolver(p, stream, policy="cr2",
+                               cold_steps=200, warm_steps=60, outer=2)
+    report = rhs.run(3)
+    assert report.committed.shape == (4, 3)
+    # the CR2 fairness multipliers (one per workload) ride the state
+    st = report.ticks[-1].plan.state
+    assert st.lam_eq.shape == (4,)
+    assert np.isfinite(np.asarray(st.lam_eq)).all()

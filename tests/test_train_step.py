@@ -24,6 +24,7 @@ def _setup():
     return params, oc, opt, batch
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalent():
     params, oc, opt, batch = _setup()
     s1 = jax.jit(make_train_step(CFG, oc, grad_accum=1))
@@ -43,6 +44,7 @@ def test_grad_accum_rejects_indivisible():
         s3(params, opt, batch)
 
 
+@pytest.mark.slow
 def test_sharded_step_matches_single_device():
     from conftest import run_in_subprocess
     run_in_subprocess("""
