@@ -91,6 +91,71 @@ def fleet_cr3_scale() -> list[str]:
     return rows
 
 
+def _tiled_fleet(base, W: int, seed: int = 0):
+    """Blow a synthetic fleet up to W rows by tiling + per-row rescale —
+    array-level construction so 100k-workload inputs build in O(ms), not
+    a 100k-iteration python model loop."""
+    from repro.core.fleet_solver import FleetProblem
+    reps = -(-W // base.W)
+    rng = np.random.default_rng(seed)
+    scale = rng.uniform(0.5, 2.0, size=(W, 1))
+
+    def tile(a, scaled):
+        out = np.tile(np.asarray(a), (reps,) + (1,) * (np.ndim(a) - 1))[:W]
+        return out * (scale if out.ndim == 2 else scale[:, 0]) \
+            if scaled else out
+
+    return FleetProblem(
+        usage=tile(base.usage, True), entitlement=tile(base.entitlement, True),
+        k=tile(base.k, False), rts_coeffs=tile(base.rts_coeffs, False),
+        betas=tile(base.betas, False), x2_kind=tile(base.x2_kind, False),
+        jobs=tile(base.jobs, True), is_batch=tile(base.is_batch, False),
+        mci=np.asarray(base.mci), day_hours=base.day_hours,
+        max_curtail_frac=base.max_curtail_frac)
+
+
+def fleet_shard_scale() -> list[str]:
+    """Device-sharded fleet engine at W ∈ {1k, 10k, 100k}: sharded vs
+    single-device CR1 latency and objective parity, per-device rows bounded
+    by W/n_devices (+ padding). Multi-device on CPU needs
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8`; with one device
+    the single-device numbers still run and the sharded column is skipped.
+    """
+    from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+    from repro.launch.mesh import make_fleet_mesh
+    rows = []
+    n_dev = len(jax.devices())
+    mesh = make_fleet_mesh() if n_dev > 1 else None
+    base = synthetic_fleet(1024)
+    lam = 1.45
+    for W, steps in ((1_000, 300), (10_000, 150), (100_000, 60)):
+        fp = _tiled_fleet(base, W)
+        solve_cr1_fleet(fp, lam=lam, steps=steps)          # compile
+        us1 = timeit(lambda: solve_cr1_fleet(fp, lam=lam, steps=steps),
+                     repeats=2, warmup=0)
+        r1 = solve_cr1_fleet(fp, lam=lam, steps=steps)
+        obj1 = lam * r1.total_penalty_pct - r1.carbon_reduction_pct
+        if mesh is None:
+            rows.append(row(f"fleet_shard_W{W}", us1,
+                            f"single-device only ({n_dev} device); carbon="
+                            f"{r1.carbon_reduction_pct:.2f}%"))
+            continue
+        solve_cr1_fleet(fp, lam=lam, steps=steps, mesh=mesh)   # compile
+        us8 = timeit(lambda: solve_cr1_fleet(fp, lam=lam, steps=steps,
+                                             mesh=mesh), repeats=2, warmup=0)
+        r8 = solve_cr1_fleet(fp, lam=lam, steps=steps, mesh=mesh)
+        obj8 = lam * r8.total_penalty_pct - r8.carbon_reduction_pct
+        rows_dev = -(-W // n_dev)
+        rows.append(row(
+            f"fleet_shard_W{W}", us8,
+            f"sharded({n_dev})={us8 / 1e3:.0f}ms vs 1dev={us1 / 1e3:.0f}ms"
+            f" speedup={us1 / max(us8, 1e-9):.2f}x"
+            f" obj_gap={abs(obj8 - obj1):.2e}pp"
+            f" rows/dev={rows_dev}"
+            f" carbon={r8.carbon_reduction_pct:.2f}%"))
+    return rows
+
+
 def streaming_resolve() -> list[str]:
     """Rolling-horizon streaming: warm-started re-solves vs cold solves.
 
@@ -108,6 +173,8 @@ def streaming_resolve() -> list[str]:
     for W in (16, 256):
         p = synthetic_fleet(W)
         stream = ForecastStream.caiso(n_ticks=6, horizon=p.T)
+        # donate stays off: we capture per-tick engine states below and
+        # re-time them, which a donated (in-place) tick would invalidate.
         rhs = RollingHorizonSolver(p, stream, policy="cr1", lam=lam,
                                    cold_steps=cold_steps,
                                    warm_steps=warm_steps)

@@ -27,6 +27,7 @@ def main() -> None:
         ("fig11_future", paper_figs.fig11_future),
         ("solver_scale", perf_micro.solver_scale),
         ("fleet_cr3_scale", perf_micro.fleet_cr3_scale),
+        ("fleet_shard_scale", perf_micro.fleet_shard_scale),
         ("streaming_resolve", perf_micro.streaming_resolve),
         ("kernel_micro", perf_micro.kernel_micro),
         ("train_throughput", perf_micro.train_throughput),

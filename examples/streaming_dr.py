@@ -8,6 +8,14 @@ the first hour. Prints per-tick commitments and the realized-vs-forecast
 carbon ledger.
 
   PYTHONPATH=src python examples/streaming_dr.py [--ticks 12] [--policy cr1]
+
+Fleet scale: `--shard` runs every tick's re-solve sharded over all local
+devices as one donated-buffer XLA call (workloads padded to the device
+count, engine state re-solved in place). On CPU, expose virtual devices
+first, e.g.:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python examples/streaming_dr.py --shard --workloads 10000
 """
 import argparse
 
@@ -24,6 +32,9 @@ def main() -> None:
                     choices=("cr1", "cr2", "cr3"))
     ap.add_argument("--cold-steps", type=int, default=600)
     ap.add_argument("--warm-steps", type=int, default=150)
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the W axis over all devices and donate the "
+                         "engine state each tick (in-place re-solves)")
     args = ap.parse_args()
 
     print("== Carbon Responder: rolling-horizon streaming DR ==")
@@ -32,11 +43,20 @@ def main() -> None:
     print(f"fleet: {fleet.W} workloads x {fleet.T} h horizon, "
           f"policy {args.policy.upper()}")
     print(f"stream: {args.ticks} hourly forecast revisions "
-          f"(sigma={stream.revision_sigma}/sqrt-hour lead error)\n")
+          f"(sigma={stream.revision_sigma}/sqrt-hour lead error)")
+    mesh = None
+    if args.shard:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh()
+        n = len(mesh.devices.ravel())
+        print(f"sharding: {n} devices, "
+              f"{-(-fleet.W // n)} workload rows/device, donated ticks")
+    print()
 
     solver = RollingHorizonSolver(
         fleet, stream, policy=args.policy,
-        cold_steps=args.cold_steps, warm_steps=args.warm_steps)
+        cold_steps=args.cold_steps, warm_steps=args.warm_steps,
+        mesh=mesh, donate=args.shard)
 
     print("tick  start  steps  curtail[NP]  mci fc->act   CO2 fc/act [kg]")
 

@@ -7,6 +7,13 @@
 # and end-to-end tests, ~8 min on CPU) and finishes in a couple of
 # minutes. The tier-1 verify documented in ROADMAP.md is the --full lane:
 #   PYTHONPATH=src python -m pytest -x -q
+#
+# Both lanes finish with the multi-device lane: the fleet-sharding parity
+# tests run under 8 virtual CPU devices
+# (XLA_FLAGS=--xla_force_host_platform_device_count=8), so every PR
+# exercises the sharded == single-device contract. The main suite's
+# pytest process must stay single-device (see tests/conftest.py), so the
+# sharding file is split out into its own invocation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 lane=(-m "not slow")
@@ -15,4 +22,14 @@ if [[ "${1:-}" == "--full" ]]; then
   lane=()
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m pytest -x -q ${lane[@]+"${lane[@]}"} "$@"
+  python -m pytest -x -q ${lane[@]+"${lane[@]}"} \
+  --ignore=tests/test_fleet_sharding.py "$@"
+
+# Targeted runs (extra pytest args) skip the multi-device lane so e.g.
+# `scripts/ci.sh -k fleetcache` stays fast; both default lanes run it.
+if [[ $# -eq 0 ]]; then
+  echo "== multi-device lane (8 virtual CPU devices) =="
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_fleet_sharding.py
+fi

@@ -151,9 +151,15 @@ class ForecastStream:
 
     @property
     def n_ticks(self) -> int:
-        """Ticks for which a full horizon (and its realized hour) exist."""
+        """Ticks for which a full horizon (and its realized hour) exist.
+
+        Replay mode is clamped to `len(actual)`: a stream carrying more
+        forecast snapshots than realized hours would otherwise let
+        `forecast()` succeed on ticks whose `realized()` hour does not
+        exist, crashing the control loop mid-run with an IndexError."""
         if self.replay is not None:
-            return int(np.asarray(self.replay).shape[0])
+            return min(int(np.asarray(self.replay).shape[0]),
+                       int(np.asarray(self.actual).shape[0]))
         return max(0, int(self.actual.shape[0]) - self.horizon + 1)
 
     def forecast(self, tick: int) -> np.ndarray:
@@ -173,6 +179,10 @@ class ForecastStream:
 
     def realized(self, tick: int) -> float:
         """Actual MCI of hour `tick` (available once the hour elapses)."""
+        if not 0 <= tick < int(np.asarray(self.actual).shape[0]):
+            raise IndexError(
+                f"tick {tick} has no realized hour (actual covers "
+                f"[0, {int(np.asarray(self.actual).shape[0])}))")
         return float(self.actual[tick])
 
     @classmethod

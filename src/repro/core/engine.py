@@ -16,7 +16,28 @@ augmented Lagrangian. This module is the single implementation:
 
   * `al_minimize_batched` — `vmap` over a stacked hyperparameter axis, so a
     whole Pareto sweep (Fig. 8's lambda or cap grid) compiles once and runs
-    as one XLA call.
+    as one XLA call. Pass `return_aux=True` to also get the stacked aux
+    (including the per-lane `EngineState`) and `init=` a stacked state to
+    warm-start every lane of the next sweep.
+
+  * `al_minimize_sharded` — `shard_map` the same loop over the leading
+    workload axis of a device mesh, for fleets too large for one device.
+    The primal `x`, per-workload multipliers, and the Adam moments all live
+    sharded; each device runs the identical AL loop on its row block.
+
+Sharding contract (`al_minimize_sharded`): the caller's problem must be
+row-separable — objective a sum of per-row terms, every residual attached
+to a row — which holds for CR1/CR3 exactly and CR2 after its global
+normalizers are precomputed. Each device then differentiates its *local*
+partial objective; because the gradient of a cross-device sum w.r.t. a
+local row equals the local gradient, no collective appears in the hot
+loop at all. The genuinely global reductions — objective normalizers,
+shared step scales, CR3's Eq.-6 fiscal-clearing sums (taxes vs rebates) —
+are computed once *outside* the sharded region (or on the gathered
+solution) and enter as replicated scalars. Do NOT `psum` inside the
+differentiated objective: under `shard_map`, `jax.grad` of a psum'd
+scalar multiplies cotangents by the device count (psum's transpose is a
+psum), silently scaling every gradient by `n_devices`.
 
 `al_minimize` is deliberately *not* jitted here: adapters wrap it in their
 own `jax.jit` entry points (with policy knobs as traced `hyper` arguments),
@@ -205,14 +226,86 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
 
 def al_minimize_batched(objective: Objective,
                         project: Callable[[Array], Array], x0: Array,
-                        hypers: Any, **kwargs) -> Array:
+                        hypers: Any, *, init: EngineState | None = None,
+                        return_aux: bool = False, **kwargs):
     """vmap `al_minimize` over a stacked hyperparameter axis.
 
     `hypers` is a pytree whose leaves carry a leading sweep axis; the whole
     sweep shares one trace/compile (the Fig.-8 Pareto pattern). Returns the
-    stacked solutions (n_sweep, *x0.shape).
-    """
-    def one(h):
-        return al_minimize(objective, project, x0, hyper=h, **kwargs)[0]
+    stacked solutions (n_sweep, *x0.shape); with `return_aux=True`, returns
+    `(solutions, aux)` where every `aux` leaf — multipliers, mu, and
+    `aux["state"]` (an `EngineState` pytree) — carries the same leading
+    sweep axis, so a sweep can warm-start the next tick's sweep lane-by-lane
+    by passing that stacked state back as `init`.
 
-    return jax.vmap(one)(hypers)
+    `init` (optional) is a stacked `EngineState` (leading sweep axis on
+    every leaf, including `mu`), e.g. `aux["state"]` from a previous
+    batched solve.
+    """
+    if init is None:
+        def one(h):
+            return al_minimize(objective, project, x0, hyper=h, **kwargs)
+        xs, aux = jax.vmap(one)(hypers)
+    else:
+        def one_warm(h, st):
+            return al_minimize(objective, project, x0, hyper=h, init=st,
+                               **kwargs)
+        xs, aux = jax.vmap(one_warm)(hypers, init)
+    return (xs, aux) if return_aux else xs
+
+
+def al_minimize_sharded(build_pieces: Callable[[Any], dict], data: Any, *,
+                        mesh, data_specs: Any, init: EngineState,
+                        cfg: EngineConfig = EngineConfig(),
+                        axis_name: str | None = None,
+                        ) -> tuple[Array, dict[str, Array]]:
+    """Device-parallel `al_minimize`: shard the leading workload axis.
+
+    Runs the identical AL loop on every device's row block of a fleet-scale
+    problem, with `x`, per-workload multipliers, and Adam moments all
+    sharded over `axis_name` (default: the mesh's only axis).
+
+    Args:
+      build_pieces: called *inside* `shard_map` with the per-device block of
+        `data`; returns a dict of `al_minimize` keyword pieces —
+        ``{"objective", "project"}`` required, plus any of ``{"hyper",
+        "eq_residual", "ineq_residual", "step_scale", "grad_transform"}``.
+        The pieces see only local rows, so the objective each device
+        differentiates is its partial sum — exactly the global gradient for
+        row-separable problems (see the module docstring for why a psum
+        here would be wrong). Global scalars (normalizers, shared step
+        scales) must be precomputed by the caller and ride through `data`
+        as replicated leaves.
+      data: pytree of problem arrays — per-workload leaves lead with W
+        (divisible by the axis size; see `fleet_solver.pad_fleet`),
+        shared signals (MCI trace, scalars) replicated.
+      data_specs: pytree of `PartitionSpec`s matching `data` —
+        `P(axis_name)` for per-workload leaves, `P()` for replicated ones.
+      init: `EngineState` with global (full-W) arrays; `x`/`lam_eq`/`lam_in`
+        are sharded on their leading axis, `mu` replicated.
+
+    Returns (x, aux) exactly like `al_minimize`, with global arrays
+    (sharded jax.Arrays over `mesh`).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if axis_name is None:
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"axis_name required for multi-axis mesh {mesh.axis_names}")
+        axis_name = mesh.axis_names[0]
+    state_specs = EngineState(x=P(axis_name), lam_eq=P(axis_name),
+                              lam_in=P(axis_name), mu=P())
+    aux_specs = {"lam_eq": P(axis_name), "lam_in": P(axis_name), "mu": P(),
+                 "state": state_specs}
+
+    def body(data_blk, state_blk):
+        pieces = dict(build_pieces(data_blk))
+        objective = pieces.pop("objective")
+        project = pieces.pop("project")
+        return al_minimize(objective, project, state_blk.x,
+                           init=state_blk, cfg=cfg, **pieces)
+
+    return shard_map(body, mesh=mesh, in_specs=(data_specs, state_specs),
+                     out_specs=(P(axis_name), aux_specs))(data, init)

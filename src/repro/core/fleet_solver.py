@@ -34,6 +34,31 @@ projection). Each adapter is one jitted entry point:
 etc. are static), so adapters jit directly over it, and
 `FleetProblem.from_problem`/`to_problem` convert to/from the per-workload
 `DRProblem` so the SLSQP stack serves as a validation reference.
+
+Device sharding (100k-workload fleets): every adapter takes `mesh=` — a
+1-D device mesh (`repro.launch.mesh.make_fleet_mesh`) — and then runs the
+same AL loop through `engine.al_minimize_sharded`, sharding the W axis of
+the primal, the per-workload multipliers, the Adam moments, and every
+per-workload `FleetProblem` field; only the (T,) MCI trace and solver
+scalars are replicated. The contract:
+
+  * W is padded to a multiple of the device count with *inert* workloads
+    (`pad_fleet`: box [0, 0], k=0, safe divisors) — reported results are
+    sliced back to true rows, but `FleetSolveResult.state` keeps the
+    padded shape so streaming re-solves can chain without re-padding.
+  * Nothing is psum'd in the solver hot loop: the objectives are sums of
+    per-workload terms, so each device's local gradient IS the global one.
+    The genuinely cross-workload reductions — the objective normalizers
+    and shared step scales (`_cr1_norms`/`_cr2_norms`, computed from the
+    true fleet before padding) and CR3's Eq.-6 fiscal-clearing sums (taxes
+    vs rebates, computed on the gathered solution between best-response
+    rounds) — happen outside the sharded region and enter replicated.
+  * Streaming ticks fuse into one donated-buffer XLA call: `donate=True`
+    routes to a `jax.jit(..., donate_argnums=state)` twin, and
+    `shift=`/`reset_mu=` fold the rolling-horizon state shift and the
+    per-tick mu restart into the same call, so `RollingHorizonSolver`
+    re-solves in place. A donated `EngineState`'s buffers are invalidated
+    — don't reuse a state object you passed with `donate=True`.
 """
 from __future__ import annotations
 
@@ -45,9 +70,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.core.engine import EngineConfig, EngineState, al_minimize
+from repro.core.engine import (EngineConfig, EngineState, al_minimize,
+                               al_minimize_sharded)
 from repro.core.penalty import PenaltyModel
+from repro.launch.mesh import fleet_axis
 
 Array = jax.Array
 
@@ -247,6 +275,96 @@ def _jit_view(p: FleetProblem) -> FleetProblem:
     names live in the pytree treedef, so leaving them in would recompile
     the adapters for every same-shaped fleet with different job names."""
     return dataclasses.replace(p, names=None)
+
+
+#: Read-only +inf `upper` templates by shape — `pad_fleet` runs on every
+#: streaming tick, and a 100k-row fleet's no-op cap is ~40 MB we should
+#: not reallocate hourly.
+_INF_UPPER: dict[tuple[int, int], np.ndarray] = {}
+
+
+def _inf_upper(shape: tuple[int, int]) -> np.ndarray:
+    out = _INF_UPPER.get(shape)
+    if out is None:
+        out = np.full(shape, np.inf)
+        out.setflags(write=False)
+        _INF_UPPER[shape] = out
+    return out
+
+
+def pad_fleet(p: FleetProblem, multiple: int) -> tuple[FleetProblem, int]:
+    """Pad W up to a multiple of `multiple` with inert workloads.
+
+    Pad rows get usage=0.01 NP, entitlement=1, k=0 and an operational cap
+    (`upper`) of 0: their box is [0, 0] so the projection pins them at zero
+    curtailment, their penalties and penalty gradients are exactly zero
+    (k=0 with finite features), and every division the policies perform
+    (by entitlement, by usage, by tau=0.02·E) stays finite. The tiny usage
+    keeps CR3's smooth peak (tau·logsumexp(usage/tau) ≈ 0.09·E at D=0)
+    well inside the pad allowance for any tax_frac ≲ 0.9, so pad allowance
+    constraints stay feasible and their multipliers stay exactly zero —
+    even across arbitrarily long chained warm re-solves. `upper` is
+    materialized (+inf where the true fleet had none) so the padded pytree
+    has a fixed structure. Returns (padded problem, true W); reports and
+    fiscal sums must slice rows [:W_true].
+    """
+    pad = (-p.W) % multiple
+    upper = np.asarray(p.upper, float) if p.upper is not None \
+        else _inf_upper(p.usage.shape)
+    if pad == 0:
+        return dataclasses.replace(p, upper=upper, names=None), p.W
+
+    def rows(a, fill):
+        a = np.asarray(a)
+        return np.concatenate(
+            [a, np.full((pad,) + a.shape[1:], fill, dtype=a.dtype)])
+
+    return dataclasses.replace(
+        p, usage=rows(p.usage, 0.01), entitlement=rows(p.entitlement, 1.0),
+        k=rows(p.k, 0.0), rts_coeffs=rows(p.rts_coeffs, 0.0),
+        betas=rows(p.betas, 0.0), x2_kind=rows(p.x2_kind, 0.0),
+        jobs=rows(p.jobs, 1.0), is_batch=rows(p.is_batch, False),
+        upper=rows(upper, 0.0), names=None), p.W
+
+
+def _pad_state(state: EngineState, W_pad: int) -> EngineState:
+    """Zero-pad a warm start's per-workload leaves to the padded W (no-op
+    when already padded — the streaming donation chain relies on that)."""
+    W = state.x.shape[0]
+    if W == W_pad:
+        return state
+
+    def pad(a):
+        a = jnp.asarray(a)
+        if a.ndim and a.shape[0] == W:
+            return jnp.concatenate(
+                [a, jnp.zeros((W_pad - W,) + a.shape[1:], a.dtype)])
+        return a
+
+    return EngineState(x=pad(state.x), lam_eq=pad(state.lam_eq),
+                       lam_in=pad(state.lam_in), mu=state.mu)
+
+
+def _fleet_specs(p: FleetProblem, axis: str) -> FleetProblem:
+    """shard_map PartitionSpecs for a (padded) FleetProblem: every
+    per-workload field sharded on its leading W axis, the MCI replicated."""
+    row = P(axis)
+    return dataclasses.replace(
+        p, usage=row, entitlement=row, k=row, rts_coeffs=row, betas=row,
+        x2_kind=row, jobs=row, is_batch=row, mci=P(), upper=row)
+
+
+def _enter_tick(state: EngineState, shift: int, reset_mu: bool,
+                mu0: float) -> EngineState:
+    """Fused streaming-tick entry, traced inside the solve's own XLA call:
+    roll the plan `shift` hours and restart the mu schedule at the policy's
+    mu0 (multipliers still carry their constraint prices)."""
+    if shift:
+        state = state.shifted(shift)
+    if reset_mu:
+        state = dataclasses.replace(
+            state, mu=jnp.full_like(state.mu, mu0))
+    return state
 @dataclasses.dataclass(frozen=True)
 class FleetSolveResult:
     D: np.ndarray
@@ -316,29 +434,72 @@ def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
 # ---------------------------------------------------------------------------
 # CR1 — Efficient DR at fleet scale (thin adapter over the engine)
 # ---------------------------------------------------------------------------
-def _cr1_pieces(p: FleetProblem, use_kernel: bool):
+def _cr1_norms(p: FleetProblem):
+    """Fleet-global CR1 reductions (normalizers + shared step scale) —
+    computed from the TRUE fleet before any device padding, then passed
+    into the sharded solve as replicated scalars."""
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
-    pen_norm = 100.0 / jnp.asarray(p.entitlement).sum()
-    car_norm = 100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum()
+    return (100.0 / jnp.asarray(p.entitlement).sum(),
+            100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
+            jnp.maximum(hi - lo, 1e-6).mean())
+
+
+def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    pen_norm, car_norm, step_scale = \
+        _cr1_norms(p) if norms is None else norms
 
     def objective(D: Array, lam) -> Array:
         return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
                 - car_norm * (D @ mci).sum())
 
     project = _projection(p, lo, hi)
-    step_scale = jnp.maximum(hi - lo, 1e-6).mean()
     return objective, project, step_scale
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
-def _cr1_run(p: FleetProblem, lam, state0: EngineState, steps: int,
-             use_kernel: bool):
+def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
+              use_kernel: bool, shift: int = 0, reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
     objective, project, step_scale = _cr1_pieces(p, use_kernel)
     D, aux = al_minimize(objective, project, state0.x, hyper=lam,
                          step_scale=step_scale, init=state0,
                          cfg=EngineConfig(inner_steps=steps, outer_steps=1))
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu")
+_cr1_run = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC)
+_cr1_run_donated = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC,
+                           donate_argnums=(2,))
+
+
+def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
+                      mesh, steps: int, use_kernel: bool, shift: int = 0,
+                      reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, lam_b, norms_b = blk
+        objective, project, step_scale = _cr1_pieces(pb, use_kernel,
+                                                     norms=norms_b)
+        return dict(objective=objective, project=project, hyper=lam_b,
+                    step_scale=step_scale)
+
+    D, aux = al_minimize_sharded(
+        build, (p, lam, norms), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
+        init=state0, cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR1_STATIC_SH = ("mesh", "steps", "use_kernel", "shift", "reset_mu")
+_cr1_run_sharded = jax.jit(_cr1_impl_sharded, static_argnames=_CR1_STATIC_SH)
+_cr1_run_sharded_donated = jax.jit(_cr1_impl_sharded,
+                                   static_argnames=_CR1_STATIC_SH,
+                                   donate_argnums=(3,))
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
@@ -357,15 +518,40 @@ def _cr1_sweep(p: FleetProblem, lams, steps: int, use_kernel: bool):
 
 def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
                     use_kernel: bool | None = None,
-                    warm: EngineState | None = None) -> FleetSolveResult:
+                    warm: EngineState | None = None, *,
+                    mesh=None, donate: bool = False, shift: int = 0,
+                    reset_mu: bool = False) -> FleetSolveResult:
     """CR1 fleet solve. Pass `warm` (a previous result's `.state`, e.g.
     shifted by `EngineState.shifted`) to warm-start: same jit trace as the
-    cold solve, typically needing far fewer `steps`."""
+    cold solve, typically needing far fewer `steps`.
+
+    `mesh` shards the solve over the mesh's fleet axis (W padded to a
+    multiple of the device count; `result.state` keeps the padded shape so
+    re-solves chain without re-padding — see the module docstring).
+    `donate` routes through a `donate_argnums` twin that reuses the warm
+    state's buffers in place (the passed state becomes invalid);
+    `shift`/`reset_mu` fold the rolling-horizon shift and per-tick mu
+    restart into the same XLA call (the streaming tick path).
+    """
     use_kernel = resolve_use_kernel(use_kernel)
-    if warm is None:
-        warm = EngineState.cold(jnp.zeros(p.usage.shape))
-    D, pens, state = _cr1_run(_jit_view(p), lam, warm, steps, use_kernel)
-    return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
+    if mesh is None:
+        if warm is None:
+            warm = EngineState.cold(jnp.zeros(p.usage.shape))
+        run = _cr1_run_donated if donate else _cr1_run
+        D, pens, state = run(_jit_view(p), lam, warm, steps=steps,
+                             use_kernel=use_kernel, shift=shift,
+                             reset_mu=reset_mu)
+        return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
+                       state=state)
+    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
+    norms = _cr1_norms(p)
+    warm = _pad_state(warm, pp.W) if warm is not None \
+        else EngineState.cold(jnp.zeros(pp.usage.shape))
+    run = _cr1_run_sharded_donated if donate else _cr1_run_sharded
+    D, pens, state = run(pp, lam, norms, warm, mesh=mesh, steps=steps,
+                         use_kernel=use_kernel, shift=shift,
+                         reset_mu=reset_mu)
+    return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W], iters=steps,
                    state=state)
 
 
@@ -392,13 +578,21 @@ def cr2_reference_fleet(p: FleetProblem, cap_frac: float) -> np.ndarray:
     return np.asarray(fleet_penalties(p, jnp.asarray(d_cap)))
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
-def _cr2_run(p: FleetProblem, refs, state0: EngineState, steps: int,
-             outer: int, use_kernel: bool):
+def _cr2_norms(p: FleetProblem, refs):
+    """Fleet-global CR2 reductions (carbon normalizer, equality-residual
+    scale, shared step scale) from the TRUE fleet before padding."""
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
-    car_norm = 100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum()
-    scale = jnp.maximum(refs.mean(), 1e-3)
+    return (100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
+            jnp.maximum(refs.mean(), 1e-3),
+            jnp.maximum(hi - lo, 1e-6).mean())
+
+
+def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    car_norm, scale, step_scale = \
+        _cr2_norms(p, refs) if norms is None else norms
 
     def objective(D: Array, _) -> Array:
         return -car_norm * (D @ mci).sum()
@@ -406,51 +600,109 @@ def _cr2_run(p: FleetProblem, refs, state0: EngineState, steps: int,
     def eq(D: Array, _) -> Array:
         return (fleet_penalties(p, D, use_kernel) - refs) / scale
 
-    project = _projection(p, lo, hi)
-    step_scale = jnp.maximum(hi - lo, 1e-6).mean()
+    return objective, eq, _projection(p, lo, hi), step_scale
+
+
+def _cr2_cfg(steps: int, outer: int) -> EngineConfig:
+    return EngineConfig(inner_steps=steps, outer_steps=outer, mu0=CR2_MU0,
+                        mu_growth=2.0)
+
+
+def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
+              outer: int, use_kernel: bool, shift: int = 0,
+              reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
+    objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel)
     D, aux = al_minimize(objective, project, state0.x,
                          eq_residual=eq, step_scale=step_scale, init=state0,
-                         cfg=EngineConfig(inner_steps=steps,
-                                          outer_steps=outer,
-                                          mu0=CR2_MU0, mu_growth=2.0))
+                         cfg=_cr2_cfg(steps, outer))
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR2_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
+_cr2_run = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC)
+_cr2_run_donated = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC,
+                           donate_argnums=(2,))
+
+
+def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
+                      mesh, steps: int, outer: int, use_kernel: bool,
+                      shift: int = 0, reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, refs_b, norms_b = blk
+        objective, eq, project, step_scale = _cr2_pieces(
+            pb, refs_b, use_kernel, norms=norms_b)
+        return dict(objective=objective, project=project, eq_residual=eq,
+                    step_scale=step_scale)
+
+    D, aux = al_minimize_sharded(
+        build, (p, refs, norms), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), P(axis), (P(), P(), P())),
+        init=state0, cfg=_cr2_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR2_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
+                  "reset_mu")
+_cr2_run_sharded = jax.jit(_cr2_impl_sharded, static_argnames=_CR2_STATIC_SH)
+_cr2_run_sharded_donated = jax.jit(_cr2_impl_sharded,
+                                   static_argnames=_CR2_STATIC_SH,
+                                   donate_argnums=(3,))
 
 
 def solve_cr2_fleet(p: FleetProblem, cap_frac: float = 0.78,
                     steps: int = 400, outer: int = 6,
                     use_kernel: bool | None = None,
-                    warm: EngineState | None = None) -> FleetSolveResult:
+                    warm: EngineState | None = None, *,
+                    mesh=None, donate: bool = False, shift: int = 0,
+                    reset_mu: bool = False) -> FleetSolveResult:
     """min −carbon s.t. C_i(d_i) = C_i(cap%) ∀i — augmented Lagrangian with
     one multiplier per workload, everything vectorized over the fleet.
 
     `warm` carries a previous solve's primal AND its W equality multipliers
     (the per-workload fairness prices), so a rolling re-solve converges in
-    a fraction of the cold outer/inner budget."""
+    a fraction of the cold outer/inner budget. `mesh`/`donate`/`shift`/
+    `reset_mu` as in `solve_cr1_fleet`: the per-workload multipliers shard
+    with their rows, and the padded equality residuals are identically zero
+    so pad multipliers stay 0."""
     use_kernel = resolve_use_kernel(use_kernel)
     refs = jnp.asarray(cr2_reference_fleet(p, cap_frac))
-    if warm is None:
-        warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
-                                mu0=CR2_MU0)
-    D, pens, state = _cr2_run(_jit_view(p), refs, warm, steps, outer,
-                              use_kernel)
-    return _report(p, np.asarray(D), np.asarray(pens), iters=steps * outer,
-                   state=state)
+    if mesh is None:
+        if warm is None:
+            warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
+                                    mu0=CR2_MU0)
+        run = _cr2_run_donated if donate else _cr2_run
+        D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
+                             outer=outer, use_kernel=use_kernel,
+                             shift=shift, reset_mu=reset_mu)
+        return _report(p, np.asarray(D), np.asarray(pens),
+                       iters=steps * outer, state=state)
+    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
+    norms = _cr2_norms(p, refs)
+    refs_p = jnp.concatenate([refs, jnp.zeros(pp.W - W, refs.dtype)])
+    warm = _pad_state(warm, pp.W) if warm is not None \
+        else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
+                              mu0=CR2_MU0)
+    run = _cr2_run_sharded_donated if donate else _cr2_run_sharded
+    D, pens, state = run(pp, refs_p, norms, warm, mesh=mesh, steps=steps,
+                         outer=outer, use_kernel=use_kernel, shift=shift,
+                         reset_mu=reset_mu)
+    return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
+                   iters=steps * outer, state=state)
 
 
 # ---------------------------------------------------------------------------
 # CR3 at fleet scale — decentralized taxes and rebates (Eqs. 5–8)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
-def _cr3_best_response(p: FleetProblem, rho, tax_frac, state0: EngineState,
-                       steps: int, outer: int, use_kernel: bool):
-    """All W selfish problems in one AL solve. Each workload i minimizes its
-    own penalty s.t. the peak-allowance inequality (Eq. 5/8)
+def _cr3_pieces(p: FleetProblem, use_kernel: bool, reg_scale):
+    """Best-response pieces for one device's row block (or the whole fleet).
 
-        max_t (U_i − d_i) ≤ E_i − T_i + ρ·⟨mci, d_i⟩,   T_i = tax_frac·E_i
-
-    (smooth max as in `policies.cr3_workload_spec`). Objective, residual and
-    projection are all row-separable, so this single (W, T) engine call IS
-    the vmapped per-workload best response — one XLA call per round.
+    Everything here is row-separable; `reg_scale` is the regularizer
+    normalizer 1e-3/(W_true·T), passed in so a padded sharded solve
+    regularizes identically to the unpadded single-device one.
 
     Numerics, validated against the per-workload SLSQP reference:
       * tiny quadratic regularizer — a selfish workload takes the *minimal*
@@ -469,7 +721,7 @@ def _cr3_best_response(p: FleetProblem, rho, tax_frac, state0: EngineState,
     tau = 0.02 * E
 
     def objective(D: Array, hyper) -> Array:
-        reg = 1e-3 * ((D / E[:, None]) ** 2).mean()
+        reg = reg_scale * ((D / E[:, None]) ** 2).sum()
         return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
 
     def ineq(D: Array, hyper) -> Array:
@@ -488,24 +740,83 @@ def _cr3_best_response(p: FleetProblem, rho, tax_frac, state0: EngineState,
         Gd = jnp.where(is_batch, Gd - Gd.mean(axis=-1, keepdims=True), Gd)
         return jnp.concatenate([Gd.reshape(W, span), g[:, span:]], axis=1)
 
-    project = _projection(p, lo, hi)
     step_scale = jnp.maximum(hi - lo, 1e-6).mean(axis=1, keepdims=True)
+    return objective, ineq, _projection(p, lo, hi), step_scale, day_tangent
+
+
+def _cr3_cfg(steps: int, outer: int) -> EngineConfig:
+    return EngineConfig(inner_steps=steps, outer_steps=outer, lr=0.005,
+                        mu0=CR3_MU0, mu_growth=2.0, beta2=0.99)
+
+
+def _cr3_impl(p: FleetProblem, rho, tax_frac, reg_scale,
+              state0: EngineState, steps: int, outer: int, use_kernel: bool,
+              shift: int = 0, reset_mu: bool = False):
+    """All W selfish problems in one AL solve. Each workload i minimizes its
+    own penalty s.t. the peak-allowance inequality (Eq. 5/8)
+
+        max_t (U_i − d_i) ≤ E_i − T_i + ρ·⟨mci, d_i⟩,   T_i = tax_frac·E_i
+
+    (smooth max as in `policies.cr3_workload_spec`). Objective, residual and
+    projection are all row-separable, so this single (W, T) engine call IS
+    the vmapped per-workload best response — one XLA call per round.
+    """
+    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
+    objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
+        p, use_kernel, reg_scale)
     D, aux = al_minimize(objective, project, state0.x,
                          hyper=(rho, tax_frac), ineq_residual=ineq,
                          step_scale=step_scale, grad_transform=day_tangent,
-                         init=state0,
-                         cfg=EngineConfig(inner_steps=steps,
-                                          outer_steps=outer,
-                                          lr=0.005, mu0=CR3_MU0,
-                                          mu_growth=2.0, beta2=0.99))
+                         init=state0, cfg=_cr3_cfg(steps, outer))
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR3_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
+_cr3_best_response = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC)
+_cr3_best_response_donated = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC,
+                                     donate_argnums=(4,))
+
+
+def _cr3_impl_sharded(p: FleetProblem, rho, tax_frac, reg_scale,
+                      state0: EngineState, mesh, steps: int, outer: int,
+                      use_kernel: bool, shift: int = 0,
+                      reset_mu: bool = False):
+    """Sharded best response: the allowance inequality, its multipliers and
+    the per-row step scale all live with their rows; only ρ/tax/reg_scale
+    are replicated. The Eq.-6 fiscal sums live in `solve_cr3_fleet`."""
+    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, hyper_b, reg_b = blk
+        objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
+            pb, use_kernel, reg_b)
+        return dict(objective=objective, project=project, hyper=hyper_b,
+                    ineq_residual=ineq, step_scale=step_scale,
+                    grad_transform=day_tangent)
+
+    D, aux = al_minimize_sharded(
+        build, (p, (rho, tax_frac), reg_scale), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), (P(), P()), P()),
+        init=state0, cfg=_cr3_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR3_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
+                  "reset_mu")
+_cr3_sharded = jax.jit(_cr3_impl_sharded, static_argnames=_CR3_STATIC_SH)
+_cr3_sharded_donated = jax.jit(_cr3_impl_sharded,
+                               static_argnames=_CR3_STATIC_SH,
+                               donate_argnums=(4,))
 
 
 def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
                     tax_frac: float = 0.2, steps: int = 600, outer: int = 3,
                     clearing_iters: int = 8,
                     use_kernel: bool | None = None,
-                    warm: EngineState | None = None,
+                    warm: EngineState | None = None, *,
+                    mesh=None, donate: bool = False, shift: int = 0,
+                    reset_mu: bool = False,
                     ) -> tuple[FleetSolveResult, float]:
     """Fleet-scale CR3: vmapped best responses + fiscal-balance clearing.
 
@@ -517,20 +828,41 @@ def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
     (the allowance multipliers track the shrinking ρ smoothly); `warm`
     seeds round 0 the same way for rolling-horizon re-solves.
 
+    With `mesh`, each best response runs sharded over the fleet axis; the
+    Eq.-6 sums (rebates paid vs taxes collected) are the only cross-device
+    reductions and happen here, on the gathered true-W solution between
+    rounds. `donate`/`shift`/`reset_mu` as in `solve_cr1_fleet` (rounds
+    after the first always re-enter with the μ schedule restarted).
+
     If `clearing_iters` is exhausted with rebates still exceeding taxes,
     the result carries `balanced=False` and the remaining `fiscal_deficit`
     (rebates − taxes, NP·kgCO2/MWh), and a `RuntimeWarning` is emitted —
     callers must not treat the returned ρ as market-clearing then."""
     use_kernel = resolve_use_kernel(use_kernel)
-    pj = _jit_view(p)
     mci = np.asarray(p.mci)
     collected = tax_frac * float(np.asarray(p.entitlement).sum())
     rho_cur = float(rho)
-    state = warm if warm is not None else EngineState.cold(
-        jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
-    D, pens, state = _cr3_best_response(pj, rho_cur, tax_frac, state, steps,
-                                        outer, use_kernel)
-    D = np.asarray(D)
+    if mesh is None:
+        pj, W = _jit_view(p), p.W
+        state = warm if warm is not None else EngineState.cold(
+            jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
+        twin = _cr3_best_response_donated if donate else _cr3_best_response
+    else:
+        pj, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
+        state = _pad_state(warm, pj.W) if warm is not None \
+            else EngineState.cold(jnp.zeros(pj.usage.shape), n_in=pj.W,
+                                  mu0=CR3_MU0)
+        twin = _cr3_sharded_donated if donate else _cr3_sharded
+    reg_scale = 1e-3 / (W * p.T)
+
+    def best_response(st, shift_, reset_):
+        kw = {} if mesh is None else {"mesh": mesh}
+        return twin(pj, rho_cur, tax_frac, reg_scale, st, steps=steps,
+                    outer=outer, use_kernel=use_kernel, shift=shift_,
+                    reset_mu=reset_, **kw)
+
+    D, pens, state = best_response(state, shift, reset_mu)
+    D = np.asarray(D)[:W]
     rounds = 1
     paid = rho_cur * float((D @ mci).sum())
     for _ in range(clearing_iters):
@@ -539,11 +871,8 @@ def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
         rho_cur *= max(0.5, 0.9 * collected / max(paid, 1e-9))
         # Carry primal + allowance multipliers; restart the μ schedule so
         # every round keeps the gentle wall the best response relies on.
-        state = dataclasses.replace(
-            state, mu=jnp.full_like(state.mu, CR3_MU0))
-        D, pens, state = _cr3_best_response(pj, rho_cur, tax_frac, state,
-                                            steps, outer, use_kernel)
-        D = np.asarray(D)
+        D, pens, state = best_response(state, 0, True)
+        D = np.asarray(D)[:W]
         rounds += 1
         paid = rho_cur * float((D @ mci).sum())
     balanced = paid <= collected + 1e-9
@@ -554,6 +883,7 @@ def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
             f"{clearing_iters} iterations — rebates exceed taxes by "
             f"{deficit:.4g} at rho={rho_cur:.4g} (Eq. 6 unmet)",
             RuntimeWarning, stacklevel=2)
-    return (_report(p, D, np.asarray(pens), iters=steps * outer * rounds,
+    return (_report(p, D, np.asarray(pens)[:W],
+                    iters=steps * outer * rounds,
                     state=state, balanced=balanced, fiscal_deficit=deficit),
             rho_cur)

@@ -2,12 +2,21 @@
 
 Building the four-service fleet runs ~160 EDD simulations (≈45 s); tests,
 benchmarks and examples share one cached copy keyed by the build settings.
+
+The cache is crash/race-safe: writes go to a temp file in the cache
+directory and land via `os.replace` (atomic on POSIX), so parallel
+pytest/CI workers racing the first build can never leave a truncated
+`.npz` behind; and a corrupt/unreadable cache file falls back to a rebuild
+(which atomically replaces it) instead of poisoning every later run.
 """
 from __future__ import annotations
 
 import json
 import os
 import pathlib
+import tempfile
+import warnings
+import zipfile
 
 import numpy as np
 
@@ -18,29 +27,31 @@ _CACHE_DIR = pathlib.Path(
                    pathlib.Path(__file__).resolve().parents[3] / "var"))
 
 
-def cached_paper_fleet(hours: int = 48, total_power: float = 100.0,
-                       num_samples: int = 160, num_jobs: int = 10_000,
-                       seed: int = 0) -> dict[str, PenaltyModel]:
-    key = f"fleet_h{hours}_p{total_power:g}_s{num_samples}_j{num_jobs}_r{seed}"
-    path = _CACHE_DIR / f"{key}.npz"
-    if path.exists():
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(str(z["meta"]))
-        out = {}
-        for name, m in meta.items():
-            out[name] = PenaltyModel(
-                name=name, kind=m["kind"], usage=z[f"{name}_usage"],
-                entitlement=m["entitlement"], k=m["k"],
-                params=tuple(m["params"]),
-                jobs=z[f"{name}_jobs"] if f"{name}_jobs" in z else None,
-                slo_hours=m["slo_hours"],
-                feature_names=tuple(m["feature_names"])
-                if m["feature_names"] else None)
-        return out
-    fleet = build_paper_fleet(hours=hours, total_power=total_power,
-                              num_samples=num_samples, num_jobs=num_jobs,
-                              seed=seed)
-    _CACHE_DIR.mkdir(parents=True, exist_ok=True)
+def _load_cache(path: pathlib.Path) -> dict[str, PenaltyModel] | None:
+    """Read a cached fleet; None (rebuild) on any corruption."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            out = {}
+            for name, m in meta.items():
+                out[name] = PenaltyModel(
+                    name=name, kind=m["kind"], usage=z[f"{name}_usage"],
+                    entitlement=m["entitlement"], k=m["k"],
+                    params=tuple(m["params"]),
+                    jobs=z[f"{name}_jobs"] if f"{name}_jobs" in z else None,
+                    slo_hours=m["slo_hours"],
+                    feature_names=tuple(m["feature_names"])
+                    if m["feature_names"] else None)
+            return out
+    except (zipfile.BadZipFile, OSError, EOFError, ValueError, KeyError,
+            json.JSONDecodeError) as e:
+        warnings.warn(f"corrupt fleet cache {path} ({e!r}); rebuilding",
+                      RuntimeWarning, stacklevel=3)
+        return None
+
+
+def _save_cache(path: pathlib.Path, fleet: dict[str, PenaltyModel]) -> None:
+    """Atomic cache write: temp file in the same directory + os.replace."""
     arrays: dict[str, np.ndarray] = {}
     meta: dict[str, dict] = {}
     for name, m in fleet.items():
@@ -52,5 +63,32 @@ def cached_paper_fleet(hours: int = 48, total_power: float = 100.0,
             "params": list(m.params), "slo_hours": m.slo_hours,
             "feature_names": list(m.feature_names) if m.feature_names else None,
         }
-    np.savez(path, meta=np.str_(json.dumps(meta)), **arrays)
+    _CACHE_DIR.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=_CACHE_DIR, prefix=path.stem,
+                               suffix=".tmp.npz")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, meta=np.str_(json.dumps(meta)), **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def cached_paper_fleet(hours: int = 48, total_power: float = 100.0,
+                       num_samples: int = 160, num_jobs: int = 10_000,
+                       seed: int = 0) -> dict[str, PenaltyModel]:
+    key = f"fleet_h{hours}_p{total_power:g}_s{num_samples}_j{num_jobs}_r{seed}"
+    path = _CACHE_DIR / f"{key}.npz"
+    if path.exists():
+        cached = _load_cache(path)
+        if cached is not None:
+            return cached
+    fleet = build_paper_fleet(hours=hours, total_power=total_power,
+                              num_samples=num_samples, num_jobs=num_jobs,
+                              seed=seed)
+    _save_cache(path, fleet)
     return fleet

@@ -20,10 +20,19 @@ the window slides forward. This module is that control loop:
 
 Because `EngineState` is a pure-array pytree and every tick's problem has
 identical shapes, all warm re-solves reuse ONE jitted trace (per policy):
-the hot path is a single XLA call per tick, and the warm start lets it run
-with a fraction of the cold solve's inner Adam steps
+the hot path is a single XLA call per tick — the adapters' `shift=`/
+`reset_mu=` arguments fold the one-hour state roll and the per-tick mu
+restart into that same call, and `donate=True` additionally donates the
+previous tick's `EngineState` buffers so XLA re-solves in place
+(`jax.jit(donate_argnums)`). The warm start lets each tick run with a
+fraction of the cold solve's inner Adam steps
 (`benchmarks.perf_micro.streaming_resolve` measures the latency and
 solution gap).
+
+Fleet scale: pass `mesh=` (see `repro.launch.mesh.make_fleet_mesh`) to run
+every tick's re-solve sharded over the mesh's fleet axis. The engine state
+then carries the device-padded workload count between ticks (no per-tick
+re-padding), and the donated tick reuses the per-device buffers in place.
 
 Receding-horizon caveat: batch day-preservation is enforced over the
 sliding window's 24 h blocks each re-solve (the standard receding-horizon
@@ -35,13 +44,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.carbon import ForecastStream
 from repro.core.engine import EngineState
-from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
-                                     FleetProblem, FleetSolveResult,
+from repro.core.fleet_solver import (FleetProblem, FleetSolveResult,
                                      solve_cr1_fleet, solve_cr2_fleet,
                                      solve_cr3_fleet)
 
@@ -107,6 +114,13 @@ class RollingHorizonSolver:
         speedup is `cold_steps / warm_steps` per multiplier round.
       policy knobs: `lam` (CR1), `cap_frac`/`outer` (CR2),
         `rho`/`tax_frac`/`outer` (CR3).
+      mesh: optional device mesh — every tick's re-solve runs sharded over
+        its fleet axis (workloads padded to the device count once; the
+        engine state stays padded between ticks).
+      donate: donate each tick's incoming `EngineState` to the re-solve
+        (in-place buffers, one XLA call per tick). Prior ticks'
+        `plan.state` objects become invalid once the next tick runs, so
+        leave False when capturing states from `on_tick` callbacks.
     """
 
     def __init__(self, problem: FleetProblem, stream: ForecastStream, *,
@@ -114,7 +128,8 @@ class RollingHorizonSolver:
                  cap_frac: float = 0.78, rho: float = 0.02,
                  tax_frac: float = 0.2, cold_steps: int = 600,
                  warm_steps: int = 150, outer: int = 4,
-                 use_kernel: bool | None = None):
+                 use_kernel: bool | None = None,
+                 mesh=None, donate: bool = False):
         if stream.horizon != problem.T:
             raise ValueError(
                 f"stream horizon {stream.horizon} != problem.T {problem.T}")
@@ -132,6 +147,8 @@ class RollingHorizonSolver:
         self.warm_steps = warm_steps
         self.outer = outer
         self.use_kernel = use_kernel
+        self.mesh = mesh
+        self.donate = donate
         self._state: EngineState | None = None
         self._tick = 0
         self._history: list[TickResult] = []
@@ -148,25 +165,22 @@ class RollingHorizonSolver:
             upper=None if p.upper is None
             else np.roll(p.upper, -tick, axis=1))
 
-    # Per-policy initial AL penalty weight (the adapters' own constants).
-    _MU0 = {"cr1": CR1_MU0, "cr2": CR2_MU0, "cr3": CR3_MU0}
-
     def _solve(self, p: FleetProblem, warm: EngineState | None,
-               steps: int) -> FleetSolveResult:
+               steps: int, shift: int, reset_mu: bool) -> FleetSolveResult:
+        kw = dict(use_kernel=self.use_kernel, warm=warm, mesh=self.mesh,
+                  donate=self.donate, shift=shift, reset_mu=reset_mu)
         if self.policy == "cr1":
-            return solve_cr1_fleet(p, lam=self.lam, steps=steps,
-                                   use_kernel=self.use_kernel, warm=warm)
+            return solve_cr1_fleet(p, lam=self.lam, steps=steps, **kw)
         if self.policy == "cr2":
             return solve_cr2_fleet(p, cap_frac=self.cap_frac, steps=steps,
-                                   outer=self.outer,
-                                   use_kernel=self.use_kernel, warm=warm)
+                                   outer=self.outer, **kw)
         # Re-clear every window from the *configured* price: clearing only
         # ever lowers rho, so carrying a lowered price forward would ratchet
         # the fleet onto a permanently depressed carbon price after one
         # transient tick. `last_rho` exposes the latest cleared price.
         result, self.last_rho = solve_cr3_fleet(
             p, rho=self.rho, tax_frac=self.tax_frac, steps=steps,
-            outer=self.outer, use_kernel=self.use_kernel, warm=warm)
+            outer=self.outer, **kw)
         return result
 
     def step(self) -> TickResult:
@@ -174,19 +188,16 @@ class RollingHorizonSolver:
         tick = self._tick
         mci_hat = self.stream.forecast(tick)
         p_t = self._window_problem(tick, mci_hat)
-        if self._state is None:
-            warm = None
-        else:
-            # Shift the plan one hour; restart the mu schedule at the
-            # policy's mu0 — without the reset, mu compounds by
-            # mu_growth^outer per tick and CR2/CR3's walls turn stiff
-            # within a handful of ticks (multipliers still carry the
-            # constraint prices).
-            warm = self._state.shifted(1)
-            warm = dataclasses.replace(
-                warm, mu=jnp.full_like(warm.mu, self._MU0[self.policy]))
+        warm = self._state
+        # Warm ticks shift the plan one hour and restart the mu schedule at
+        # the policy's mu0 — without the reset, mu compounds by
+        # mu_growth^outer per tick and CR2/CR3's walls turn stiff within a
+        # handful of ticks (multipliers still carry the constraint prices).
+        # Both happen *inside* the adapter's jitted call, so a tick is one
+        # XLA dispatch (donated when self.donate).
         steps = self.cold_steps if warm is None else self.warm_steps
-        plan = self._solve(p_t, warm, steps)
+        plan = self._solve(p_t, warm, steps, shift=0 if warm is None else 1,
+                           reset_mu=warm is not None)
         self._state = plan.state
         self._tick = tick + 1
         out = TickResult(

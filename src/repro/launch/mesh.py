@@ -7,10 +7,19 @@ xla_force_host_platform_device_count trick to work.
 Production target: TPU v5e pods, 256 chips each.
   single-pod:  (16, 16)      axes (data, model)
   multi-pod:   (2, 16, 16)   axes (pod, data, model)
+
+Fleet-DR sharding: the (W, T) fleet solves in `repro.core.fleet_solver`
+are row-separable over workloads, so they shard W over a 1-D mesh
+(`make_fleet_mesh`, axis `FLEET_AXIS`). On CPU CI that mesh comes from
+`XLA_FLAGS=--xla_force_host_platform_device_count=N` virtual devices.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+#: Mesh axis name the fleet DR engine shards workloads over.
+FLEET_AXIS = "fleet"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,6 +33,30 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int = 1):
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D mesh over `n_devices` (default: all) for W-axis fleet sharding.
+
+    Used by `solve_cr{1,2,3}_fleet(..., mesh=...)`: workloads, per-workload
+    multipliers, and Adam moments shard over `FLEET_AXIS`; the MCI trace and
+    solver scalars stay replicated.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (FLEET_AXIS,))
+
+
+def fleet_axis(mesh) -> str:
+    """Mesh axis the fleet solvers shard W over: `FLEET_AXIS` when present,
+    else the sole axis of a 1-D mesh."""
+    if FLEET_AXIS in mesh.axis_names:
+        return FLEET_AXIS
+    if len(mesh.axis_names) == 1:
+        return mesh.axis_names[0]
+    raise ValueError(
+        f"fleet sharding needs a {FLEET_AXIS!r} axis or a 1-D mesh; got "
+        f"axes {mesh.axis_names}")
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -72,6 +72,43 @@ def test_engine_batched_sweep_matches_unbatched():
         np.testing.assert_allclose(np.asarray(x), np.asarray(one), atol=1e-5)
 
 
+def test_engine_batched_returns_stacked_aux_and_warm_starts():
+    """A sweep must surface its solver state (stacked EngineState) so the
+    next tick's sweep can warm-start lane-by-lane — and re-entering that
+    state with a tiny budget must stay at each lane's optimum."""
+    from repro.core.engine import EngineState
+
+    def obj(x, h):
+        return ((x - h) ** 2).sum()
+
+    def project(x):
+        return jnp.clip(x, 0.0, 1.0)
+
+    hypers = jnp.asarray([0.2, 0.5, 2.0])
+    cfg = EngineConfig(inner_steps=200, outer_steps=1, lr=0.05)
+    xs, aux = al_minimize_batched(obj, project, jnp.zeros(2), hypers,
+                                  cfg=cfg, return_aux=True)
+    state = aux["state"]
+    assert isinstance(state, EngineState)
+    assert state.x.shape == (3, 2)        # leading sweep axis on every leaf
+    assert state.mu.shape == (3,)
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(state.x))
+
+    # a short warm budget stays at each lane's optimum (fresh Adam moments
+    # wiggle the first steps, so compare to the optima, not bitwise to xs)
+    warm_xs = al_minimize_batched(
+        obj, project, jnp.zeros(2), hypers, init=state,
+        cfg=EngineConfig(inner_steps=50, outer_steps=1, lr=0.05))
+    np.testing.assert_allclose(np.asarray(warm_xs[:, 0]), [0.2, 0.5, 1.0],
+                               atol=2e-2)
+
+    # positional return unchanged for existing callers
+    xs_only = al_minimize_batched(obj, project, jnp.zeros(2), hypers,
+                                  cfg=cfg)
+    np.testing.assert_allclose(np.asarray(xs_only), np.asarray(xs),
+                               atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # fleet_penalties is the single penalty path — its gradients must be exact
 # ---------------------------------------------------------------------------

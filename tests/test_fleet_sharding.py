@@ -1,0 +1,172 @@
+"""Device-sharded fleet engine: parity vs single-device, W padding, and the
+donated-buffer streaming tick.
+
+Multi-device cases run in subprocesses with 8 virtual CPU devices
+(`conftest.run_in_subprocess`) — the main pytest process must stay
+single-device. `scripts/ci.sh` also runs this file in its multi-device
+lane on every PR.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Host-side helpers (no mesh needed)
+# ---------------------------------------------------------------------------
+def test_pad_fleet_rows_are_inert():
+    import jax.numpy as jnp
+    from repro.core.fleet_solver import (_bounds, fleet_penalties, pad_fleet,
+                                         synthetic_fleet)
+    p = synthetic_fleet(13)
+    pp, W = pad_fleet(p, 8)
+    assert (W, pp.W) == (13, 16)
+    assert pp.usage.shape == (16, p.T)
+    # true rows untouched
+    np.testing.assert_array_equal(pp.usage[:13], p.usage)
+    # pad rows: box pinned to [0, 0], zero penalties, finite divisors
+    lo, hi = _bounds(pp)
+    assert float(np.abs(np.asarray(hi)[13:]).max()) == 0.0
+    assert float(np.abs(np.asarray(lo)[13:]).max()) == 0.0
+    D = jnp.asarray(np.r_[0.1 * p.usage, np.zeros((3, p.T))])
+    pens = np.asarray(fleet_penalties(pp, D))
+    assert np.isfinite(pens).all()
+    assert (pens[13:] == 0).all()
+
+
+def test_pad_fleet_divisible_is_passthrough():
+    from repro.core.fleet_solver import pad_fleet, synthetic_fleet
+    p = synthetic_fleet(16)
+    pp, W = pad_fleet(p, 8)
+    assert (W, pp.W) == (16, 16)
+    np.testing.assert_array_equal(pp.usage, p.usage)
+    assert pp.upper is not None          # materialized for the spec tree
+
+
+def test_pad_state_noop_when_already_padded():
+    import jax.numpy as jnp
+    from repro.core.engine import EngineState
+    from repro.core.fleet_solver import _pad_state
+    st = EngineState.cold(jnp.ones((8, 4)), n_eq=8)
+    assert _pad_state(st, 8) is st
+    padded = _pad_state(EngineState.cold(jnp.ones((5, 4)), n_eq=5), 8)
+    assert padded.x.shape == (8, 4)
+    assert padded.lam_eq.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(padded.x[5:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-device (8 virtual devices)
+# ---------------------------------------------------------------------------
+def test_sharded_parity_paper_fleet(paper_fleet):
+    """Acceptance: all three policies on the 4-workload paper fleet (padded
+    4 -> 8 rows) match the single-device solve to <0.01 pp."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.carbon import caiso_2021
+from repro.core.fleet_solver import (from_models, solve_cr1_fleet,
+                                     solve_cr2_fleet, solve_cr3_fleet)
+from repro.core.fleetcache import cached_paper_fleet
+from repro.launch.mesh import make_fleet_mesh
+
+fleet = cached_paper_fleet()
+models = tuple(fleet[n] for n in ("RTS1", "RTS2", "AITraining",
+                                  "DataPipeline"))
+p = from_models(models, caiso_2021(48).mci)
+mesh = make_fleet_mesh()
+assert len(mesh.devices.ravel()) == 8
+
+a = solve_cr1_fleet(p, lam=1.4, steps=300)
+b = solve_cr1_fleet(p, lam=1.4, steps=300, mesh=mesh)
+gap = abs((1.4 * a.total_penalty_pct - a.carbon_reduction_pct)
+          - (1.4 * b.total_penalty_pct - b.carbon_reduction_pct))
+assert gap < 0.01, f"CR1 gap {gap}"
+assert b.D.shape == (4, 48)
+assert b.state.x.shape == (8, 48)      # padded state for re-solve chaining
+
+a = solve_cr2_fleet(p, steps=200, outer=3)
+b = solve_cr2_fleet(p, steps=200, outer=3, mesh=mesh)
+assert abs(a.carbon_reduction_pct - b.carbon_reduction_pct) < 0.01
+assert abs(a.total_penalty_pct - b.total_penalty_pct) < 0.01
+
+(a, rho_a) = solve_cr3_fleet(p, steps=200, outer=2, clearing_iters=3)
+(b, rho_b) = solve_cr3_fleet(p, steps=200, outer=2, clearing_iters=3,
+                             mesh=mesh)
+assert abs(a.carbon_reduction_pct - b.carbon_reduction_pct) < 0.01
+assert abs(a.total_penalty_pct - b.total_penalty_pct) < 0.01
+assert abs(rho_a - rho_b) < 1e-9       # identical Eq.-6 clearing trajectory
+assert b.balanced == a.balanced
+# pad rows are inert: their allowance constraints stay feasible, so their
+# multipliers stay exactly zero (no growth to leak into chained re-solves)
+assert float(np.abs(np.asarray(b.state.lam_in)[4:]).max()) == 0.0
+print("OK")
+""")
+
+
+def test_sharded_parity_synthetic_mixed_and_padding():
+    """Synthetic mixed fleet: W=13 (not divisible by 8) pads to 16 and still
+    matches the single-device solve; warm re-solves accept both padded and
+    unpadded states."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.launch.mesh import make_fleet_mesh
+
+mesh = make_fleet_mesh()
+p = synthetic_fleet(13)
+a = solve_cr1_fleet(p, lam=1.45, steps=300)
+b = solve_cr1_fleet(p, lam=1.45, steps=300, mesh=mesh)
+assert b.D.shape == (13, 48)
+gap = abs((1.45 * a.total_penalty_pct - a.carbon_reduction_pct)
+          - (1.45 * b.total_penalty_pct - b.carbon_reduction_pct))
+assert gap < 0.01, f"gap {gap}"
+
+# warm chaining: unpadded state (from the single-device solve) pads on
+# entry; padded state (from the sharded solve) passes straight through.
+w1 = solve_cr1_fleet(p, lam=1.45, steps=100, mesh=mesh, warm=a.state)
+w2 = solve_cr1_fleet(p, lam=1.45, steps=100, mesh=mesh, warm=b.state)
+assert np.abs(w1.D - w2.D).max() < 1e-4
+print("OK")
+""")
+
+
+def test_sharded_donated_streaming_tick():
+    """The fused donated-buffer streaming tick (shift + mu reset + re-solve
+    in one XLA call, state buffers donated) commits the same plan as the
+    legacy unfused path, and its warm re-solves keep the streaming_resolve
+    objective gap vs a cold solve at the full budget."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.carbon import ForecastStream
+from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.core.streaming import RollingHorizonSolver
+from repro.launch.mesh import make_fleet_mesh
+
+lam, cold, warm = 1.45, 400, 120
+p = synthetic_fleet(8)
+mesh = make_fleet_mesh()
+
+rep_plain = RollingHorizonSolver(
+    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5), policy="cr1",
+    lam=lam, cold_steps=cold, warm_steps=warm).run(4)
+rep_don = RollingHorizonSolver(
+    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5), policy="cr1",
+    lam=lam, cold_steps=cold, warm_steps=warm, mesh=mesh,
+    donate=True).run(4)
+assert np.abs(rep_plain.committed - rep_don.committed).max() < 1e-5
+assert [t.inner_steps for t in rep_don.ticks] == [cold, warm, warm, warm]
+
+# warm-vs-cold objective gap on the last window (PR-2 criterion)
+stream = ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5)
+rhs = RollingHorizonSolver(p, stream, policy="cr1", lam=lam,
+                           cold_steps=cold, warm_steps=warm, mesh=mesh)
+rhs.run(4)
+last = rhs._history[-1]
+p_t = rhs._window_problem(last.tick, stream.forecast(last.tick))
+cold_r = solve_cr1_fleet(p_t, lam=lam, steps=cold, mesh=mesh)
+obj = lambda r: lam * r.total_penalty_pct - r.carbon_reduction_pct
+gap = obj(last.plan) - obj(cold_r)
+assert gap <= 0.1, f"warm obj gap {gap}"
+print("OK")
+""")

@@ -1,0 +1,76 @@
+"""Fleet-cache robustness: atomic writes and corrupt-cache recovery."""
+import numpy as np
+import pytest
+
+from repro.core import fleetcache
+from repro.core.penalty import PenaltyModel
+
+
+def _tiny_fleet(hours=6):
+    usage = np.linspace(1.0, 2.0, hours)
+    return {
+        "RTS1": PenaltyModel(name="RTS1", kind="realtime", usage=usage,
+                             entitlement=3.0, k=0.5,
+                             params=(0.1, 0.2, 0.3)),
+        "Batch": PenaltyModel(name="Batch", kind="batch_noslo", usage=usage,
+                              entitlement=4.0, k=0.7,
+                              params=(0.0, 0.1, 0.2),
+                              jobs=np.ones(hours),
+                              feature_names=("waiting_time_power",
+                                             "num_jobs_delayed")),
+    }
+
+
+@pytest.fixture()
+def cache_env(tmp_path, monkeypatch):
+    """Redirect the cache dir and stub the expensive build."""
+    calls = {"builds": 0}
+
+    def fake_build(**kwargs):
+        calls["builds"] += 1
+        return _tiny_fleet(kwargs.get("hours", 6))
+
+    monkeypatch.setattr(fleetcache, "_CACHE_DIR", tmp_path)
+    monkeypatch.setattr(fleetcache, "build_paper_fleet", fake_build)
+    return tmp_path, calls
+
+
+def test_cache_roundtrip_and_atomic_layout(cache_env):
+    tmp_path, calls = cache_env
+    fleet = fleetcache.cached_paper_fleet(hours=6)
+    assert calls["builds"] == 1
+    # exactly the final cache file on disk — no stray temp files
+    files = sorted(f.name for f in tmp_path.iterdir())
+    assert files == ["fleet_h6_p100_s160_j10000_r0.npz"]
+    again = fleetcache.cached_paper_fleet(hours=6)
+    assert calls["builds"] == 1            # served from cache
+    for name in fleet:
+        np.testing.assert_array_equal(again[name].usage, fleet[name].usage)
+        assert again[name].params == fleet[name].params
+        assert again[name].kind == fleet[name].kind
+
+
+def test_corrupt_cache_rebuilds_instead_of_crashing(cache_env):
+    """Regression: a truncated .npz (e.g. a killed CI worker mid-savez)
+    must trigger a rebuild + atomic rewrite, not poison every later run."""
+    tmp_path, calls = cache_env
+    fleetcache.cached_paper_fleet(hours=6)
+    path = tmp_path / "fleet_h6_p100_s160_j10000_r0.npz"
+    # truncate: the classic partial-write corruption
+    path.write_bytes(path.read_bytes()[:40])
+    with pytest.warns(RuntimeWarning, match="corrupt fleet cache"):
+        fleet = fleetcache.cached_paper_fleet(hours=6)
+    assert calls["builds"] == 2
+    assert set(fleet) == {"RTS1", "Batch"}
+    # the rewrite healed the cache
+    fleetcache.cached_paper_fleet(hours=6)
+    assert calls["builds"] == 2
+
+
+def test_garbage_cache_file_rebuilds(cache_env):
+    tmp_path, calls = cache_env
+    path = tmp_path / "fleet_h6_p100_s160_j10000_r0.npz"
+    path.write_bytes(b"not a zip archive at all")
+    with pytest.warns(RuntimeWarning, match="corrupt fleet cache"):
+        fleetcache.cached_paper_fleet(hours=6)
+    assert calls["builds"] == 1

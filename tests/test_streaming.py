@@ -52,6 +52,25 @@ def test_forecast_stream_replay_mode():
                        replay=np.ones((3, 7)))
 
 
+def test_forecast_stream_replay_clamped_to_realized_hours():
+    """Regression: more replay snapshots than realized hours must clamp
+    `n_ticks` — previously `forecast()` succeeded on ticks whose
+    `realized()` hour did not exist, crashing mid-run with IndexError."""
+    snaps = np.ones((5, 8))
+    s = ForecastStream(actual=np.ones(3), horizon=8, replay=snaps)
+    assert s.n_ticks == 3                       # min(replay rows, actual)
+    assert s.forecast(2).shape == (8,)
+    assert s.realized(2) == 1.0
+    with pytest.raises(IndexError):
+        s.forecast(3)                           # beyond the realized range
+    with pytest.raises(IndexError):
+        s.realized(3)
+    # a full run over n_ticks never touches a missing realized hour
+    for t in range(s.n_ticks):
+        s.forecast(t)
+        s.realized(t)
+
+
 def test_forecast_stream_realized_is_actual():
     sig = caiso_2021(60)
     s = ForecastStream(actual=sig.mci, horizon=48)
