@@ -61,10 +61,12 @@ def policy_sweeps(problem=None, force: bool = False) -> list[dict]:
     path = VAR / "policy_sweep.json"
     if path.exists() and not force:
         return json.loads(path.read_text())
+    from repro.core.api import CR3, solve
     from repro.core.baselines import (b1_adjustments, b2_spec,
                                       b3_adjustments, b4_spec)
+    from repro.core.fleet_solver import FleetProblem
     from repro.core.policies import PolicySpec, cr1_spec, cr2_spec
-    from repro.core.solver import evaluate, solve_cr3, solve_slsqp
+    from repro.core.solver import evaluate, solve_slsqp
     p = problem or get_problem()
     out: list[dict] = []
 
@@ -80,8 +82,15 @@ def policy_sweeps(problem=None, force: bool = False) -> list[dict]:
     for cap in (0.84, 0.82, 0.80, 0.78, 0.76, 0.74):
         r = solve_slsqp(cr2_spec(p, cap), maxiter=250)
         out.append(_res_to_dict(r, "CR2", cap))
+    # CR3 through the unified fleet API — the same engine the benchmarks
+    # time (vmapped best responses + Eq.-6 clearing); per-workload figure
+    # metrics come from the per-problem evaluator on the fleet solution.
+    fp = FleetProblem.from_problem(p)
     for tax in (0.18, 0.20, 0.24, 0.30):
-        r, rho = solve_cr3(p, rho=0.02, tax_frac=tax, clearing_iters=3)
+        rf = solve(fp, CR3(rho=0.02, tax_frac=tax, clearing_iters=3))
+        spec = PolicySpec(name=f"CR3(tax={tax:g})", problem=p,
+                          objective=lambda D_: p.total_penalty(D_))
+        r = evaluate(spec, rf.D, solver="fleet-engine", nit=rf.iters)
         out.append(_res_to_dict(r, "CR3", tax))
     for F in np.linspace(0.55, 0.9, 8):
         out.append(_res_to_dict(closed(b1_adjustments(p, F), f"B1({F:.2f})"),

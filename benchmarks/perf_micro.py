@@ -16,9 +16,9 @@ from benchmarks.common import get_problem, row, timeit
 
 
 def solver_scale() -> list[str]:
-    """SLSQP (paper) vs vectorized engine fleet solver at growing W."""
-    from repro.core.fleet_solver import (FleetProblem, solve_cr1_fleet,
-                                         synthetic_fleet)
+    """SLSQP (paper) vs the unified fleet API at growing W."""
+    from repro.core.api import CR1, CR2, solve
+    from repro.core.fleet_solver import FleetProblem, synthetic_fleet
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
     rows = []
@@ -30,9 +30,10 @@ def solver_scale() -> list[str]:
                     f"carbon={r_ref.carbon_reduction_pct:.2f}%"
                     f" pen={r_ref.total_penalty_pct:.2f}% (paper solver)"))
     fp4 = FleetProblem.from_problem(p)
-    solve_cr1_fleet(fp4, lam=1.4)  # compile
-    us4 = timeit(lambda: solve_cr1_fleet(fp4, lam=1.4), repeats=3)
-    r4 = solve_cr1_fleet(fp4, lam=1.4)
+    cr1 = CR1(lam=1.4)
+    solve(fp4, cr1)  # compile
+    us4 = timeit(lambda: solve(fp4, cr1), repeats=3)
+    r4 = solve(fp4, cr1)
     rows.append(row("solver_fleet_W4", us4,
                     f"carbon={r4.carbon_reduction_pct:.2f}%"
                     f" pen={r4.total_penalty_pct:.2f}%"
@@ -40,20 +41,20 @@ def solver_scale() -> list[str]:
                     f"{abs(r4.carbon_reduction_pct - r_ref.carbon_reduction_pct):.2f}pp)"))
     for W in (64, 1024, 4096):
         fp = synthetic_fleet(W)
-        solve_cr1_fleet(fp, lam=1.4)
-        us = timeit(lambda: solve_cr1_fleet(fp, lam=1.4), repeats=2)
-        r = solve_cr1_fleet(fp, lam=1.4)
+        solve(fp, cr1)
+        us = timeit(lambda: solve(fp, cr1), repeats=2)
+        r = solve(fp, cr1)
         per_w = us / W
         rows.append(row(f"solver_fleet_W{W}", us,
                         f"carbon={r.carbon_reduction_pct:.2f}%"
                         f" {per_w:.1f}us/workload"
                         f" viol={r.preservation_violation:.1e}"))
     # fair policy at fleet scale (CR2 — beyond paper)
-    from repro.core.fleet_solver import solve_cr2_fleet
     fp = synthetic_fleet(256)
-    solve_cr2_fleet(fp)
-    us = timeit(lambda: solve_cr2_fleet(fp), repeats=1)
-    r = solve_cr2_fleet(fp)
+    cr2 = CR2()
+    solve(fp, cr2)
+    us = timeit(lambda: solve(fp, cr2), repeats=1)
+    r = solve(fp, cr2)
     rows.append(row("solver_fleet_cr2_W256", us,
                     f"carbon={r.carbon_reduction_pct:.2f}%"
                     f" pen={r.total_penalty_pct:.2f}%"
@@ -65,29 +66,30 @@ def fleet_cr3_scale() -> list[str]:
     """Decentralized CR3 wall-clock vs fleet size W — the taxes-and-rebates
     policy at fleet scale (vmapped best responses, one XLA call per clearing
     round; CPU numbers, structure transfers to TPU)."""
-    from repro.core.fleet_solver import solve_cr3_fleet, synthetic_fleet
+    from repro.core.api import CR1, CR3, SolveContext, solve, sweep
+    from repro.core.fleet_solver import synthetic_fleet
     rows = []
+    cr3 = CR3(outer=2, clearing_iters=2)
+    ctx = SolveContext(steps=300)
     for W in (4, 64, 512):
         fp = synthetic_fleet(W)
-        kw = dict(steps=300, outer=2, clearing_iters=2)
-        solve_cr3_fleet(fp, **kw)            # compile
-        us = timeit(lambda: solve_cr3_fleet(fp, **kw), repeats=2, warmup=0)
-        r, rho = solve_cr3_fleet(fp, **kw)
+        solve(fp, cr3, ctx=ctx)            # compile
+        us = timeit(lambda: solve(fp, cr3, ctx=ctx), repeats=2, warmup=0)
+        r = solve(fp, cr3, ctx=ctx)
         rows.append(row(f"fleet_cr3_W{W}", us,
                         f"carbon={r.carbon_reduction_pct:.2f}%"
-                        f" pen={r.total_penalty_pct:.2f}% rho={rho:.4f}"
+                        f" pen={r.total_penalty_pct:.2f}%"
+                        f" rho={r.extras['rho']:.4f}"
                         f" {us / W:.1f}us/workload"
                         f" viol={r.preservation_violation:.1e}"))
     # vmapped λ-sweep: the whole Fig.-8 CR1 frontier in one compile
-    from repro.core.fleet_solver import solve_cr1_fleet_sweep
     fp = synthetic_fleet(64)
-    lams = [1.0, 1.2, 1.45, 1.6, 2.2]
-    solve_cr1_fleet_sweep(fp, lams, steps=300)   # compile
-    us = timeit(lambda: solve_cr1_fleet_sweep(fp, lams, steps=300),
-                repeats=2, warmup=0)
+    grid = [CR1(lam=lam) for lam in (1.0, 1.2, 1.45, 1.6, 2.2)]
+    sweep(fp, grid, ctx=ctx)   # compile
+    us = timeit(lambda: sweep(fp, grid, ctx=ctx), repeats=2, warmup=0)
     rows.append(row("fleet_cr1_sweep5_W64", us,
-                    f"{us / len(lams):.0f}us/point; one XLA call for the"
-                    f" {len(lams)}-point Pareto sweep"))
+                    f"{us / len(grid):.0f}us/point; one XLA call for the"
+                    f" {len(grid)}-point Pareto sweep"))
     return rows
 
 
@@ -121,29 +123,31 @@ def fleet_shard_scale() -> list[str]:
     `XLA_FLAGS=--xla_force_host_platform_device_count=8`; with one device
     the single-device numbers still run and the sharded column is skipped.
     """
-    from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+    from repro.core.api import CR1, SolveContext, solve
+    from repro.core.fleet_solver import synthetic_fleet
     from repro.launch.mesh import make_fleet_mesh
     rows = []
     n_dev = len(jax.devices())
     mesh = make_fleet_mesh() if n_dev > 1 else None
     base = synthetic_fleet(1024)
     lam = 1.45
+    cr1 = CR1(lam=lam)
     for W, steps in ((1_000, 300), (10_000, 150), (100_000, 60)):
         fp = _tiled_fleet(base, W)
-        solve_cr1_fleet(fp, lam=lam, steps=steps)          # compile
-        us1 = timeit(lambda: solve_cr1_fleet(fp, lam=lam, steps=steps),
-                     repeats=2, warmup=0)
-        r1 = solve_cr1_fleet(fp, lam=lam, steps=steps)
+        ctx1 = SolveContext(steps=steps)
+        solve(fp, cr1, ctx=ctx1)          # compile
+        us1 = timeit(lambda: solve(fp, cr1, ctx=ctx1), repeats=2, warmup=0)
+        r1 = solve(fp, cr1, ctx=ctx1)
         obj1 = lam * r1.total_penalty_pct - r1.carbon_reduction_pct
         if mesh is None:
             rows.append(row(f"fleet_shard_W{W}", us1,
                             f"single-device only ({n_dev} device); carbon="
                             f"{r1.carbon_reduction_pct:.2f}%"))
             continue
-        solve_cr1_fleet(fp, lam=lam, steps=steps, mesh=mesh)   # compile
-        us8 = timeit(lambda: solve_cr1_fleet(fp, lam=lam, steps=steps,
-                                             mesh=mesh), repeats=2, warmup=0)
-        r8 = solve_cr1_fleet(fp, lam=lam, steps=steps, mesh=mesh)
+        ctx8 = SolveContext(steps=steps, mesh=mesh)
+        solve(fp, cr1, ctx=ctx8)   # compile
+        us8 = timeit(lambda: solve(fp, cr1, ctx=ctx8), repeats=2, warmup=0)
+        r8 = solve(fp, cr1, ctx=ctx8)
         obj8 = lam * r8.total_penalty_pct - r8.carbon_reduction_pct
         rows_dev = -(-W // n_dev)
         rows.append(row(
@@ -164,18 +168,20 @@ def streaming_resolve() -> list[str]:
     solution quality (CR1 objective, in percentage points) of the
     warm-started re-solve at a fraction of the cold inner-step budget —
     the ISSUE-2 acceptance artifact: gap <= 0.1 pp at >= 3x fewer steps."""
+    from repro.core.api import CR1, SolveContext, solve
     from repro.core.carbon import ForecastStream
-    from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+    from repro.core.fleet_solver import synthetic_fleet
     from repro.core.streaming import RollingHorizonSolver
 
     rows = []
     lam, cold_steps, warm_steps = 1.45, 600, 150
+    cr1 = CR1(lam=lam)
     for W in (16, 256):
         p = synthetic_fleet(W)
         stream = ForecastStream.caiso(n_ticks=6, horizon=p.T)
         # donate stays off: we capture per-tick engine states below and
         # re-time them, which a donated (in-place) tick would invalidate.
-        rhs = RollingHorizonSolver(p, stream, policy="cr1", lam=lam,
+        rhs = RollingHorizonSolver(p, stream, policy=cr1,
                                    cold_steps=cold_steps,
                                    warm_steps=warm_steps)
 
@@ -199,7 +205,7 @@ def streaming_resolve() -> list[str]:
         gap = -np.inf
         for tk in rep.ticks[1:]:
             p_t = rhs._window_problem(tk.tick, stream.forecast(tk.tick))
-            cold = solve_cr1_fleet(p_t, lam=lam, steps=cold_steps)
+            cold = solve(p_t, cr1, ctx=SolveContext(steps=cold_steps))
             gap = max(gap, warm_objs[tk.tick] - obj(cold))
 
         # Latency on the last window: warm tick seeded exactly as the
@@ -208,12 +214,12 @@ def streaming_resolve() -> list[str]:
         last = rep.ticks[-1].tick
         p_t = rhs._window_problem(last, stream.forecast(last))
         warm0 = states[last - 1].shifted(1)
-        us_cold = timeit(lambda: solve_cr1_fleet(p_t, lam=lam,
-                                                 steps=cold_steps),
+        us_cold = timeit(lambda: solve(p_t, cr1,
+                                       ctx=SolveContext(steps=cold_steps)),
                          repeats=3, warmup=0)
-        us_warm = timeit(lambda: solve_cr1_fleet(p_t, lam=lam,
-                                                 steps=warm_steps,
-                                                 warm=warm0),
+        us_warm = timeit(lambda: solve(p_t, cr1,
+                                       ctx=SolveContext(steps=warm_steps,
+                                                        warm=warm0)),
                          repeats=3, warmup=0)
         rows.append(row(
             f"streaming_resolve_W{W}", us_warm,

@@ -30,15 +30,16 @@ def main() -> None:
               f" best baseline {base:.2f}% -> {cr1/max(base,1e-9):.2f}x"
               f" (paper: 1.5-2x)")
 
-    # Fleet-engine cross-check: the same CR1 frontier through the shared
-    # vectorized engine — the whole λ grid is one vmapped XLA call
-    # (DRProblem -> FleetProblem via from_problem; SLSQP rows above are the
-    # validation reference).
-    from repro.core.fleet_solver import FleetProblem, solve_cr1_fleet_sweep
+    # Fleet-engine cross-check: the same CR1 frontier through the unified
+    # policy API — the policy grid is a list of values and the whole λ
+    # axis is one vmapped XLA call (DRProblem -> FleetProblem via
+    # from_problem; SLSQP rows above are the validation reference).
+    from repro.core.api import CR1, sweep
+    from repro.core.fleet_solver import FleetProblem
     fp = FleetProblem.from_problem(get_problem())
     lams = [1.0, 1.2, 1.45, 1.6, 2.2]
     print("\nCR1 fleet-engine sweep (one compile for the grid):")
-    for lam, r in zip(lams, solve_cr1_fleet_sweep(fp, lams)):
+    for lam, r in zip(lams, sweep(fp, [CR1(lam=la) for la in lams])):
         print(f"CR1-flt  {lam:7.3f} {r.carbon_reduction_pct:9.2f}"
               f" {r.total_penalty_pct:9.2f}")
 

@@ -1,16 +1,20 @@
 """Quickstart: build the paper's four-service fleet, fit penalty models,
-run Carbon Responder's CR1 policy for a representative two-day window, and
-print the Fig.-7-style outcome.
+and run Carbon Responder through the unified policy API
+(`repro.core.api`): policies are values (`CR1(lam=...)`, `CR3(...)`),
+`solve()` is the single entry point, and `sweep()` runs a whole
+hyperparameter grid as one vmapped XLA call.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import CR1, CR3, SolveContext, solve, sweep
 from repro.core.carbon import caiso_2021
+from repro.core.fleet_solver import FleetProblem, fleet_penalties
 from repro.core.fleetcache import cached_paper_fleet
 from repro.core.metrics import capacity_scaled_entropy
-from repro.core.policies import DRProblem, cr1_spec
-from repro.core.solver import solve_slsqp
+from repro.core.policies import DRProblem
 
 
 def main() -> None:
@@ -23,21 +27,26 @@ def main() -> None:
     signal = caiso_2021(48)
     print(f"grid signal: CAISO-2021-shaped MCI, trough/peak = "
           f"{signal.peak_to_trough():.2f}")
-    problem = DRProblem(models=models, mci=signal.mci)
+    problem = FleetProblem.from_problem(
+        DRProblem(models=models, mci=signal.mci))
 
-    print("\nsolving CR1 (Efficient DR, scipy SLSQP — the paper's solver)…")
-    result = solve_slsqp(cr1_spec(problem, lam=1.45), maxiter=250)
+    print("\nsolving CR1 (Efficient DR) via the unified fleet engine:"
+          "\n  result = solve(problem, CR1(lam=1.45))")
+    result = solve(problem, CR1(lam=1.45))
 
     print(f"\ncarbon reduction : {result.carbon_reduction_pct:.2f}% "
           f"of baseline operational carbon (paper Fig. 7: 4.6%)")
     print(f"performance loss : {result.total_penalty_pct:.2f}% "
           f"capacity-equivalent (paper: ~4%)")
-    ent = capacity_scaled_entropy(result.per_penalty, problem.entitlements)
+    per_pen = np.asarray(fleet_penalties(problem, jnp.asarray(result.D)))
+    ent = capacity_scaled_entropy(per_pen, problem.entitlement)
     print(f"fairness entropy : {ent:.2f} (max 2.0)")
+    mci = np.asarray(problem.mci)
+    base = float((problem.usage.sum(0) * mci).sum())
     print("\nper-service outcome:")
     for i, name in enumerate(problem.names):
-        c = 100 * result.per_carbon[i] / problem.total_carbon_baseline
-        q = 100 * result.per_penalty[i] / problem.entitlements.sum()
+        c = 100 * float(result.D[i] @ mci) / base
+        q = 100 * per_pen[i] / float(problem.entitlement.sum())
         hours_cut = int((result.D[i] > 0.01 * problem.usage[i]).sum())
         print(f"  {name:13s} carbon ↓{c:5.2f}%  penalty {q:5.2f}%  "
               f"curtailed {hours_cut}/48 hours")
@@ -47,6 +56,24 @@ def main() -> None:
         line = "".join("▼" if x > 0.3 else ("▲" if x < -0.3 else "·")
                        for x in tot[day * 24:(day + 1) * 24])
         print(f"  day {day}: {line}  (▼ curtail, ▲ boost/recover)")
+
+    # The Fig.-8 trade-off curve: a policy grid is a list of values, and
+    # sweep() runs the whole λ axis through one vmapped compile.
+    print("\nCR1 λ sweep — sweep(problem, [CR1(lam=l) for l in grid]):")
+    grid = (1.2, 1.45, 1.8)
+    for lam, r in zip(grid, sweep(problem, [CR1(lam=la) for la in grid],
+                                  ctx=SolveContext(steps=300))):
+        print(f"  λ={lam:<5g} carbon ↓{r.carbon_reduction_pct:5.2f}%  "
+              f"penalty {r.total_penalty_pct:5.2f}%")
+
+    # Decentralized taxes-and-rebates: same entry point, policy-specific
+    # outputs (clearing ρ, fiscal balance) ride result.extras.
+    print("\nCR3 (Fair-Decentralized) — solve(problem, CR3()):")
+    r3 = solve(problem, CR3(), ctx=SolveContext(steps=300))
+    print(f"  carbon ↓{r3.carbon_reduction_pct:.2f}%  "
+          f"penalty {r3.total_penalty_pct:.2f}%  "
+          f"clearing ρ={r3.extras['rho']:.4f}  "
+          f"balanced={r3.extras['balanced']}")
 
 
 if __name__ == "__main__":

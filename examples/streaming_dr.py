@@ -19,6 +19,7 @@ first, e.g.:
 """
 import argparse
 
+from repro.core.api import POLICY_REGISTRY
 from repro.core.carbon import ForecastStream
 from repro.core.fleet_solver import synthetic_fleet
 from repro.core.streaming import RollingHorizonSolver
@@ -29,7 +30,9 @@ def main() -> None:
     ap.add_argument("--ticks", type=int, default=12)
     ap.add_argument("--workloads", type=int, default=16)
     ap.add_argument("--policy", default="cr1",
-                    choices=("cr1", "cr2", "cr3"))
+                    choices=sorted(POLICY_REGISTRY),
+                    help="POLICY_REGISTRY name; the controller resolves it "
+                         "to a repro.core.api policy object")
     ap.add_argument("--cold-steps", type=int, default=600)
     ap.add_argument("--warm-steps", type=int, default=150)
     ap.add_argument("--shard", action="store_true",

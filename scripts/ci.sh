@@ -25,9 +25,24 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q ${lane[@]+"${lane[@]}"} \
   --ignore=tests/test_fleet_sharding.py "$@"
 
-# Targeted runs (extra pytest args) skip the multi-device lane so e.g.
-# `scripts/ci.sh -k fleetcache` stays fast; both default lanes run it.
+# Targeted runs (extra pytest args) skip the extra lanes so e.g.
+# `scripts/ci.sh -k fleetcache` stays fast; both default lanes run them.
 if [[ $# -eq 0 ]]; then
+  echo "== deprecation lane (legacy shims warn exactly once) =="
+  # Re-run the API tests with DeprecationWarning as error: every legacy
+  # shim call in tests/test_api.py is wrapped in an explicit capture that
+  # asserts exactly one warning, so any stray DeprecationWarning — a shim
+  # warning twice, or the new solve()/sweep() surface emitting one —
+  # fails this lane.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_api.py -W error::DeprecationWarning
+
+  echo "== examples smoke (quickstart + 2 streaming ticks) =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/quickstart.py > /dev/null
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/streaming_dr.py --ticks 2 > /dev/null
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

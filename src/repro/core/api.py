@@ -1,0 +1,976 @@
+"""First-class DR policies and the fleet engine's single entry point.
+
+The paper frames Carbon Responder as ONE framework with three alternative
+policies — Efficient (CR1), Fair-Centralized (CR2), Fair-Decentralized
+(CR3). This module makes that framing literal:
+
+  * Policies are frozen dataclasses — `CR1(lam=...)`,
+    `CR2(cap_frac=..., outer=...)`, `CR3(rho=..., tax_frac=...,
+    clearing_iters=...)`, plus the closed-form baseline wrappers
+    `B1(F=...)` / `B3(depth=...)` — values you can put in a list, sweep,
+    compare for equality, and serialize with `dataclasses.asdict` into
+    stable cache keys. Only *hyperparameters* are dataclass fields;
+    execution concerns never leak into a policy's identity.
+
+  * Each policy owns its engine backend: the objective/constraint pieces,
+    the fleet-global normalizers, and the `EngineConfig` it feeds the
+    shared projected-Adam + augmented-Lagrangian loop
+    (`repro.core.engine.al_minimize`). CR3 additionally owns its Eq.-6
+    fiscal-clearing outer loop (the coordinator lowering the carbon
+    price ρ until taxes cover rebates).
+
+  * `solve(problem, policy, ctx=SolveContext(...))` is the single entry
+    point. `SolveContext` bundles everything orthogonal to policy
+    semantics: device `mesh` (W-axis sharding), `donate`d buffers, the
+    fused streaming tick (`shift`/`reset_mu`), `warm` starts, kernel
+    dispatch, and the inner-`steps` budget (None = the policy's default).
+    Every policy returns the same `FleetSolveResult`; policy-specific
+    outputs (CR3's clearing ρ, fiscal balance) ride `result.extras`.
+
+  * `sweep(problem, policies, ctx=...)` runs a whole policy grid. A
+    same-family grid rides ONE XLA call: the hyper axis is vmapped
+    through the engine (the Fig.-8 Pareto pattern), and with `ctx.mesh`
+    the vmap nests *inside* the W-axis shard_map so fleet-scale Pareto
+    fronts run sharded too (the ROADMAP's sharded-sweep follow-up, for
+    every single-call policy family at once). Mixed-family grids,
+    non-uniform static knobs, warm/donated contexts, and CR3-with-mesh
+    fall back to an equivalent loop of `solve()` calls.
+
+  * `POLICY_REGISTRY` maps policy names ("cr1", "cr2", "cr3", "b1",
+    "b3") to their classes, so string-typed configs (CLI flags, the
+    streaming controller) resolve to policy objects in one place, and
+    `solve(p, "cr1")` works for quick default-hyper runs.
+
+Sharding contract, padding semantics, and the donated streaming tick are
+documented on `repro.core.fleet_solver` (data model) and
+`repro.core.engine` (loop); the policy backends here only assemble those
+pieces. The legacy `fleet_solver.solve_cr{1,2,3}_fleet` entry points are
+deprecated shims over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Any, ClassVar, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import (EngineConfig, EngineState, al_minimize,
+                               al_minimize_sharded)
+from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
+                                     FleetProblem, FleetSolveResult,
+                                     _bounds, _enter_tick, _fleet_specs,
+                                     _jit_view, _pad_state, _projection,
+                                     _report, cr2_reference_fleet,
+                                     fleet_penalties, pad_fleet,
+                                     resolve_use_kernel)
+from repro.launch.mesh import fleet_axis
+
+Array = jax.Array
+
+__all__ = ["B1", "B3", "CR1", "CR2", "CR3", "DRPolicy", "POLICY_REGISTRY",
+           "SolveContext", "configured_policy", "resolve_policy", "solve",
+           "sweep"]
+
+
+# ---------------------------------------------------------------------------
+# Execution context + policy protocol
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SolveContext:
+    """Execution concerns of a fleet solve, bundled once for every policy.
+
+    Attributes:
+      mesh: optional 1-D device mesh (`repro.launch.mesh.make_fleet_mesh`)
+        — the solve shards the W axis over it (W padded to the device
+        count with inert rows; `result.state` keeps the padded shape so
+        re-solves chain without re-padding).
+      donate: route through a `jax.jit(donate_argnums)` twin that reuses
+        the warm state's buffers in place. The passed `warm` state becomes
+        invalid afterwards.
+      shift: roll the warm plan this many hours inside the solve's own
+        XLA call (the rolling-horizon window slide).
+      reset_mu: restart the AL μ schedule at the policy's μ0 inside the
+        same call (the per-tick reset; multipliers keep their prices).
+      warm: a previous result's `.state` to warm-start from (cold start
+        when None).
+      use_kernel: Pallas `dr_features` kernel dispatch — None = auto
+        (kernel on TPU, jnp elsewhere).
+      steps: inner Adam steps per multiplier round; None = the policy's
+        `default_steps`.
+    """
+    mesh: Any = None
+    donate: bool = False
+    shift: int = 0
+    reset_mu: bool = False
+    warm: EngineState | None = None
+    use_kernel: bool | None = None
+    steps: int | None = None
+
+    def resolved_steps(self, policy: "DRPolicy") -> int:
+        return self.steps if self.steps is not None else policy.default_steps
+
+
+@runtime_checkable
+class DRPolicy(Protocol):
+    """A demand-response policy: a frozen hyperparameter record that knows
+    how to solve a `FleetProblem` under a `SolveContext`.
+
+    Implementations are frozen dataclasses whose *fields are exactly the
+    policy's hyperparameters* (so `dataclasses.asdict` is a stable cache
+    key) with `name`/`default_steps` as ClassVars and a
+    `solve(problem, ctx)` method returning a `FleetSolveResult`."""
+
+    name: ClassVar[str]
+    default_steps: ClassVar[int]
+
+    def solve(self, problem: FleetProblem,
+              ctx: SolveContext) -> FleetSolveResult: ...
+
+
+#: Policy name -> policy class; the one place string-typed configs resolve.
+POLICY_REGISTRY: dict[str, type] = {}
+
+
+def _register(cls):
+    POLICY_REGISTRY[cls.name] = cls
+    return cls
+
+
+def resolve_policy(policy) -> DRPolicy:
+    """Coerce a registry name, policy class, or policy object to an object."""
+    if isinstance(policy, str):
+        try:
+            return POLICY_REGISTRY[policy]()
+        except KeyError:
+            raise ValueError(
+                f"unknown policy {policy!r}; registered policies: "
+                f"{', '.join(sorted(POLICY_REGISTRY))}") from None
+    if isinstance(policy, type):
+        policy = policy()
+    if not isinstance(policy, DRPolicy):
+        raise TypeError(
+            f"policy must be a DRPolicy (e.g. CR1(lam=1.45)) or a "
+            f"registered name; got {type(policy).__name__}")
+    return policy
+
+
+def configured_policy(policy, *, lam: float = 1.45, cap_frac: float = 0.78,
+                      rho: float = 0.02, tax_frac: float = 0.2,
+                      outer: int = 4) -> DRPolicy:
+    """`resolve_policy` with the legacy keyword knobs: registry names
+    become objects configured from the matching knobs (CR1: `lam`; CR2:
+    `cap_frac`/`outer`; CR3: `rho`/`tax_frac`/`outer` — `outer` defaults
+    to 4, the historical streaming-controller budget); other registered
+    names get default hypers; `DRPolicy` objects pass through unchanged
+    (the knobs are ignored). The one place string-typed configs with
+    per-policy knobs (`RollingHorizonSolver`, `FleetCoordinator`) turn
+    into policy values."""
+    if not isinstance(policy, str):
+        return resolve_policy(policy)
+    if policy not in POLICY_REGISTRY:
+        raise ValueError(
+            f"unknown policy {policy!r}; registered policies: "
+            f"{', '.join(sorted(POLICY_REGISTRY))}")
+    by_name = {
+        "cr1": lambda: CR1(lam=lam),
+        "cr2": lambda: CR2(cap_frac=cap_frac, outer=outer),
+        "cr3": lambda: CR3(rho=rho, tax_frac=tax_frac, outer=outer),
+    }
+    return by_name.get(policy, POLICY_REGISTRY[policy])()
+
+
+def solve(problem: FleetProblem, policy, *,
+          ctx: SolveContext | None = None) -> FleetSolveResult:
+    """Solve `problem` under `policy` — the single fleet entry point.
+
+    `policy` is a `DRPolicy` object (`CR1(lam=1.45)`, ...) or a
+    `POLICY_REGISTRY` name for default hypers; `ctx` carries the
+    execution concerns (mesh/donate/shift/reset_mu/warm/use_kernel/
+    steps). Returns a uniform `FleetSolveResult`; policy-specific outputs
+    (e.g. CR3's clearing ρ) live in `result.extras`."""
+    if not isinstance(problem, FleetProblem):
+        raise TypeError(
+            f"solve() takes a FleetProblem (convert a DRProblem with "
+            f"FleetProblem.from_problem); got {type(problem).__name__}")
+    return resolve_policy(policy).solve(problem, ctx or SolveContext())
+
+
+def sweep(problem: FleetProblem, policies: Sequence, *,
+          ctx: SolveContext | None = None) -> list[FleetSolveResult]:
+    """Solve `problem` under every policy in `policies`.
+
+    A grid from one policy family with uniform static knobs (e.g.
+    `[CR1(lam=l) for l in grid]`, or CR2s sharing `outer`) rides the
+    engine's vmap lane as ONE XLA call; with `ctx.mesh` the hyper vmap
+    nests inside the W-axis shard_map (sharded Pareto fronts). Everything
+    else — mixed families, non-uniform static knobs, warm/donated
+    contexts, CR3 with a mesh — falls back to a loop of `solve()` calls
+    with identical per-policy semantics, so `sweep` is always safe to
+    call. Sweeps are cold solves: `ctx.warm`/`donate`/`shift`/`reset_mu`
+    force the fallback loop, where a shared `warm` state is reused
+    read-only by every policy (so `donate` is dropped for multi-policy
+    loops — a buffer can only be donated once).
+
+    Results are returned in `policies` order."""
+    ctx = ctx or SolveContext()
+    pols = [resolve_policy(pl) for pl in policies]
+    if not pols:
+        return []
+    fam = type(pols[0])
+    vmappable = (all(type(pl) is fam for pl in pols)
+                 and hasattr(fam, "_sweep_family")
+                 and fam._sweep_uniform(pols)
+                 and ctx.warm is None and not ctx.donate
+                 and not ctx.shift and not ctx.reset_mu)
+    if not vmappable:
+        if ctx.donate and len(pols) > 1:
+            ctx = dataclasses.replace(ctx, donate=False)
+        return [pl.solve(problem, ctx) for pl in pols]
+    return fam._sweep_family(problem, pols, ctx)
+
+
+# ---------------------------------------------------------------------------
+# CR1 — Efficient DR (unconstrained trade-off objective)
+# ---------------------------------------------------------------------------
+def _cr1_norms(p: FleetProblem):
+    """Fleet-global CR1 reductions (normalizers + shared step scale) —
+    computed from the TRUE fleet before any device padding, then passed
+    into the sharded solve as replicated scalars."""
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    return (100.0 / jnp.asarray(p.entitlement).sum(),
+            100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
+            jnp.maximum(hi - lo, 1e-6).mean())
+
+
+def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    pen_norm, car_norm, step_scale = \
+        _cr1_norms(p) if norms is None else norms
+
+    def objective(D: Array, lam) -> Array:
+        return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
+                - car_norm * (D @ mci).sum())
+
+    project = _projection(p, lo, hi)
+    return objective, project, step_scale
+
+
+def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
+              use_kernel: bool, shift: int = 0, reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
+    objective, project, step_scale = _cr1_pieces(p, use_kernel)
+    D, aux = al_minimize(objective, project, state0.x, hyper=lam,
+                         step_scale=step_scale, init=state0,
+                         cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu")
+_cr1_run = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC)
+_cr1_run_donated = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC,
+                           donate_argnums=(2,))
+
+
+def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
+                      mesh, steps: int, use_kernel: bool, shift: int = 0,
+                      reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, lam_b, norms_b = blk
+        objective, project, step_scale = _cr1_pieces(pb, use_kernel,
+                                                     norms=norms_b)
+        return dict(objective=objective, project=project, hyper=lam_b,
+                    step_scale=step_scale)
+
+    D, aux = al_minimize_sharded(
+        build, (p, lam, norms), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
+        init=state0, cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR1_STATIC_SH = ("mesh", "steps", "use_kernel", "shift", "reset_mu")
+_cr1_run_sharded = jax.jit(_cr1_impl_sharded, static_argnames=_CR1_STATIC_SH)
+_cr1_run_sharded_donated = jax.jit(_cr1_impl_sharded,
+                                   static_argnames=_CR1_STATIC_SH,
+                                   donate_argnums=(3,))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
+def _cr1_sweep_run(p: FleetProblem, lams, steps: int, use_kernel: bool):
+    objective, project, step_scale = _cr1_pieces(p, use_kernel)
+
+    def solve_one(lam):
+        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                           hyper=lam, step_scale=step_scale,
+                           cfg=EngineConfig(inner_steps=steps,
+                                            outer_steps=1))
+        return D, fleet_penalties(p, D, use_kernel)
+
+    return jax.vmap(solve_one)(lams)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "steps", "use_kernel"))
+def _cr1_sweep_sharded(p: FleetProblem, lams, norms, mesh, steps: int,
+                       use_kernel: bool):
+    """The λ grid vmapped INSIDE the W-axis shard_map: every device solves
+    its row block for all grid points in one call (sharded Pareto lane)."""
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axis(mesh)
+
+    def body(pb, lams_b, norms_b):
+        objective, project, step_scale = _cr1_pieces(pb, use_kernel,
+                                                     norms=norms_b)
+
+        def solve_one(lam):
+            D, _ = al_minimize(objective, project,
+                               jnp.zeros(pb.usage.shape), hyper=lam,
+                               step_scale=step_scale,
+                               cfg=EngineConfig(inner_steps=steps,
+                                                outer_steps=1))
+            return D, fleet_penalties(pb, D, use_kernel)
+
+        return jax.vmap(solve_one)(lams_b)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
+        out_specs=(P(None, axis), P(None, axis)))(p, lams, norms)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CR1:
+    """Efficient DR (paper Eq. 3): maximize λ-weighted penalty/carbon
+    trade-off over the whole fleet — unconstrained but for the box and
+    batch day-preservation, both handled by projection."""
+
+    lam: float = 1.45
+
+    name: ClassVar[str] = "cr1"
+    default_steps: ClassVar[int] = 600
+    mu0: ClassVar[float] = CR1_MU0
+
+    def solve(self, p: FleetProblem,
+              ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.resolved_steps(self)
+        warm = ctx.warm
+        if ctx.mesh is None:
+            if warm is None:
+                warm = EngineState.cold(jnp.zeros(p.usage.shape))
+            run = _cr1_run_donated if ctx.donate else _cr1_run
+            D, pens, state = run(_jit_view(p), self.lam, warm, steps=steps,
+                                 use_kernel=use_kernel, shift=ctx.shift,
+                                 reset_mu=ctx.reset_mu)
+            return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
+                           state=state)
+        pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+        norms = _cr1_norms(p)
+        warm = _pad_state(warm, pp.W) if warm is not None \
+            else EngineState.cold(jnp.zeros(pp.usage.shape))
+        run = _cr1_run_sharded_donated if ctx.donate else _cr1_run_sharded
+        D, pens, state = run(pp, self.lam, norms, warm, mesh=ctx.mesh,
+                             steps=steps, use_kernel=use_kernel,
+                             shift=ctx.shift, reset_mu=ctx.reset_mu)
+        return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
+                       iters=steps, state=state)
+
+    # -- vmapped sweep lane -------------------------------------------------
+    @classmethod
+    def _sweep_uniform(cls, policies: Sequence["CR1"]) -> bool:
+        return True          # λ is the only knob and it is traced
+
+    @classmethod
+    def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR1"],
+                      ctx: SolveContext) -> list[FleetSolveResult]:
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.steps if ctx.steps is not None else cls.default_steps
+        lams = jnp.asarray([pl.lam for pl in policies], jnp.float32)
+        if ctx.mesh is None:
+            W = p.W
+            Ds, pens = _cr1_sweep_run(_jit_view(p), lams, steps, use_kernel)
+        else:
+            pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+            Ds, pens = _cr1_sweep_sharded(pp, lams, _cr1_norms(p),
+                                          mesh=ctx.mesh, steps=steps,
+                                          use_kernel=use_kernel)
+        return [_report(p, np.asarray(D)[:W], np.asarray(pen)[:W],
+                        iters=steps)
+                for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
+
+
+# ---------------------------------------------------------------------------
+# CR2 — Fair-Centralized DR (per-workload penalty-equality targets)
+# ---------------------------------------------------------------------------
+def _cr2_norms(p: FleetProblem, refs):
+    """Fleet-global CR2 reductions (carbon normalizer, equality-residual
+    scale, shared step scale) from the TRUE fleet before padding."""
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    return (100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
+            jnp.maximum(refs.mean(), 1e-3),
+            jnp.maximum(hi - lo, 1e-6).mean())
+
+
+def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
+    lo, hi = _bounds(p)
+    mci = jnp.asarray(p.mci)
+    car_norm, scale, step_scale = \
+        _cr2_norms(p, refs) if norms is None else norms
+
+    def objective(D: Array, _) -> Array:
+        return -car_norm * (D @ mci).sum()
+
+    def eq(D: Array, _) -> Array:
+        return (fleet_penalties(p, D, use_kernel) - refs) / scale
+
+    return objective, eq, _projection(p, lo, hi), step_scale
+
+
+def _cr2_cfg(steps: int, outer: int) -> EngineConfig:
+    return EngineConfig(inner_steps=steps, outer_steps=outer, mu0=CR2_MU0,
+                        mu_growth=2.0)
+
+
+def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
+              outer: int, use_kernel: bool, shift: int = 0,
+              reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
+    objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel)
+    D, aux = al_minimize(objective, project, state0.x,
+                         eq_residual=eq, step_scale=step_scale, init=state0,
+                         cfg=_cr2_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR2_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
+_cr2_run = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC)
+_cr2_run_donated = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC,
+                           donate_argnums=(2,))
+
+
+def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
+                      mesh, steps: int, outer: int, use_kernel: bool,
+                      shift: int = 0, reset_mu: bool = False):
+    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, refs_b, norms_b = blk
+        objective, eq, project, step_scale = _cr2_pieces(
+            pb, refs_b, use_kernel, norms=norms_b)
+        return dict(objective=objective, project=project, eq_residual=eq,
+                    step_scale=step_scale)
+
+    D, aux = al_minimize_sharded(
+        build, (p, refs, norms), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), P(axis), (P(), P(), P())),
+        init=state0, cfg=_cr2_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR2_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
+                  "reset_mu")
+_cr2_run_sharded = jax.jit(_cr2_impl_sharded, static_argnames=_CR2_STATIC_SH)
+_cr2_run_sharded_donated = jax.jit(_cr2_impl_sharded,
+                                   static_argnames=_CR2_STATIC_SH,
+                                   donate_argnums=(3,))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
+def _cr2_sweep_run(p: FleetProblem, refs_stack, steps: int, outer: int,
+                   use_kernel: bool):
+    def solve_one(refs):
+        objective, eq, project, step_scale = _cr2_pieces(p, refs,
+                                                         use_kernel)
+        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
+                           eq_residual=eq, step_scale=step_scale,
+                           cfg=_cr2_cfg(steps, outer))
+        return D, fleet_penalties(p, D, use_kernel)
+
+    return jax.vmap(solve_one)(refs_stack)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "steps", "outer", "use_kernel"))
+def _cr2_sweep_sharded(p: FleetProblem, refs_stack, norms_stack, mesh,
+                       steps: int, outer: int, use_kernel: bool):
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axis(mesh)
+
+    def body(pb, refs_b, norms_b):
+        def solve_one(refs, norms):
+            objective, eq, project, step_scale = _cr2_pieces(
+                pb, refs, use_kernel, norms=norms)
+            D, _ = al_minimize(objective, project,
+                               jnp.zeros(pb.usage.shape), eq_residual=eq,
+                               step_scale=step_scale,
+                               cfg=_cr2_cfg(steps, outer))
+            return D, fleet_penalties(pb, D, use_kernel)
+
+        return jax.vmap(solve_one)(refs_b, norms_b)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), P(None, axis), (P(), P(), P())),
+        out_specs=(P(None, axis), P(None, axis)))(p, refs_stack,
+                                                  norms_stack)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CR2:
+    """Fair-Centralized DR (paper Eq. 4): min −carbon s.t.
+    C_i(d_i) = C_i(cap_frac·E_i) for every workload — one equality
+    multiplier per workload, `outer` AL multiplier rounds."""
+
+    cap_frac: float = 0.78
+    outer: int = 6
+
+    name: ClassVar[str] = "cr2"
+    default_steps: ClassVar[int] = 400
+    mu0: ClassVar[float] = CR2_MU0
+
+    def solve(self, p: FleetProblem,
+              ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.resolved_steps(self)
+        warm = ctx.warm
+        refs = jnp.asarray(cr2_reference_fleet(p, self.cap_frac))
+        if ctx.mesh is None:
+            if warm is None:
+                warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
+                                        mu0=CR2_MU0)
+            run = _cr2_run_donated if ctx.donate else _cr2_run
+            D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
+                                 outer=self.outer, use_kernel=use_kernel,
+                                 shift=ctx.shift, reset_mu=ctx.reset_mu)
+            return _report(p, np.asarray(D), np.asarray(pens),
+                           iters=steps * self.outer, state=state)
+        pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+        norms = _cr2_norms(p, refs)
+        refs_p = jnp.concatenate([refs, jnp.zeros(pp.W - W, refs.dtype)])
+        warm = _pad_state(warm, pp.W) if warm is not None \
+            else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
+                                  mu0=CR2_MU0)
+        run = _cr2_run_sharded_donated if ctx.donate else _cr2_run_sharded
+        D, pens, state = run(pp, refs_p, norms, warm, mesh=ctx.mesh,
+                             steps=steps, outer=self.outer,
+                             use_kernel=use_kernel, shift=ctx.shift,
+                             reset_mu=ctx.reset_mu)
+        return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
+                       iters=steps * self.outer, state=state)
+
+    # -- vmapped sweep lane -------------------------------------------------
+    @classmethod
+    def _sweep_uniform(cls, policies: Sequence["CR2"]) -> bool:
+        # `outer` is a static engine knob: one compile needs one value.
+        return len({pl.outer for pl in policies}) == 1
+
+    @classmethod
+    def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR2"],
+                      ctx: SolveContext) -> list[FleetSolveResult]:
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.steps if ctx.steps is not None else cls.default_steps
+        outer = policies[0].outer
+        refs = [jnp.asarray(cr2_reference_fleet(p, pl.cap_frac))
+                for pl in policies]
+        if ctx.mesh is None:
+            W = p.W
+            Ds, pens = _cr2_sweep_run(_jit_view(p), jnp.stack(refs), steps,
+                                      outer, use_kernel)
+        else:
+            pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+            # per-lane global norms from the TRUE fleet; per-lane padded
+            # refs (pad residuals are identically zero).
+            norms = [_cr2_norms(p, r) for r in refs]
+            norms_stack = tuple(jnp.stack([n[i] for n in norms])
+                                for i in range(3))
+            refs_p = jnp.stack([
+                jnp.concatenate([r, jnp.zeros(pp.W - W, r.dtype)])
+                for r in refs])
+            Ds, pens = _cr2_sweep_sharded(pp, refs_p, norms_stack,
+                                          mesh=ctx.mesh, steps=steps,
+                                          outer=outer,
+                                          use_kernel=use_kernel)
+        return [_report(p, np.asarray(D)[:W], np.asarray(pen)[:W],
+                        iters=steps * outer)
+                for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
+
+
+# ---------------------------------------------------------------------------
+# CR3 — Fair-Decentralized DR (taxes and rebates, Eqs. 5–8)
+# ---------------------------------------------------------------------------
+def _cr3_pieces(p: FleetProblem, use_kernel: bool, reg_scale):
+    """Best-response pieces for one device's row block (or the whole fleet).
+
+    Everything here is row-separable; `reg_scale` is the regularizer
+    normalizer 1e-3/(W_true·T), passed in so a padded sharded solve
+    regularizes identically to the unpadded single-device one.
+
+    Numerics, validated against the per-workload SLSQP reference:
+      * tiny quadratic regularizer — a selfish workload takes the *minimal*
+        adjustment satisfying its allowance; the regularizer breaks the
+        zero-penalty plateau of batch models toward that minimal response
+        (without it, any deep-feasible point is an equally 'optimal' best
+        response with wildly overpaid rebates).
+      * day-tangent gradient projection (see engine.al_minimize docs).
+      * gentle μ schedule: the KKT multipliers here are O(1e-3), so a stiff
+        wall (μ≫1) just makes projected Adam bounce off the boundary.
+    """
+    lo, hi = _bounds(p)
+    usage = jnp.asarray(p.usage)
+    E = jnp.asarray(p.entitlement)
+    mci = jnp.asarray(p.mci)
+    tau = 0.02 * E
+
+    def objective(D: Array, hyper) -> Array:
+        reg = reg_scale * ((D / E[:, None]) ** 2).sum()
+        return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
+
+    def ineq(D: Array, hyper) -> Array:
+        rho_, tax_ = hyper
+        rebate = rho_ * (D @ mci)
+        peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None], axis=1)
+        return ((1.0 - tax_) * E + rebate - peak) / E
+
+    W, T = p.usage.shape
+    n_days = max(1, T // p.day_hours)
+    span = n_days * p.day_hours
+    is_batch = jnp.asarray(p.is_batch)[:, None, None]
+
+    def day_tangent(g: Array) -> Array:
+        Gd = g[:, :span].reshape(W, n_days, p.day_hours)
+        Gd = jnp.where(is_batch, Gd - Gd.mean(axis=-1, keepdims=True), Gd)
+        return jnp.concatenate([Gd.reshape(W, span), g[:, span:]], axis=1)
+
+    step_scale = jnp.maximum(hi - lo, 1e-6).mean(axis=1, keepdims=True)
+    return objective, ineq, _projection(p, lo, hi), step_scale, day_tangent
+
+
+def _cr3_cfg(steps: int, outer: int) -> EngineConfig:
+    return EngineConfig(inner_steps=steps, outer_steps=outer, lr=0.005,
+                        mu0=CR3_MU0, mu_growth=2.0, beta2=0.99)
+
+
+def _cr3_impl(p: FleetProblem, rho, tax_frac, reg_scale,
+              state0: EngineState, steps: int, outer: int, use_kernel: bool,
+              shift: int = 0, reset_mu: bool = False):
+    """All W selfish problems in one AL solve. Each workload i minimizes its
+    own penalty s.t. the peak-allowance inequality (Eq. 5/8)
+
+        max_t (U_i − d_i) ≤ E_i − T_i + ρ·⟨mci, d_i⟩,   T_i = tax_frac·E_i
+
+    (smooth max as in `policies.cr3_workload_spec`). Objective, residual and
+    projection are all row-separable, so this single (W, T) engine call IS
+    the vmapped per-workload best response — one XLA call per round.
+    """
+    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
+    objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
+        p, use_kernel, reg_scale)
+    D, aux = al_minimize(objective, project, state0.x,
+                         hyper=(rho, tax_frac), ineq_residual=ineq,
+                         step_scale=step_scale, grad_transform=day_tangent,
+                         init=state0, cfg=_cr3_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR3_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
+_cr3_best_response = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC)
+_cr3_best_response_donated = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC,
+                                     donate_argnums=(4,))
+
+
+def _cr3_impl_sharded(p: FleetProblem, rho, tax_frac, reg_scale,
+                      state0: EngineState, mesh, steps: int, outer: int,
+                      use_kernel: bool, shift: int = 0,
+                      reset_mu: bool = False):
+    """Sharded best response: the allowance inequality, its multipliers and
+    the per-row step scale all live with their rows; only ρ/tax/reg_scale
+    are replicated. The Eq.-6 fiscal sums live in `CR3.solve`."""
+    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
+    axis = fleet_axis(mesh)
+
+    def build(blk):
+        pb, hyper_b, reg_b = blk
+        objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
+            pb, use_kernel, reg_b)
+        return dict(objective=objective, project=project, hyper=hyper_b,
+                    ineq_residual=ineq, step_scale=step_scale,
+                    grad_transform=day_tangent)
+
+    D, aux = al_minimize_sharded(
+        build, (p, (rho, tax_frac), reg_scale), mesh=mesh, axis_name=axis,
+        data_specs=(_fleet_specs(p, axis), (P(), P()), P()),
+        init=state0, cfg=_cr3_cfg(steps, outer))
+    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+
+
+_CR3_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
+                  "reset_mu")
+_cr3_sharded = jax.jit(_cr3_impl_sharded, static_argnames=_CR3_STATIC_SH)
+_cr3_sharded_donated = jax.jit(_cr3_impl_sharded,
+                               static_argnames=_CR3_STATIC_SH,
+                               donate_argnums=(4,))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel",
+                                             "reset_mu"))
+def _cr3_sweep_round(p: FleetProblem, rhos, taxes, reg_scale, states,
+                     steps: int, outer: int, use_kernel: bool,
+                     reset_mu: bool):
+    """One clearing round for every sweep lane: the (ρ, tax) hyper axis
+    rides vmap through the same best-response impl the solo solve jits."""
+    def one(rho, tax, st):
+        return _cr3_impl(p, rho, tax, reg_scale, st, steps, outer,
+                         use_kernel, 0, reset_mu)
+
+    return jax.vmap(one)(rhos, taxes, states)
+
+
+def _cr3_unbalanced_warn(clearing_iters: int, deficit: float, rho: float,
+                         caller: str) -> None:
+    warnings.warn(
+        f"{caller}: fiscal clearing did not converge in "
+        f"{clearing_iters} iterations — rebates exceed taxes by "
+        f"{deficit:.4g} at rho={rho:.4g} (Eq. 6 unmet)",
+        RuntimeWarning, stacklevel=3)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CR3:
+    """Fair-Decentralized DR: vmapped selfish best responses + the
+    coordinator's fiscal-balance clearing (Eqs. 5–8).
+
+    The coordinator lowers the carbon price ρ until rebates are covered by
+    taxes (Eq. 6, `policies.cr3_fiscal_balance` semantics). Each clearing
+    round warm-starts from the previous round's engine state (the
+    allowance multipliers track the shrinking ρ smoothly); `ctx.warm`
+    seeds round 0 the same way for rolling-horizon re-solves.
+
+    With `ctx.mesh`, each best response runs sharded over the fleet axis;
+    the Eq.-6 sums (rebates paid vs taxes collected) are the only
+    cross-device reductions and happen here, on the gathered true-W
+    solution between rounds (rounds after the first always re-enter with
+    the μ schedule restarted).
+
+    If `clearing_iters` is exhausted with rebates still exceeding taxes,
+    `result.extras` carries `balanced=False` and the remaining
+    `fiscal_deficit` (rebates − taxes, NP·kgCO2/MWh), and a
+    `RuntimeWarning` is emitted — callers must not treat
+    `extras["rho"]` as market-clearing then."""
+
+    rho: float = 0.02
+    tax_frac: float = 0.2
+    outer: int = 3
+    clearing_iters: int = 8
+
+    name: ClassVar[str] = "cr3"
+    default_steps: ClassVar[int] = 600
+    mu0: ClassVar[float] = CR3_MU0
+
+    def solve(self, p: FleetProblem,
+              ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.resolved_steps(self)
+        mci = np.asarray(p.mci)
+        collected = self.tax_frac * float(np.asarray(p.entitlement).sum())
+        rho_cur = float(self.rho)
+        if ctx.mesh is None:
+            pj, W = _jit_view(p), p.W
+            state = ctx.warm if ctx.warm is not None else EngineState.cold(
+                jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
+            twin = _cr3_best_response_donated if ctx.donate \
+                else _cr3_best_response
+        else:
+            pj, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+            state = _pad_state(ctx.warm, pj.W) if ctx.warm is not None \
+                else EngineState.cold(jnp.zeros(pj.usage.shape), n_in=pj.W,
+                                      mu0=CR3_MU0)
+            twin = _cr3_sharded_donated if ctx.donate else _cr3_sharded
+        reg_scale = 1e-3 / (W * p.T)
+
+        def best_response(st, shift_, reset_):
+            kw = {} if ctx.mesh is None else {"mesh": ctx.mesh}
+            return twin(pj, rho_cur, self.tax_frac, reg_scale, st,
+                        steps=steps, outer=self.outer,
+                        use_kernel=use_kernel, shift=shift_,
+                        reset_mu=reset_, **kw)
+
+        D, pens, state = best_response(state, ctx.shift, ctx.reset_mu)
+        D = np.asarray(D)[:W]
+        rounds = 1
+        paid = rho_cur * float((D @ mci).sum())
+        for _ in range(self.clearing_iters):
+            if paid <= collected + 1e-9:
+                break
+            rho_cur *= max(0.5, 0.9 * collected / max(paid, 1e-9))
+            # Carry primal + allowance multipliers; restart the μ schedule
+            # so every round keeps the gentle wall the best response
+            # relies on.
+            D, pens, state = best_response(state, 0, True)
+            D = np.asarray(D)[:W]
+            rounds += 1
+            paid = rho_cur * float((D @ mci).sum())
+        balanced = paid <= collected + 1e-9
+        deficit = 0.0 if balanced else paid - collected
+        if not balanced:
+            _cr3_unbalanced_warn(self.clearing_iters, deficit, rho_cur,
+                                 "CR3.solve")
+        return _report(p, D, np.asarray(pens)[:W],
+                       iters=steps * self.outer * rounds, state=state,
+                       extras={"rho": rho_cur, "balanced": balanced,
+                               "fiscal_deficit": deficit})
+
+    # -- vmapped sweep lane -------------------------------------------------
+    @classmethod
+    def _sweep_uniform(cls, policies: Sequence["CR3"]) -> bool:
+        # `outer` is static (one compile); per-lane ρ/tax are traced and
+        # per-lane clearing_iters ride the host-side lockstep loop.
+        return len({pl.outer for pl in policies}) == 1
+
+    @classmethod
+    def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR3"],
+                      ctx: SolveContext) -> list[FleetSolveResult]:
+        if ctx.mesh is not None:
+            # vmap-of-shard_map best responses with per-lane host clearing
+            # is a ROADMAP follow-up; sharded CR3 grids solve per policy.
+            return [pl.solve(p, ctx) for pl in policies]
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        steps = ctx.steps if ctx.steps is not None else cls.default_steps
+        outer = policies[0].outer
+        N = len(policies)
+        mci = np.asarray(p.mci)
+        pj = _jit_view(p)
+        reg_scale = 1e-3 / (p.W * p.T)
+        states = EngineState(
+            x=jnp.zeros((N,) + p.usage.shape),
+            lam_eq=jnp.zeros((N, 0)), lam_in=jnp.zeros((N, p.W)),
+            mu=jnp.full((N,), CR3_MU0))
+        rho_cur = np.asarray([pl.rho for pl in policies], float)
+        taxes = np.asarray([pl.tax_frac for pl in policies], float)
+        iters_cap = np.asarray([pl.clearing_iters for pl in policies])
+        collected = taxes * float(np.asarray(p.entitlement).sum())
+
+        def rounds_all(reset_mu):
+            return _cr3_sweep_round(
+                pj, jnp.asarray(rho_cur, jnp.float32),
+                jnp.asarray(taxes, jnp.float32), reg_scale, states,
+                steps=steps, outer=outer, use_kernel=use_kernel,
+                reset_mu=reset_mu)
+
+        Ds, pens, states = rounds_all(False)
+        D_out, pens_out = np.asarray(Ds), np.asarray(pens)
+        rounds = np.ones(N, int)
+        used = np.zeros(N, int)
+        paid = rho_cur * np.einsum("nwt,t->n", D_out, mci)
+        while True:
+            active = (paid > collected + 1e-9) & (used < iters_cap)
+            if not active.any():
+                break
+            rho_cur = np.where(
+                active,
+                rho_cur * np.maximum(0.5, 0.9 * collected
+                                     / np.maximum(paid, 1e-9)),
+                rho_cur)
+            # Every lane re-solves in lockstep (one XLA call), but lanes
+            # that already cleared keep their frozen solution/state so each
+            # lane's trajectory is exactly its solo-`solve()` trajectory.
+            Ds, pens, new_states = rounds_all(True)
+            sel = active[:, None, None]
+            D_out = np.where(sel, np.asarray(Ds), D_out)
+            pens_out = np.where(active[:, None], np.asarray(pens), pens_out)
+            states = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    jnp.asarray(active).reshape((N,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                new_states, states)
+            rounds = rounds + active
+            used = used + active
+            paid = np.where(active,
+                            rho_cur * np.einsum("nwt,t->n", D_out, mci),
+                            paid)
+        balanced = paid <= collected + 1e-9
+        deficit = np.where(balanced, 0.0, paid - collected)
+        out = []
+        for i, pl in enumerate(policies):
+            if not balanced[i]:
+                _cr3_unbalanced_warn(pl.clearing_iters, float(deficit[i]),
+                                     float(rho_cur[i]), "CR3 sweep")
+            state_i = jax.tree_util.tree_map(lambda a: a[i], states)
+            out.append(_report(
+                p, D_out[i], pens_out[i],
+                iters=steps * outer * int(rounds[i]), state=state_i,
+                extras={"rho": float(rho_cur[i]),
+                        "balanced": bool(balanced[i]),
+                        "fiscal_deficit": float(deficit[i])}))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline wrappers — closed-form prior-work policies as DRPolicy values
+# ---------------------------------------------------------------------------
+@_register
+@dataclasses.dataclass(frozen=True)
+class B1:
+    """Proportional Power Capping (paper §V-B, eBuff-style): cap every
+    workload at L_i = F·E_i, d = max(U − L, 0) — the fleet-array form of
+    `baselines.b1_adjustments`. Closed form: `ctx` execution knobs are
+    no-ops (no engine state to warm/shard)."""
+
+    F: float = 0.75
+
+    name: ClassVar[str] = "b1"
+    default_steps: ClassVar[int] = 0
+
+    def solve(self, p: FleetProblem,
+              ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        D = np.maximum(
+            np.asarray(p.usage)
+            - self.F * np.asarray(p.entitlement)[:, None], 0.0)
+        pens = np.asarray(fleet_penalties(
+            p, jnp.asarray(D), resolve_use_kernel(ctx.use_kernel)))
+        return _report(p, D, pens, iters=0)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class B3:
+    """Prioritized Power Capping (paper §V-B, Dynamo): curtail RTS
+    workloads only, lowest priority (= last RTS row) first, each up to
+    `max_cut` depth — the fleet-array form of `baselines.b3_adjustments`
+    with row order as the priority order. Closed form like `B1`."""
+
+    depth: float = 0.3
+    max_cut: float = 0.2
+
+    name: ClassVar[str] = "b3"
+    default_steps: ClassVar[int] = 0
+
+    def solve(self, p: FleetProblem,
+              ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        usage = np.asarray(p.usage)
+        D = np.zeros_like(usage)
+        remaining = float(self.depth)
+        rts_rows = [i for i in range(p.W) if not bool(p.is_batch[i])]
+        for i in reversed(rts_rows):
+            if remaining <= 0:
+                break
+            c = min(remaining, self.max_cut)
+            L = (1.0 - c) * float(p.entitlement[i])
+            D[i] = np.maximum(usage[i] - L, 0.0)
+            remaining -= c
+        pens = np.asarray(fleet_penalties(
+            p, jnp.asarray(D), resolve_use_kernel(ctx.use_kernel)))
+        return _report(p, D, pens, iters=0)

@@ -81,8 +81,16 @@ def _penalty_model(job: FleetJob, hours: int,
 
 
 class FleetCoordinator:
+    """Coordinates the fleet's DR plan under one policy.
+
+    `policy` is a `repro.core.api.DRPolicy` object (`CR1(lam=...)`, ...)
+    or a `POLICY_REGISTRY` name; with a name, the legacy `lam`/`cap_frac`
+    knobs configure the policy object (`api.configured_policy`).
+    Unregistered names fall back to CR1 (the historical behavior of
+    `plan_streaming`)."""
+
     def __init__(self, jobs: Sequence[FleetJob], signal: CarbonSignal,
-                 policy: str = "cr1", lam: float = 1.45,
+                 policy="cr1", lam: float = 1.45,
                  cap_frac: float = 0.78, solver: str = "auto"):
         self.jobs = list(jobs)
         self.signal = signal
@@ -90,6 +98,14 @@ class FleetCoordinator:
         self.lam = lam
         self.cap_frac = cap_frac
         self.solver = solver
+
+    def _policy_obj(self):
+        """The configured policy as a first-class `DRPolicy` value."""
+        from repro.core.api import CR1, POLICY_REGISTRY, configured_policy
+        if isinstance(self.policy, str) and self.policy not in POLICY_REGISTRY:
+            return CR1(lam=self.lam)     # legacy unregistered-name fallback
+        return configured_policy(self.policy, lam=self.lam,
+                                 cap_frac=self.cap_frac)
 
     def _models(self, hours: int) -> tuple[pen.PenaltyModel, ...]:
         from repro.core.fleetcache import cached_paper_fleet
@@ -126,10 +142,12 @@ class FleetCoordinator:
         # penalty-equality constraints remain attainable.
         upper = np.minimum(problem.bounds()[1],
                            self._dynamic_cap(problem.usage))
-        spec = (cr2_spec(problem, self.cap_frac, upper=upper)
-                if self.policy == "cr2"
-                else dataclasses.replace(cr1_spec(problem, self.lam),
-                                         upper=upper))
+        pol = self._policy_obj()
+        spec = (cr2_spec(problem, pol.cap_frac, upper=upper)
+                if pol.name == "cr2"
+                else dataclasses.replace(
+                    cr1_spec(problem, getattr(pol, "lam", self.lam)),
+                    upper=upper))
         use_slsqp = (self.solver == "slsqp"
                      or (self.solver == "auto" and len(self.jobs) <= 8))
         result = (solve_slsqp(spec) if use_slsqp else solve_adam(spec))
@@ -164,11 +182,8 @@ class FleetCoordinator:
             stream = ForecastStream(
                 actual=np.resize(self.signal.mci, n_ticks + hours),
                 horizon=hours, revision_sigma=revision_sigma, seed=seed)
-        policy = self.policy if self.policy in ("cr1", "cr2", "cr3") \
-            else "cr1"
         solver = RollingHorizonSolver(
-            fp, stream, policy=policy, lam=self.lam,
-            cap_frac=self.cap_frac, cold_steps=cold_steps,
+            fp, stream, policy=self._policy_obj(), cold_steps=cold_steps,
             warm_steps=warm_steps)
         report = solver.run(n_ticks)
         usage = np.asarray(fp.usage)

@@ -1,4 +1,4 @@
-"""Vectorized fleet-scale DR solvers (beyond-paper), built on one engine.
+"""Fleet-scale DR data model and shared solver plumbing.
 
 The paper solves 4 workloads × 48 h with SLSQP. A datacenter fleet has
 thousands of workloads; SLSQP's dense QP subproblems scale as O((W·T)³) and
@@ -13,57 +13,44 @@ jit-compiled, MXU-shaped (T padded to 128 lanes on TPU), with the Table-IV
 features computed by the `dr_features` Pallas kernel on TPU (jnp fallback
 elsewhere; see `repro.kernels.dispatch`).
 
-Architecture: all three policies are thin adapters over
-`repro.core.engine.al_minimize` — a single projected-Adam +
-augmented-Lagrangian loop parameterized by (objective, eq/ineq residuals,
-projection). Each adapter is one jitted entry point:
+Solving lives in `repro.core.api`: policies are first-class frozen
+dataclasses (`CR1(lam=...)`, `CR2(cap_frac=...)`, `CR3(rho=...,
+tax_frac=...)`, baseline wrappers `B1`/`B3`) and every solve goes through
+one entry point —
 
-  * CR1 (`solve_cr1_fleet`): unconstrained trade-off objective
-    λ·penalty − carbon, projection only; λ is a traced hyperparameter, and
-    `solve_cr1_fleet_sweep` vmaps the whole Fig.-8 λ grid through one
-    compile.
-  * CR2 (`solve_cr2_fleet`): min −carbon s.t. C_i(d_i) = C_i(cap%) — one
-    equality multiplier per workload.
-  * CR3 (`solve_cr3_fleet`): the paper's decentralized taxes-and-rebates
-    game (Eqs. 5–8). All W selfish problems are separable, so one (W, T)
-    AL solve with a per-workload peak-allowance inequality IS the vmapped
-    best response; a python outer loop lowers the carbon price ρ until
-    taxes cover rebates (Eq. 6), one XLA call per clearing round.
+    from repro.core.api import CR1, SolveContext, solve
+    result = solve(problem, CR1(lam=1.45), ctx=SolveContext(mesh=...))
 
-`FleetProblem` is a registered JAX pytree (arrays are leaves; `day_hours`
-etc. are static), so adapters jit directly over it, and
-`FleetProblem.from_problem`/`to_problem` convert to/from the per-workload
-`DRProblem` so the SLSQP stack serves as a validation reference.
+with `SolveContext` bundling the execution concerns (mesh, donated
+buffers, the fused streaming tick, warm starts, kernel dispatch, step
+budgets) and `sweep()` running whole policy grids as one vmapped XLA call.
+This module keeps what the policies share:
 
-Device sharding (100k-workload fleets): every adapter takes `mesh=` — a
-1-D device mesh (`repro.launch.mesh.make_fleet_mesh`) — and then runs the
-same AL loop through `engine.al_minimize_sharded`, sharding the W axis of
-the primal, the per-workload multipliers, the Adam moments, and every
-per-workload `FleetProblem` field; only the (T,) MCI trace and solver
-scalars are replicated. The contract:
+  * `FleetProblem` — the stacked-workload instance, a registered JAX
+    pytree (arrays are leaves; `day_hours` etc. are static), plus
+    `from_problem`/`to_problem` conversion so the per-workload SLSQP
+    stack (`repro.core.solver`) serves as a validation reference.
+  * `fleet_penalties` — the vectorized Table-IV/RTS penalty evaluation
+    with backend-aware kernel dispatch.
+  * `FleetSolveResult` — the uniform result every policy returns.
+    Policy-specific outputs ride `result.extras` (CR3 puts its clearing
+    `"rho"`, `"balanced"` and `"fiscal_deficit"` there).
+  * Device-sharding plumbing (100k-workload fleets): `pad_fleet` pads W
+    to a multiple of the device count with *inert* workloads (box [0, 0],
+    k=0, safe divisors), `_fleet_specs` builds the shard_map
+    PartitionSpecs, `_pad_state`/`_enter_tick` carry warm `EngineState`s
+    across padded/streaming re-solves. Reported results are sliced back
+    to true rows, but `FleetSolveResult.state` keeps the padded shape so
+    streaming re-solves chain without re-padding.
 
-  * W is padded to a multiple of the device count with *inert* workloads
-    (`pad_fleet`: box [0, 0], k=0, safe divisors) — reported results are
-    sliced back to true rows, but `FleetSolveResult.state` keeps the
-    padded shape so streaming re-solves can chain without re-padding.
-  * Nothing is psum'd in the solver hot loop: the objectives are sums of
-    per-workload terms, so each device's local gradient IS the global one.
-    The genuinely cross-workload reductions — the objective normalizers
-    and shared step scales (`_cr1_norms`/`_cr2_norms`, computed from the
-    true fleet before padding) and CR3's Eq.-6 fiscal-clearing sums (taxes
-    vs rebates, computed on the gathered solution between best-response
-    rounds) — happen outside the sharded region and enter replicated.
-  * Streaming ticks fuse into one donated-buffer XLA call: `donate=True`
-    routes to a `jax.jit(..., donate_argnums=state)` twin, and
-    `shift=`/`reset_mu=` fold the rolling-horizon state shift and the
-    per-tick mu restart into the same call, so `RollingHorizonSolver`
-    re-solves in place. A donated `EngineState`'s buffers are invalidated
-    — don't reuse a state object you passed with `donate=True`.
+The historical per-policy entry points `solve_cr{1,2,3}_fleet` and
+`solve_cr1_fleet_sweep` remain as deprecated shims that delegate to
+`api.solve`/`api.sweep` (one `DeprecationWarning` per call); they will be
+removed once nothing imports them.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import warnings
 from typing import Sequence
 
@@ -72,17 +59,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.engine import (EngineConfig, EngineState, al_minimize,
-                               al_minimize_sharded)
+from repro.core.engine import EngineState
 from repro.core.penalty import PenaltyModel
-from repro.launch.mesh import fleet_axis
 
 Array = jax.Array
 
-# Initial AL penalty weights per policy — the single source for both the
-# adapters below and the streaming controller's per-tick μ reset
-# (`repro.core.streaming.RollingHorizonSolver`). CR3's gentle wall is
-# deliberate; see `_cr3_best_response`.
+# Initial AL penalty weights per policy — the single source for the policy
+# backends in `repro.core.api` and the streaming controller's per-tick μ
+# reset. CR3's gentle wall is deliberate; see `api.CR3`.
 CR1_MU0 = 10.0
 CR2_MU0 = 10.0
 CR3_MU0 = 0.01
@@ -267,13 +251,22 @@ def fleet_penalties(p: FleetProblem, D: Array,
     return jnp.asarray(p.k) * raw
 
 
+def cr2_reference_fleet(p: FleetProblem, cap_frac: float) -> np.ndarray:
+    """C_i under a hypothetical equal power cap at cap_frac·E (vectorized
+    version of policies.cr2_reference_losses) — CR2's fairness targets."""
+    L = cap_frac * np.asarray(p.entitlement)[:, None]
+    d_cap = np.maximum(np.asarray(p.usage) - L, 0.0)
+    return np.asarray(fleet_penalties(p, jnp.asarray(d_cap)))
+
+
 # ---------------------------------------------------------------------------
-# Shared adapter plumbing: bounds, projection, reporting
+# Shared adapter plumbing: bounds, projection, padding, reporting
 # ---------------------------------------------------------------------------
 def _jit_view(p: FleetProblem) -> FleetProblem:
     """Strip reporting-only static metadata (`names`) before jit calls —
     names live in the pytree treedef, so leaving them in would recompile
-    the adapters for every same-shaped fleet with different job names."""
+    the policy backends for every same-shaped fleet with different job
+    names."""
     return dataclasses.replace(p, names=None)
 
 
@@ -365,8 +358,11 @@ def _enter_tick(state: EngineState, shift: int, reset_mu: bool,
         state = dataclasses.replace(
             state, mu=jnp.full_like(state.mu, mu0))
     return state
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetSolveResult:
+    """Uniform result of one fleet policy solve (any policy)."""
     D: np.ndarray
     carbon_reduction_pct: float
     total_penalty_pct: float
@@ -374,10 +370,21 @@ class FleetSolveResult:
     preservation_violation: float
     # Reusable engine carry for warm-started re-solves (rolling horizon).
     state: EngineState | None = None
-    # CR3 fiscal clearing (Eq. 6): did taxes cover rebates, and by how much
-    # were they short when they didn't? Always balanced for CR1/CR2.
-    balanced: bool = True
-    fiscal_deficit: float = 0.0
+    # Policy-specific outputs. CR3's fiscal clearing (Eq. 6) reports
+    # "rho" (the clearing carbon price), "balanced" (did taxes cover
+    # rebates) and "fiscal_deficit" (rebates − taxes when they didn't,
+    # NP·kgCO2/MWh) here; CR1/CR2 leave it empty.
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def balanced(self) -> bool:
+        """CR3 Eq.-6 clearing converged (always True for other policies)."""
+        return bool(self.extras.get("balanced", True))
+
+    @property
+    def fiscal_deficit(self) -> float:
+        """Rebates − taxes left when clearing failed (0.0 when balanced)."""
+        return float(self.extras.get("fiscal_deficit", 0.0))
 
 
 def _bounds(p: FleetProblem) -> tuple[Array, Array]:
@@ -415,7 +422,7 @@ def _projection(p: FleetProblem, lo: Array, hi: Array):
 
 def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
             iters: int, state: EngineState | None = None,
-            **extra) -> FleetSolveResult:
+            extras: dict | None = None) -> FleetSolveResult:
     mci = np.asarray(p.mci)
     carbon_base = float((np.asarray(p.usage).sum(0) * mci).sum())
     car = float((D @ mci).sum())
@@ -428,92 +435,17 @@ def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
         D=D, carbon_reduction_pct=100 * car / carbon_base,
         total_penalty_pct=100 * float(pens.sum())
         / float(np.asarray(p.entitlement).sum()),
-        iters=iters, preservation_violation=viol, state=state, **extra)
+        iters=iters, preservation_violation=viol, state=state,
+        extras=extras or {})
 
 
 # ---------------------------------------------------------------------------
-# CR1 — Efficient DR at fleet scale (thin adapter over the engine)
+# Deprecated per-policy entry points (thin shims over repro.core.api)
 # ---------------------------------------------------------------------------
-def _cr1_norms(p: FleetProblem):
-    """Fleet-global CR1 reductions (normalizers + shared step scale) —
-    computed from the TRUE fleet before any device padding, then passed
-    into the sharded solve as replicated scalars."""
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    return (100.0 / jnp.asarray(p.entitlement).sum(),
-            100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
-            jnp.maximum(hi - lo, 1e-6).mean())
-
-
-def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    pen_norm, car_norm, step_scale = \
-        _cr1_norms(p) if norms is None else norms
-
-    def objective(D: Array, lam) -> Array:
-        return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
-                - car_norm * (D @ mci).sum())
-
-    project = _projection(p, lo, hi)
-    return objective, project, step_scale
-
-
-def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
-              use_kernel: bool, shift: int = 0, reset_mu: bool = False):
-    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
-    objective, project, step_scale = _cr1_pieces(p, use_kernel)
-    D, aux = al_minimize(objective, project, state0.x, hyper=lam,
-                         step_scale=step_scale, init=state0,
-                         cfg=EngineConfig(inner_steps=steps, outer_steps=1))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu")
-_cr1_run = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC)
-_cr1_run_donated = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC,
-                           donate_argnums=(2,))
-
-
-def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
-                      mesh, steps: int, use_kernel: bool, shift: int = 0,
-                      reset_mu: bool = False):
-    state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
-    axis = fleet_axis(mesh)
-
-    def build(blk):
-        pb, lam_b, norms_b = blk
-        objective, project, step_scale = _cr1_pieces(pb, use_kernel,
-                                                     norms=norms_b)
-        return dict(objective=objective, project=project, hyper=lam_b,
-                    step_scale=step_scale)
-
-    D, aux = al_minimize_sharded(
-        build, (p, lam, norms), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
-        init=state0, cfg=EngineConfig(inner_steps=steps, outer_steps=1))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR1_STATIC_SH = ("mesh", "steps", "use_kernel", "shift", "reset_mu")
-_cr1_run_sharded = jax.jit(_cr1_impl_sharded, static_argnames=_CR1_STATIC_SH)
-_cr1_run_sharded_donated = jax.jit(_cr1_impl_sharded,
-                                   static_argnames=_CR1_STATIC_SH,
-                                   donate_argnums=(3,))
-
-
-@functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
-def _cr1_sweep(p: FleetProblem, lams, steps: int, use_kernel: bool):
-    objective, project, step_scale = _cr1_pieces(p, use_kernel)
-
-    def solve_one(lam):
-        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                           hyper=lam, step_scale=step_scale,
-                           cfg=EngineConfig(inner_steps=steps,
-                                            outer_steps=1))
-        return D, fleet_penalties(p, D, use_kernel)
-
-    return jax.vmap(solve_one)(lams)
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} from repro.core.api",
+        DeprecationWarning, stacklevel=3)
 
 
 def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
@@ -521,136 +453,24 @@ def solve_cr1_fleet(p: FleetProblem, lam: float = 1.45, steps: int = 600,
                     warm: EngineState | None = None, *,
                     mesh=None, donate: bool = False, shift: int = 0,
                     reset_mu: bool = False) -> FleetSolveResult:
-    """CR1 fleet solve. Pass `warm` (a previous result's `.state`, e.g.
-    shifted by `EngineState.shifted`) to warm-start: same jit trace as the
-    cold solve, typically needing far fewer `steps`.
-
-    `mesh` shards the solve over the mesh's fleet axis (W padded to a
-    multiple of the device count; `result.state` keeps the padded shape so
-    re-solves chain without re-padding — see the module docstring).
-    `donate` routes through a `donate_argnums` twin that reuses the warm
-    state's buffers in place (the passed state becomes invalid);
-    `shift`/`reset_mu` fold the rolling-horizon shift and per-tick mu
-    restart into the same XLA call (the streaming tick path).
-    """
-    use_kernel = resolve_use_kernel(use_kernel)
-    if mesh is None:
-        if warm is None:
-            warm = EngineState.cold(jnp.zeros(p.usage.shape))
-        run = _cr1_run_donated if donate else _cr1_run
-        D, pens, state = run(_jit_view(p), lam, warm, steps=steps,
-                             use_kernel=use_kernel, shift=shift,
-                             reset_mu=reset_mu)
-        return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
-                       state=state)
-    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
-    norms = _cr1_norms(p)
-    warm = _pad_state(warm, pp.W) if warm is not None \
-        else EngineState.cold(jnp.zeros(pp.usage.shape))
-    run = _cr1_run_sharded_donated if donate else _cr1_run_sharded
-    D, pens, state = run(pp, lam, norms, warm, mesh=mesh, steps=steps,
-                         use_kernel=use_kernel, shift=shift,
-                         reset_mu=reset_mu)
-    return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W], iters=steps,
-                   state=state)
+    """Deprecated: `api.solve(p, CR1(lam=...), ctx=SolveContext(...))`."""
+    from repro.core.api import CR1, SolveContext, solve
+    _warn_deprecated("solve_cr1_fleet",
+                     "solve(p, CR1(lam=...), ctx=SolveContext(...))")
+    return solve(p, CR1(lam=lam), ctx=SolveContext(
+        mesh=mesh, donate=donate, shift=shift, reset_mu=reset_mu,
+        warm=warm, use_kernel=use_kernel, steps=steps))
 
 
 def solve_cr1_fleet_sweep(p: FleetProblem, lams: Sequence[float],
                           steps: int = 600, use_kernel: bool | None = None,
                           ) -> list[FleetSolveResult]:
-    """The Fig.-8 Pareto sweep as ONE XLA call: the λ grid rides a vmap
-    axis through the shared engine, so the sweep compiles once."""
-    use_kernel = resolve_use_kernel(use_kernel)
-    Ds, pens = _cr1_sweep(_jit_view(p), jnp.asarray(lams, jnp.float32),
-                          steps, use_kernel)
-    return [_report(p, D, pen, iters=steps)
-            for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
-
-
-# ---------------------------------------------------------------------------
-# CR2 at fleet scale — fair-centralized with per-workload penalty targets
-# ---------------------------------------------------------------------------
-def cr2_reference_fleet(p: FleetProblem, cap_frac: float) -> np.ndarray:
-    """C_i under a hypothetical equal power cap at cap_frac·E (vectorized
-    version of policies.cr2_reference_losses)."""
-    L = cap_frac * np.asarray(p.entitlement)[:, None]
-    d_cap = np.maximum(np.asarray(p.usage) - L, 0.0)
-    return np.asarray(fleet_penalties(p, jnp.asarray(d_cap)))
-
-
-def _cr2_norms(p: FleetProblem, refs):
-    """Fleet-global CR2 reductions (carbon normalizer, equality-residual
-    scale, shared step scale) from the TRUE fleet before padding."""
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    return (100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
-            jnp.maximum(refs.mean(), 1e-3),
-            jnp.maximum(hi - lo, 1e-6).mean())
-
-
-def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    car_norm, scale, step_scale = \
-        _cr2_norms(p, refs) if norms is None else norms
-
-    def objective(D: Array, _) -> Array:
-        return -car_norm * (D @ mci).sum()
-
-    def eq(D: Array, _) -> Array:
-        return (fleet_penalties(p, D, use_kernel) - refs) / scale
-
-    return objective, eq, _projection(p, lo, hi), step_scale
-
-
-def _cr2_cfg(steps: int, outer: int) -> EngineConfig:
-    return EngineConfig(inner_steps=steps, outer_steps=outer, mu0=CR2_MU0,
-                        mu_growth=2.0)
-
-
-def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
-              outer: int, use_kernel: bool, shift: int = 0,
-              reset_mu: bool = False):
-    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
-    objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel)
-    D, aux = al_minimize(objective, project, state0.x,
-                         eq_residual=eq, step_scale=step_scale, init=state0,
-                         cfg=_cr2_cfg(steps, outer))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR2_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
-_cr2_run = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC)
-_cr2_run_donated = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC,
-                           donate_argnums=(2,))
-
-
-def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
-                      mesh, steps: int, outer: int, use_kernel: bool,
-                      shift: int = 0, reset_mu: bool = False):
-    state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
-    axis = fleet_axis(mesh)
-
-    def build(blk):
-        pb, refs_b, norms_b = blk
-        objective, eq, project, step_scale = _cr2_pieces(
-            pb, refs_b, use_kernel, norms=norms_b)
-        return dict(objective=objective, project=project, eq_residual=eq,
-                    step_scale=step_scale)
-
-    D, aux = al_minimize_sharded(
-        build, (p, refs, norms), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), P(axis), (P(), P(), P())),
-        init=state0, cfg=_cr2_cfg(steps, outer))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR2_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
-                  "reset_mu")
-_cr2_run_sharded = jax.jit(_cr2_impl_sharded, static_argnames=_CR2_STATIC_SH)
-_cr2_run_sharded_donated = jax.jit(_cr2_impl_sharded,
-                                   static_argnames=_CR2_STATIC_SH,
-                                   donate_argnums=(3,))
+    """Deprecated: `api.sweep(p, [CR1(lam=l) for l in lams], ctx=...)`."""
+    from repro.core.api import CR1, SolveContext, sweep
+    _warn_deprecated("solve_cr1_fleet_sweep",
+                     "sweep(p, [CR1(lam=l) for l in lams], ctx=...)")
+    return sweep(p, [CR1(lam=float(lam)) for lam in lams],
+                 ctx=SolveContext(steps=steps, use_kernel=use_kernel))
 
 
 def solve_cr2_fleet(p: FleetProblem, cap_frac: float = 0.78,
@@ -659,155 +479,13 @@ def solve_cr2_fleet(p: FleetProblem, cap_frac: float = 0.78,
                     warm: EngineState | None = None, *,
                     mesh=None, donate: bool = False, shift: int = 0,
                     reset_mu: bool = False) -> FleetSolveResult:
-    """min −carbon s.t. C_i(d_i) = C_i(cap%) ∀i — augmented Lagrangian with
-    one multiplier per workload, everything vectorized over the fleet.
-
-    `warm` carries a previous solve's primal AND its W equality multipliers
-    (the per-workload fairness prices), so a rolling re-solve converges in
-    a fraction of the cold outer/inner budget. `mesh`/`donate`/`shift`/
-    `reset_mu` as in `solve_cr1_fleet`: the per-workload multipliers shard
-    with their rows, and the padded equality residuals are identically zero
-    so pad multipliers stay 0."""
-    use_kernel = resolve_use_kernel(use_kernel)
-    refs = jnp.asarray(cr2_reference_fleet(p, cap_frac))
-    if mesh is None:
-        if warm is None:
-            warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
-                                    mu0=CR2_MU0)
-        run = _cr2_run_donated if donate else _cr2_run
-        D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
-                             outer=outer, use_kernel=use_kernel,
-                             shift=shift, reset_mu=reset_mu)
-        return _report(p, np.asarray(D), np.asarray(pens),
-                       iters=steps * outer, state=state)
-    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
-    norms = _cr2_norms(p, refs)
-    refs_p = jnp.concatenate([refs, jnp.zeros(pp.W - W, refs.dtype)])
-    warm = _pad_state(warm, pp.W) if warm is not None \
-        else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
-                              mu0=CR2_MU0)
-    run = _cr2_run_sharded_donated if donate else _cr2_run_sharded
-    D, pens, state = run(pp, refs_p, norms, warm, mesh=mesh, steps=steps,
-                         outer=outer, use_kernel=use_kernel, shift=shift,
-                         reset_mu=reset_mu)
-    return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
-                   iters=steps * outer, state=state)
-
-
-# ---------------------------------------------------------------------------
-# CR3 at fleet scale — decentralized taxes and rebates (Eqs. 5–8)
-# ---------------------------------------------------------------------------
-def _cr3_pieces(p: FleetProblem, use_kernel: bool, reg_scale):
-    """Best-response pieces for one device's row block (or the whole fleet).
-
-    Everything here is row-separable; `reg_scale` is the regularizer
-    normalizer 1e-3/(W_true·T), passed in so a padded sharded solve
-    regularizes identically to the unpadded single-device one.
-
-    Numerics, validated against the per-workload SLSQP reference:
-      * tiny quadratic regularizer — a selfish workload takes the *minimal*
-        adjustment satisfying its allowance; the regularizer breaks the
-        zero-penalty plateau of batch models toward that minimal response
-        (without it, any deep-feasible point is an equally 'optimal' best
-        response with wildly overpaid rebates).
-      * day-tangent gradient projection (see engine.al_minimize docs).
-      * gentle μ schedule: the KKT multipliers here are O(1e-3), so a stiff
-        wall (μ≫1) just makes projected Adam bounce off the boundary.
-    """
-    lo, hi = _bounds(p)
-    usage = jnp.asarray(p.usage)
-    E = jnp.asarray(p.entitlement)
-    mci = jnp.asarray(p.mci)
-    tau = 0.02 * E
-
-    def objective(D: Array, hyper) -> Array:
-        reg = reg_scale * ((D / E[:, None]) ** 2).sum()
-        return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
-
-    def ineq(D: Array, hyper) -> Array:
-        rho_, tax_ = hyper
-        rebate = rho_ * (D @ mci)
-        peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None], axis=1)
-        return ((1.0 - tax_) * E + rebate - peak) / E
-
-    W, T = p.usage.shape
-    n_days = max(1, T // p.day_hours)
-    span = n_days * p.day_hours
-    is_batch = jnp.asarray(p.is_batch)[:, None, None]
-
-    def day_tangent(g: Array) -> Array:
-        Gd = g[:, :span].reshape(W, n_days, p.day_hours)
-        Gd = jnp.where(is_batch, Gd - Gd.mean(axis=-1, keepdims=True), Gd)
-        return jnp.concatenate([Gd.reshape(W, span), g[:, span:]], axis=1)
-
-    step_scale = jnp.maximum(hi - lo, 1e-6).mean(axis=1, keepdims=True)
-    return objective, ineq, _projection(p, lo, hi), step_scale, day_tangent
-
-
-def _cr3_cfg(steps: int, outer: int) -> EngineConfig:
-    return EngineConfig(inner_steps=steps, outer_steps=outer, lr=0.005,
-                        mu0=CR3_MU0, mu_growth=2.0, beta2=0.99)
-
-
-def _cr3_impl(p: FleetProblem, rho, tax_frac, reg_scale,
-              state0: EngineState, steps: int, outer: int, use_kernel: bool,
-              shift: int = 0, reset_mu: bool = False):
-    """All W selfish problems in one AL solve. Each workload i minimizes its
-    own penalty s.t. the peak-allowance inequality (Eq. 5/8)
-
-        max_t (U_i − d_i) ≤ E_i − T_i + ρ·⟨mci, d_i⟩,   T_i = tax_frac·E_i
-
-    (smooth max as in `policies.cr3_workload_spec`). Objective, residual and
-    projection are all row-separable, so this single (W, T) engine call IS
-    the vmapped per-workload best response — one XLA call per round.
-    """
-    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
-    objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
-        p, use_kernel, reg_scale)
-    D, aux = al_minimize(objective, project, state0.x,
-                         hyper=(rho, tax_frac), ineq_residual=ineq,
-                         step_scale=step_scale, grad_transform=day_tangent,
-                         init=state0, cfg=_cr3_cfg(steps, outer))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR3_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu")
-_cr3_best_response = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC)
-_cr3_best_response_donated = jax.jit(_cr3_impl, static_argnames=_CR3_STATIC,
-                                     donate_argnums=(4,))
-
-
-def _cr3_impl_sharded(p: FleetProblem, rho, tax_frac, reg_scale,
-                      state0: EngineState, mesh, steps: int, outer: int,
-                      use_kernel: bool, shift: int = 0,
-                      reset_mu: bool = False):
-    """Sharded best response: the allowance inequality, its multipliers and
-    the per-row step scale all live with their rows; only ρ/tax/reg_scale
-    are replicated. The Eq.-6 fiscal sums live in `solve_cr3_fleet`."""
-    state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
-    axis = fleet_axis(mesh)
-
-    def build(blk):
-        pb, hyper_b, reg_b = blk
-        objective, ineq, project, step_scale, day_tangent = _cr3_pieces(
-            pb, use_kernel, reg_b)
-        return dict(objective=objective, project=project, hyper=hyper_b,
-                    ineq_residual=ineq, step_scale=step_scale,
-                    grad_transform=day_tangent)
-
-    D, aux = al_minimize_sharded(
-        build, (p, (rho, tax_frac), reg_scale), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), (P(), P()), P()),
-        init=state0, cfg=_cr3_cfg(steps, outer))
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
-
-
-_CR3_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
-                  "reset_mu")
-_cr3_sharded = jax.jit(_cr3_impl_sharded, static_argnames=_CR3_STATIC_SH)
-_cr3_sharded_donated = jax.jit(_cr3_impl_sharded,
-                               static_argnames=_CR3_STATIC_SH,
-                               donate_argnums=(4,))
+    """Deprecated: `api.solve(p, CR2(cap_frac=..., outer=...), ctx=...)`."""
+    from repro.core.api import CR2, SolveContext, solve
+    _warn_deprecated("solve_cr2_fleet",
+                     "solve(p, CR2(cap_frac=...), ctx=SolveContext(...))")
+    return solve(p, CR2(cap_frac=cap_frac, outer=outer), ctx=SolveContext(
+        mesh=mesh, donate=donate, shift=shift, reset_mu=reset_mu,
+        warm=warm, use_kernel=use_kernel, steps=steps))
 
 
 def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
@@ -818,72 +496,18 @@ def solve_cr3_fleet(p: FleetProblem, rho: float = 0.02,
                     mesh=None, donate: bool = False, shift: int = 0,
                     reset_mu: bool = False,
                     ) -> tuple[FleetSolveResult, float]:
-    """Fleet-scale CR3: vmapped best responses + fiscal-balance clearing.
+    """Deprecated: `api.solve(p, CR3(rho=..., tax_frac=...), ctx=...)`.
 
-    The coordinator lowers the carbon price ρ until rebates are covered by
-    taxes (Eq. 6, `policies.cr3_fiscal_balance` semantics). Returns
-    (result, clearing ρ), mirroring `solver.solve_cr3`.
-
-    Each clearing round warm-starts from the previous round's engine state
-    (the allowance multipliers track the shrinking ρ smoothly); `warm`
-    seeds round 0 the same way for rolling-horizon re-solves.
-
-    With `mesh`, each best response runs sharded over the fleet axis; the
-    Eq.-6 sums (rebates paid vs taxes collected) are the only cross-device
-    reductions and happen here, on the gathered true-W solution between
-    rounds. `donate`/`shift`/`reset_mu` as in `solve_cr1_fleet` (rounds
-    after the first always re-enter with the μ schedule restarted).
-
-    If `clearing_iters` is exhausted with rebates still exceeding taxes,
-    the result carries `balanced=False` and the remaining `fiscal_deficit`
-    (rebates − taxes, NP·kgCO2/MWh), and a `RuntimeWarning` is emitted —
-    callers must not treat the returned ρ as market-clearing then."""
-    use_kernel = resolve_use_kernel(use_kernel)
-    mci = np.asarray(p.mci)
-    collected = tax_frac * float(np.asarray(p.entitlement).sum())
-    rho_cur = float(rho)
-    if mesh is None:
-        pj, W = _jit_view(p), p.W
-        state = warm if warm is not None else EngineState.cold(
-            jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
-        twin = _cr3_best_response_donated if donate else _cr3_best_response
-    else:
-        pj, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
-        state = _pad_state(warm, pj.W) if warm is not None \
-            else EngineState.cold(jnp.zeros(pj.usage.shape), n_in=pj.W,
-                                  mu0=CR3_MU0)
-        twin = _cr3_sharded_donated if donate else _cr3_sharded
-    reg_scale = 1e-3 / (W * p.T)
-
-    def best_response(st, shift_, reset_):
-        kw = {} if mesh is None else {"mesh": mesh}
-        return twin(pj, rho_cur, tax_frac, reg_scale, st, steps=steps,
-                    outer=outer, use_kernel=use_kernel, shift=shift_,
-                    reset_mu=reset_, **kw)
-
-    D, pens, state = best_response(state, shift, reset_mu)
-    D = np.asarray(D)[:W]
-    rounds = 1
-    paid = rho_cur * float((D @ mci).sum())
-    for _ in range(clearing_iters):
-        if paid <= collected + 1e-9:
-            break
-        rho_cur *= max(0.5, 0.9 * collected / max(paid, 1e-9))
-        # Carry primal + allowance multipliers; restart the μ schedule so
-        # every round keeps the gentle wall the best response relies on.
-        D, pens, state = best_response(state, 0, True)
-        D = np.asarray(D)[:W]
-        rounds += 1
-        paid = rho_cur * float((D @ mci).sum())
-    balanced = paid <= collected + 1e-9
-    deficit = 0.0 if balanced else paid - collected
-    if not balanced:
-        warnings.warn(
-            f"solve_cr3_fleet: fiscal clearing did not converge in "
-            f"{clearing_iters} iterations — rebates exceed taxes by "
-            f"{deficit:.4g} at rho={rho_cur:.4g} (Eq. 6 unmet)",
-            RuntimeWarning, stacklevel=2)
-    return (_report(p, D, np.asarray(pens)[:W],
-                    iters=steps * outer * rounds,
-                    state=state, balanced=balanced, fiscal_deficit=deficit),
-            rho_cur)
+    The unified API returns a single `FleetSolveResult`; the clearing ρ
+    this shim's tuple carried lives in `result.extras["rho"]`."""
+    from repro.core.api import CR3, SolveContext, solve
+    _warn_deprecated(
+        "solve_cr3_fleet",
+        "solve(p, CR3(rho=..., tax_frac=...), ctx=SolveContext(...)) "
+        "(clearing rho is result.extras['rho'])")
+    result = solve(p, CR3(rho=rho, tax_frac=tax_frac, outer=outer,
+                          clearing_iters=clearing_iters),
+                   ctx=SolveContext(mesh=mesh, donate=donate, shift=shift,
+                                    reset_mu=reset_mu, warm=warm,
+                                    use_kernel=use_kernel, steps=steps))
+    return result, result.extras["rho"]

@@ -13,7 +13,7 @@ Two interchangeable backends consume a `PolicySpec`:
     handled by exact projection (both are cheap closed forms); equality /
     inequality constraints get multiplier + quadratic terms. One XLA call
     solves the whole problem; `vmap` over hyperparameters sweeps a Pareto
-    frontier in a single compile (see `fleet_solver.solve_cr1_fleet_sweep`).
+    frontier in a single compile (see `repro.core.api.sweep`).
 
 Both report final metrics with the *unsmoothed* models so numbers are
 comparable across solvers. With the vectorized `FleetProblem` stack (see

@@ -8,11 +8,12 @@ the window slides forward. This module is that control loop:
 
   * `ForecastStream` (`repro.core.carbon`) supplies the revised horizons —
     a persistence + lead-time-noise revision model, or replayed snapshots.
-  * `RollingHorizonSolver` holds a `FleetProblem` template and, per tick:
+  * `RollingHorizonSolver` holds a `FleetProblem` template plus a
+    `DRPolicy` (`repro.core.api`) and, per tick:
       1. slides the usage/jobs window one hour and swaps in the fresh
          `(T,)` forecast,
-      2. warm-starts the policy adapter from the previous tick's
-         `EngineState`, shifted one hour along time
+      2. warm-starts `api.solve(problem, policy, ctx=...)` from the
+         previous tick's `EngineState`, shifted one hour along time
          (`EngineState.shifted`) — multipliers carry over as-is since
          they price per-workload constraints, not hours,
       3. commits hour 0 of the new plan and logs forecast vs realized
@@ -20,10 +21,10 @@ the window slides forward. This module is that control loop:
 
 Because `EngineState` is a pure-array pytree and every tick's problem has
 identical shapes, all warm re-solves reuse ONE jitted trace (per policy):
-the hot path is a single XLA call per tick — the adapters' `shift=`/
-`reset_mu=` arguments fold the one-hour state roll and the per-tick mu
-restart into that same call, and `donate=True` additionally donates the
-previous tick's `EngineState` buffers so XLA re-solves in place
+the hot path is a single XLA call per tick — `SolveContext.shift`/
+`reset_mu` fold the one-hour state roll and the per-tick mu restart into
+that same call, and `donate=True` additionally donates the previous
+tick's `EngineState` buffers so XLA re-solves in place
 (`jax.jit(donate_argnums)`). The warm start lets each tick run with a
 fraction of the cold solve's inner Adam steps
 (`benchmarks.perf_micro.streaming_resolve` measures the latency and
@@ -46,11 +47,11 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.api import (DRPolicy, SolveContext, configured_policy,
+                            solve)
 from repro.core.carbon import ForecastStream
 from repro.core.engine import EngineState
-from repro.core.fleet_solver import (FleetProblem, FleetSolveResult,
-                                     solve_cr1_fleet, solve_cr2_fleet,
-                                     solve_cr3_fleet)
+from repro.core.fleet_solver import FleetProblem, FleetSolveResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,12 +109,17 @@ class RollingHorizonSolver:
         traces that slide with the window (`np.roll` along time).
       stream: revised-forecast source; `stream.horizon` must equal
         `problem.T`.
-      policy: "cr1" | "cr2" | "cr3".
+      policy: a `DRPolicy` object (`CR1(lam=...)`, `CR2(...)`,
+        `CR3(...)`, ...) or a `POLICY_REGISTRY` name. Unknown names raise
+        `ValueError` (naming the registered choices) here at
+        construction, not at the first `step()`.
+      legacy policy knobs: `lam` (CR1), `cap_frac` (CR2),
+        `rho`/`tax_frac` (CR3) and `outer` configure the policy object
+        when `policy` is given by name; they are ignored when a policy
+        object is passed.
       cold_steps: inner Adam steps for the tick-0 cold solve.
       warm_steps: inner steps for warm-started re-solves — the streaming
         speedup is `cold_steps / warm_steps` per multiplier round.
-      policy knobs: `lam` (CR1), `cap_frac`/`outer` (CR2),
-        `rho`/`tax_frac`/`outer` (CR3).
       mesh: optional device mesh — every tick's re-solve runs sharded over
         its fleet axis (workloads padded to the device count once; the
         engine state stays padded between ticks).
@@ -121,10 +127,17 @@ class RollingHorizonSolver:
         (in-place buffers, one XLA call per tick). Prior ticks'
         `plan.state` objects become invalid once the next tick runs, so
         leave False when capturing states from `on_tick` callbacks.
+
+    CR3 note: the policy object's `rho` is the *configured* price, so
+    every window re-clears from it — clearing only ever lowers ρ, and
+    carrying a lowered price forward would ratchet the fleet onto a
+    permanently depressed carbon price after one transient tick.
+    `last_rho` exposes the most recent cleared price
+    (`plan.extras["rho"]`).
     """
 
     def __init__(self, problem: FleetProblem, stream: ForecastStream, *,
-                 policy: str = "cr1", lam: float = 1.45,
+                 policy: str | DRPolicy = "cr1", lam: float = 1.45,
                  cap_frac: float = 0.78, rho: float = 0.02,
                  tax_frac: float = 0.2, cold_steps: int = 600,
                  warm_steps: int = 150, outer: int = 4,
@@ -133,19 +146,17 @@ class RollingHorizonSolver:
         if stream.horizon != problem.T:
             raise ValueError(
                 f"stream horizon {stream.horizon} != problem.T {problem.T}")
-        if policy not in ("cr1", "cr2", "cr3"):
-            raise ValueError(f"unknown policy {policy!r}")
         self.problem = problem
         self.stream = stream
-        self.policy = policy
-        self.lam = lam
-        self.cap_frac = cap_frac
-        self.rho = rho               # configured CR3 price; never ratchets
-        self.last_rho = rho          # most recent cleared price (CR3)
-        self.tax_frac = tax_frac
+        # Registry names become policy objects configured with the legacy
+        # knobs; unknown names fail HERE with the registered choices (an
+        # opaque mid-run failure at the first step() otherwise).
+        self.policy = configured_policy(policy, lam=lam, cap_frac=cap_frac,
+                                        rho=rho, tax_frac=tax_frac,
+                                        outer=outer)
+        self.last_rho = getattr(self.policy, "rho", None)
         self.cold_steps = cold_steps
         self.warm_steps = warm_steps
-        self.outer = outer
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.donate = donate
@@ -167,21 +178,13 @@ class RollingHorizonSolver:
 
     def _solve(self, p: FleetProblem, warm: EngineState | None,
                steps: int, shift: int, reset_mu: bool) -> FleetSolveResult:
-        kw = dict(use_kernel=self.use_kernel, warm=warm, mesh=self.mesh,
-                  donate=self.donate, shift=shift, reset_mu=reset_mu)
-        if self.policy == "cr1":
-            return solve_cr1_fleet(p, lam=self.lam, steps=steps, **kw)
-        if self.policy == "cr2":
-            return solve_cr2_fleet(p, cap_frac=self.cap_frac, steps=steps,
-                                   outer=self.outer, **kw)
-        # Re-clear every window from the *configured* price: clearing only
-        # ever lowers rho, so carrying a lowered price forward would ratchet
-        # the fleet onto a permanently depressed carbon price after one
-        # transient tick. `last_rho` exposes the latest cleared price.
-        result, self.last_rho = solve_cr3_fleet(
-            p, rho=self.rho, tax_frac=self.tax_frac, steps=steps,
-            outer=self.outer, **kw)
-        return result
+        ctx = SolveContext(mesh=self.mesh, donate=self.donate, shift=shift,
+                           reset_mu=reset_mu, warm=warm,
+                           use_kernel=self.use_kernel, steps=steps)
+        plan = solve(p, self.policy, ctx=ctx)
+        if "rho" in plan.extras:
+            self.last_rho = plan.extras["rho"]
+        return plan
 
     def step(self) -> TickResult:
         """Ingest the next forecast revision, re-solve, commit hour 0."""
@@ -193,7 +196,7 @@ class RollingHorizonSolver:
         # the policy's mu0 — without the reset, mu compounds by
         # mu_growth^outer per tick and CR2/CR3's walls turn stiff within a
         # handful of ticks (multipliers still carry the constraint prices).
-        # Both happen *inside* the adapter's jitted call, so a tick is one
+        # Both happen *inside* the solve's jitted call, so a tick is one
         # XLA dispatch (donated when self.donate).
         steps = self.cold_steps if warm is None else self.warm_steps
         plan = self._solve(p_t, warm, steps, shift=0 if warm is None else 1,

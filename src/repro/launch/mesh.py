@@ -38,9 +38,9 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int = 1):
 def make_fleet_mesh(n_devices: int | None = None):
     """1-D mesh over `n_devices` (default: all) for W-axis fleet sharding.
 
-    Used by `solve_cr{1,2,3}_fleet(..., mesh=...)`: workloads, per-workload
-    multipliers, and Adam moments shard over `FLEET_AXIS`; the MCI trace and
-    solver scalars stay replicated.
+    Used by `repro.core.api.solve(..., ctx=SolveContext(mesh=...))`:
+    workloads, per-workload multipliers, and Adam moments shard over
+    `FLEET_AXIS`; the MCI trace and solver scalars stay replicated.
     """
     devs = jax.devices()
     n = len(devs) if n_devices is None else n_devices

@@ -1,0 +1,281 @@
+"""First-class policy API (`repro.core.api`): parity with the legacy
+entry points (bitwise on CPU), the vmapped sweep lane vs a loop of
+`solve()` calls, policy-object round-trips (stable cache keys), the
+registry, and the legacy-shim deprecation contract.
+
+`scripts/ci.sh` re-runs this file under `-W error::DeprecationWarning`
+(the deprecation lane): every shim call below is wrapped in an explicit
+warning capture, so any *stray* DeprecationWarning — a shim warning
+twice, or the new API leaking through a shim — fails the lane."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import fleet_solver as fs
+from repro.core.api import (B1, B3, CR1, CR2, CR3, POLICY_REGISTRY,
+                            DRPolicy, SolveContext, resolve_policy, solve,
+                            sweep)
+from repro.core.fleet_solver import FleetSolveResult, synthetic_fleet
+
+
+@pytest.fixture(scope="module")
+def fp():
+    return synthetic_fleet(5, seed=3)
+
+
+def _shim(fn, *args, **kwargs):
+    """Call a legacy shim, asserting it warns exactly once, and swallow
+    the warning so the deprecation lane's error filter stays quiet."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and "repro.core.api" in str(x.message)]
+    assert len(dep) == 1, \
+        f"{fn.__name__} emitted {len(dep)} DeprecationWarnings, want 1"
+    return out
+
+
+def _same_result(a: FleetSolveResult, b: FleetSolveResult) -> None:
+    np.testing.assert_array_equal(a.D, b.D)
+    assert a.carbon_reduction_pct == b.carbon_reduction_pct
+    assert a.total_penalty_pct == b.total_penalty_pct
+    assert a.iters == b.iters
+    assert a.preservation_violation == b.preservation_violation
+    np.testing.assert_array_equal(np.asarray(a.state.x),
+                                  np.asarray(b.state.x))
+    np.testing.assert_array_equal(np.asarray(a.state.lam_eq),
+                                  np.asarray(b.state.lam_eq))
+    np.testing.assert_array_equal(np.asarray(a.state.lam_in),
+                                  np.asarray(b.state.lam_in))
+
+
+# ---------------------------------------------------------------------------
+# solve() parity with the legacy entry points — bitwise on CPU
+# ---------------------------------------------------------------------------
+def test_cr1_solve_matches_legacy_bitwise(fp):
+    new = solve(fp, CR1(lam=1.4), ctx=SolveContext(steps=120))
+    old = _shim(fs.solve_cr1_fleet, fp, lam=1.4, steps=120)
+    _same_result(new, old)
+    assert new.extras == {}
+
+
+def test_cr2_solve_matches_legacy_bitwise(fp):
+    new = solve(fp, CR2(cap_frac=0.8, outer=2), ctx=SolveContext(steps=100))
+    old = _shim(fs.solve_cr2_fleet, fp, cap_frac=0.8, steps=100, outer=2)
+    _same_result(new, old)
+    assert new.iters == 200                      # steps * outer
+
+
+def test_cr3_solve_matches_legacy_bitwise_incl_extras(fp):
+    new = solve(fp, CR3(outer=2, clearing_iters=2),
+                ctx=SolveContext(steps=100))
+    old, rho_old = _shim(fs.solve_cr3_fleet, fp, steps=100, outer=2,
+                         clearing_iters=2)
+    _same_result(new, old)
+    assert new.extras["rho"] == rho_old
+    assert new.extras["balanced"] == old.balanced
+    assert new.extras["fiscal_deficit"] == old.fiscal_deficit
+    # compat properties read through to extras
+    assert new.balanced == new.extras["balanced"]
+    assert new.fiscal_deficit == new.extras["fiscal_deficit"]
+
+
+def test_warm_start_via_context_matches_legacy(fp):
+    cold = solve(fp, CR1(lam=1.45), ctx=SolveContext(steps=120))
+    new = solve(fp, CR1(lam=1.45),
+                ctx=SolveContext(steps=60, warm=cold.state))
+    old = _shim(fs.solve_cr1_fleet, fp, lam=1.45, steps=60,
+                warm=cold.state)
+    _same_result(new, old)
+
+
+def test_policy_default_step_budgets(fp):
+    """ctx.steps=None uses the policy's default budget (the legacy
+    per-entry-point defaults)."""
+    assert CR1.default_steps == 600
+    assert CR2.default_steps == 400
+    assert CR3.default_steps == 600
+    assert SolveContext().resolved_steps(CR1()) == 600
+    assert SolveContext(steps=42).resolved_steps(CR1()) == 42
+
+
+# ---------------------------------------------------------------------------
+# sweep() — one vmapped XLA call vs a python loop of solve()
+# ---------------------------------------------------------------------------
+def test_cr1_sweep_matches_solve_loop(fp):
+    grid = [1.0, 1.45, 2.0]
+    ctx = SolveContext(steps=100)
+    got = sweep(fp, [CR1(lam=lam) for lam in grid], ctx=ctx)
+    for lam, r in zip(grid, got):
+        ref = solve(fp, CR1(lam=lam), ctx=ctx)
+        np.testing.assert_allclose(r.D, ref.D, atol=1e-5)
+        assert abs(r.carbon_reduction_pct
+                   - ref.carbon_reduction_pct) < 1e-3
+        assert abs(r.total_penalty_pct - ref.total_penalty_pct) < 1e-3
+
+
+def test_cr1_sweep_matches_legacy_sweep(fp):
+    grid = [1.0, 1.45, 2.0]
+    got = sweep(fp, [CR1(lam=lam) for lam in grid],
+                ctx=SolveContext(steps=100))
+    old = _shim(fs.solve_cr1_fleet_sweep, fp, grid, steps=100)
+    for r, ro in zip(got, old):
+        np.testing.assert_array_equal(r.D, ro.D)
+
+
+def test_cr2_sweep_matches_solve_loop(fp):
+    caps = [0.74, 0.8]
+    ctx = SolveContext(steps=80)
+    got = sweep(fp, [CR2(cap_frac=c, outer=2) for c in caps], ctx=ctx)
+    for c, r in zip(caps, got):
+        ref = solve(fp, CR2(cap_frac=c, outer=2), ctx=ctx)
+        np.testing.assert_allclose(r.D, ref.D, atol=1e-4)
+        assert abs(r.carbon_reduction_pct
+                   - ref.carbon_reduction_pct) < 1e-2
+
+
+def test_cr3_sweep_matches_solve_loop(fp):
+    """Lockstep clearing: every lane follows exactly its solo-`solve()`
+    ρ-update trajectory (balanced lanes freeze). Tolerances are looser
+    than CR1/CR2 — unbalanced-lane re-solves amplify vmap low-bit noise
+    through the warm restarts."""
+    pols = [CR3(tax_frac=t, outer=2, clearing_iters=2)
+            for t in (0.18, 0.3)]
+    ctx = SolveContext(steps=80)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        got = sweep(fp, pols, ctx=ctx)
+        refs = [solve(fp, pl, ctx=ctx) for pl in pols]
+    for r, ref in zip(got, refs):
+        assert abs(r.carbon_reduction_pct
+                   - ref.carbon_reduction_pct) < 0.05
+        assert abs(r.total_penalty_pct - ref.total_penalty_pct) < 0.05
+        np.testing.assert_allclose(r.extras["rho"], ref.extras["rho"],
+                                   rtol=1e-3)
+        assert r.extras["balanced"] == ref.extras["balanced"]
+        assert r.iters == ref.iters              # same clearing rounds
+
+
+def test_sweep_mixed_families_falls_back_to_loop(fp):
+    ctx = SolveContext(steps=60)
+    got = sweep(fp, [CR1(lam=1.4), B1(F=0.8)], ctx=ctx)
+    ref0 = solve(fp, CR1(lam=1.4), ctx=ctx)
+    ref1 = solve(fp, B1(F=0.8), ctx=ctx)
+    np.testing.assert_array_equal(got[0].D, ref0.D)
+    np.testing.assert_array_equal(got[1].D, ref1.D)
+
+
+def test_sweep_fallback_shares_warm_read_only_and_drops_donate(fp):
+    """A warm context forces the fallback loop; the shared warm state must
+    be reused read-only by every policy — donating it would invalidate the
+    buffers after the first solve and crash the second."""
+    cold = solve(fp, CR1(lam=1.4), ctx=SolveContext(steps=60))
+    got = sweep(fp, [CR1(lam=1.0), CR1(lam=1.5)],
+                ctx=SolveContext(steps=30, warm=cold.state, donate=True))
+    for lam, r in zip((1.0, 1.5), got):
+        ref = solve(fp, CR1(lam=lam),
+                    ctx=SolveContext(steps=30, warm=cold.state))
+        np.testing.assert_array_equal(r.D, ref.D)
+
+
+def test_configured_policy_knob_mapping():
+    """The shared string->policy resolver: legacy knobs configure the CR
+    families (outer defaults to 4, the historical streaming budget),
+    other registered names get default hypers, objects pass through."""
+    from repro.core.api import configured_policy
+    assert configured_policy("cr1", lam=1.2) == CR1(lam=1.2)
+    assert configured_policy("cr2", cap_frac=0.8) == CR2(cap_frac=0.8,
+                                                         outer=4)
+    assert configured_policy("cr3", rho=0.03, outer=2) == \
+        CR3(rho=0.03, tax_frac=0.2, outer=2)
+    assert configured_policy("b1") == B1()
+    pl = CR1(lam=9.9)
+    assert configured_policy(pl, lam=1.0) is pl
+    with pytest.raises(ValueError, match="registered policies"):
+        configured_policy("cr9")
+
+
+def test_sweep_empty_and_nonuniform(fp):
+    assert sweep(fp, []) == []
+    # non-uniform static knob (CR2.outer) -> loop fallback, same results
+    ctx = SolveContext(steps=50)
+    got = sweep(fp, [CR2(cap_frac=0.8, outer=1),
+                     CR2(cap_frac=0.8, outer=2)], ctx=ctx)
+    assert got[0].iters == 50 and got[1].iters == 100
+
+
+# ---------------------------------------------------------------------------
+# Baseline wrappers
+# ---------------------------------------------------------------------------
+def test_b1_b3_match_closed_form_baselines(fp):
+    from repro.core.baselines import b1_adjustments, b3_adjustments
+    dp = fp.to_problem()
+    np.testing.assert_allclose(solve(fp, B1(F=0.8)).D,
+                               b1_adjustments(dp, 0.8), atol=1e-12)
+    np.testing.assert_allclose(solve(fp, B3(depth=0.3)).D,
+                               b3_adjustments(dp, 0.3), atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Policy objects: registry, resolution, stable cache keys
+# ---------------------------------------------------------------------------
+def test_registry_names_and_string_solve(fp):
+    assert {"cr1", "cr2", "cr3", "b1", "b3"} <= set(POLICY_REGISTRY)
+    r = solve(fp, "b1")                       # default-hyper string solve
+    np.testing.assert_array_equal(r.D, solve(fp, B1()).D)
+    with pytest.raises(ValueError, match="registered policies.*cr1"):
+        solve(fp, "cr9")
+    with pytest.raises(TypeError, match="FleetProblem"):
+        solve(fp.to_problem(), CR1())
+
+
+def test_resolve_policy_accepts_objects_classes_and_names():
+    assert resolve_policy("cr2") == CR2()
+    assert resolve_policy(CR1) == CR1()       # class -> default instance
+    pl = CR3(tax_frac=0.25)
+    assert resolve_policy(pl) is pl
+    assert isinstance(pl, DRPolicy)
+    with pytest.raises(TypeError, match="DRPolicy"):
+        resolve_policy(3.14)
+
+
+@pytest.mark.parametrize("policy", [
+    CR1(lam=1.3), CR2(cap_frac=0.76, outer=4),
+    CR3(rho=0.03, tax_frac=0.25, outer=2, clearing_iters=5),
+    B1(F=0.8), B3(depth=0.4, max_cut=0.3)])
+def test_policy_asdict_round_trip_stable_cache_keys(policy):
+    """Hyperparameters are exactly the dataclass fields: asdict
+    round-trips through the constructor and json-serializes into a
+    stable, order-independent cache key (the fleetcache pattern)."""
+    d = dataclasses.asdict(policy)
+    assert type(policy)(**d) == policy
+    key = json.dumps({"policy": policy.name, **d}, sort_keys=True)
+    assert key == json.dumps(
+        {"policy": policy.name, **dataclasses.asdict(type(policy)(**d))},
+        sort_keys=True)
+    # execution concerns never leak into the policy's identity
+    assert not ({"mesh", "warm", "donate", "steps"} & set(d))
+
+
+# ---------------------------------------------------------------------------
+# Legacy-shim deprecation contract (ci.sh re-runs this file with
+# -W error::DeprecationWarning)
+# ---------------------------------------------------------------------------
+def test_every_legacy_entry_point_warns_exactly_once(fp):
+    # each call inside _shim asserts exactly one DeprecationWarning
+    _shim(fs.solve_cr1_fleet, fp, lam=1.4, steps=30)
+    _shim(fs.solve_cr1_fleet_sweep, fp, [1.4], steps=30)
+    _shim(fs.solve_cr2_fleet, fp, steps=30, outer=1)
+    _shim(fs.solve_cr3_fleet, fp, steps=30, outer=1, clearing_iters=1)
+
+
+def test_new_api_is_deprecation_free(fp):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        solve(fp, CR1(lam=1.4), ctx=SolveContext(steps=30))
+        sweep(fp, [CR1(lam=1.4)], ctx=SolveContext(steps=20))
+        solve(fp, B1())

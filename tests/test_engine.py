@@ -5,10 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.api import CR1, CR2, CR3, SolveContext, solve, sweep
 from repro.core.engine import EngineConfig, al_minimize, al_minimize_batched
 from repro.core.fleet_solver import (FleetProblem, fleet_penalties,
-                                     solve_cr1_fleet, solve_cr1_fleet_sweep,
-                                     solve_cr3_fleet, synthetic_fleet)
+                                     synthetic_fleet)
 
 
 @pytest.fixture(scope="module")
@@ -167,7 +167,7 @@ def test_cr1_fleet_matches_slsqp_per_workload(dr_problem, fp4):
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
     ref = solve_slsqp(cr1_spec(dr_problem, 1.4), maxiter=250)
-    got = solve_cr1_fleet(fp4, lam=1.4)
+    got = solve(fp4, CR1(lam=1.4))
     pens = np.asarray(fleet_penalties(fp4, jnp.asarray(got.D)))
     assert abs(got.carbon_reduction_pct - ref.carbon_reduction_pct) < 1.5
     assert abs(got.total_penalty_pct - ref.total_penalty_pct) < 1.5
@@ -181,11 +181,10 @@ def test_cr2_fleet_matches_slsqp_per_workload(dr_problem, fp4):
     """RTS rows match the SLSQP stack's penalties; batch rows land at or
     below them (the preservation projection bounds attainable deferral
     penalties — fairer than required, never unfairer)."""
-    from repro.core.fleet_solver import solve_cr2_fleet
     from repro.core.policies import cr2_spec
     from repro.core.solver import solve_slsqp
     ref = solve_slsqp(cr2_spec(dr_problem, 0.78), maxiter=250)
-    got = solve_cr2_fleet(fp4, cap_frac=0.78)
+    got = solve(fp4, CR2(cap_frac=0.78))
     pens = np.asarray(fleet_penalties(fp4, jnp.asarray(got.D)))
     assert abs(got.carbon_reduction_pct - ref.carbon_reduction_pct) < 1.5
     assert abs(got.total_penalty_pct - ref.total_penalty_pct) < 1.5
@@ -203,7 +202,8 @@ def test_cr3_fleet_matches_slsqp_reference(dr_problem, fp4):
     from repro.core.policies import cr3_fiscal_balance
     from repro.core.solver import solve_cr3
     ref, rho_ref = solve_cr3(dr_problem, rho=0.02)
-    got, rho_got = solve_cr3_fleet(fp4, rho=0.02)
+    got = solve(fp4, CR3(rho=0.02))
+    rho_got = got.extras["rho"]
     assert abs(got.carbon_reduction_pct - ref.carbon_reduction_pct) < 2.0
     assert abs(got.total_penalty_pct - ref.total_penalty_pct) < 2.0
     paid, collected = cr3_fiscal_balance(dr_problem, got.D, rho_got)
@@ -213,9 +213,10 @@ def test_cr3_fleet_matches_slsqp_reference(dr_problem, fp4):
 
 def test_cr1_sweep_matches_single_solves(fp4):
     lams = [1.2, 1.6]
-    sweep = solve_cr1_fleet_sweep(fp4, lams, steps=300)
-    for lam, r in zip(lams, sweep):
-        one = solve_cr1_fleet(fp4, lam=lam, steps=300)
+    ctx = SolveContext(steps=300)
+    got = sweep(fp4, [CR1(lam=lam) for lam in lams], ctx=ctx)
+    for lam, r in zip(lams, got):
+        one = solve(fp4, CR1(lam=lam), ctx=ctx)
         assert abs(r.carbon_reduction_pct - one.carbon_reduction_pct) < 1e-4
         assert abs(r.total_penalty_pct - one.total_penalty_pct) < 1e-4
 
@@ -223,11 +224,12 @@ def test_cr1_sweep_matches_single_solves(fp4):
 @pytest.mark.slow
 def test_cr3_fleet_scales_to_512_workloads():
     p = synthetic_fleet(512)
-    r, rho = solve_cr3_fleet(p, steps=150, outer=2, clearing_iters=2)
+    r = solve(p, CR3(outer=2, clearing_iters=2),
+              ctx=SolveContext(steps=150))
     assert r.D.shape == (512, 48)
     assert np.isfinite(r.carbon_reduction_pct)
     assert r.preservation_violation < 1e-3
-    assert rho > 0
+    assert r.extras["rho"] > 0
     # box respected
     hi = np.minimum(0.5 * p.entitlement[:, None], p.usage)
     assert (r.D <= hi + 1e-4).all()

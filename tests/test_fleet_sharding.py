@@ -64,9 +64,9 @@ def test_sharded_parity_paper_fleet(paper_fleet):
     4 -> 8 rows) match the single-device solve to <0.01 pp."""
     run_in_subprocess("""
 import numpy as np
+from repro.core.api import CR1, CR2, CR3, SolveContext, solve
 from repro.core.carbon import caiso_2021
-from repro.core.fleet_solver import (from_models, solve_cr1_fleet,
-                                     solve_cr2_fleet, solve_cr3_fleet)
+from repro.core.fleet_solver import from_models
 from repro.core.fleetcache import cached_paper_fleet
 from repro.launch.mesh import make_fleet_mesh
 
@@ -77,26 +77,27 @@ p = from_models(models, caiso_2021(48).mci)
 mesh = make_fleet_mesh()
 assert len(mesh.devices.ravel()) == 8
 
-a = solve_cr1_fleet(p, lam=1.4, steps=300)
-b = solve_cr1_fleet(p, lam=1.4, steps=300, mesh=mesh)
+a = solve(p, CR1(lam=1.4), ctx=SolveContext(steps=300))
+b = solve(p, CR1(lam=1.4), ctx=SolveContext(steps=300, mesh=mesh))
 gap = abs((1.4 * a.total_penalty_pct - a.carbon_reduction_pct)
           - (1.4 * b.total_penalty_pct - b.carbon_reduction_pct))
 assert gap < 0.01, f"CR1 gap {gap}"
 assert b.D.shape == (4, 48)
 assert b.state.x.shape == (8, 48)      # padded state for re-solve chaining
 
-a = solve_cr2_fleet(p, steps=200, outer=3)
-b = solve_cr2_fleet(p, steps=200, outer=3, mesh=mesh)
+a = solve(p, CR2(outer=3), ctx=SolveContext(steps=200))
+b = solve(p, CR2(outer=3), ctx=SolveContext(steps=200, mesh=mesh))
 assert abs(a.carbon_reduction_pct - b.carbon_reduction_pct) < 0.01
 assert abs(a.total_penalty_pct - b.total_penalty_pct) < 0.01
 
-(a, rho_a) = solve_cr3_fleet(p, steps=200, outer=2, clearing_iters=3)
-(b, rho_b) = solve_cr3_fleet(p, steps=200, outer=2, clearing_iters=3,
-                             mesh=mesh)
+cr3 = CR3(outer=2, clearing_iters=3)
+a = solve(p, cr3, ctx=SolveContext(steps=200))
+b = solve(p, cr3, ctx=SolveContext(steps=200, mesh=mesh))
 assert abs(a.carbon_reduction_pct - b.carbon_reduction_pct) < 0.01
 assert abs(a.total_penalty_pct - b.total_penalty_pct) < 0.01
-assert abs(rho_a - rho_b) < 1e-9       # identical Eq.-6 clearing trajectory
-assert b.balanced == a.balanced
+# identical Eq.-6 clearing trajectory
+assert abs(a.extras["rho"] - b.extras["rho"]) < 1e-9
+assert b.extras["balanced"] == a.extras["balanced"]
 # pad rows are inert: their allowance constraints stay feasible, so their
 # multipliers stay exactly zero (no growth to leak into chained re-solves)
 assert float(np.abs(np.asarray(b.state.lam_in)[4:]).max()) == 0.0
@@ -110,13 +111,15 @@ def test_sharded_parity_synthetic_mixed_and_padding():
     unpadded states."""
     run_in_subprocess("""
 import numpy as np
-from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.core.api import CR1, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet
 from repro.launch.mesh import make_fleet_mesh
 
 mesh = make_fleet_mesh()
 p = synthetic_fleet(13)
-a = solve_cr1_fleet(p, lam=1.45, steps=300)
-b = solve_cr1_fleet(p, lam=1.45, steps=300, mesh=mesh)
+cr1 = CR1(lam=1.45)
+a = solve(p, cr1, ctx=SolveContext(steps=300))
+b = solve(p, cr1, ctx=SolveContext(steps=300, mesh=mesh))
 assert b.D.shape == (13, 48)
 gap = abs((1.45 * a.total_penalty_pct - a.carbon_reduction_pct)
           - (1.45 * b.total_penalty_pct - b.carbon_reduction_pct))
@@ -124,8 +127,8 @@ assert gap < 0.01, f"gap {gap}"
 
 # warm chaining: unpadded state (from the single-device solve) pads on
 # entry; padded state (from the sharded solve) passes straight through.
-w1 = solve_cr1_fleet(p, lam=1.45, steps=100, mesh=mesh, warm=a.state)
-w2 = solve_cr1_fleet(p, lam=1.45, steps=100, mesh=mesh, warm=b.state)
+w1 = solve(p, cr1, ctx=SolveContext(steps=100, mesh=mesh, warm=a.state))
+w2 = solve(p, cr1, ctx=SolveContext(steps=100, mesh=mesh, warm=b.state))
 assert np.abs(w1.D - w2.D).max() < 1e-4
 print("OK")
 """)
@@ -138,8 +141,9 @@ def test_sharded_donated_streaming_tick():
     objective gap vs a cold solve at the full budget."""
     run_in_subprocess("""
 import numpy as np
+from repro.core.api import CR1, SolveContext, solve
 from repro.core.carbon import ForecastStream
-from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.core.fleet_solver import synthetic_fleet
 from repro.core.streaming import RollingHorizonSolver
 from repro.launch.mesh import make_fleet_mesh
 
@@ -148,25 +152,60 @@ p = synthetic_fleet(8)
 mesh = make_fleet_mesh()
 
 rep_plain = RollingHorizonSolver(
-    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5), policy="cr1",
-    lam=lam, cold_steps=cold, warm_steps=warm).run(4)
+    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5),
+    policy=CR1(lam=lam), cold_steps=cold, warm_steps=warm).run(4)
 rep_don = RollingHorizonSolver(
-    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5), policy="cr1",
-    lam=lam, cold_steps=cold, warm_steps=warm, mesh=mesh,
+    p, ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5),
+    policy=CR1(lam=lam), cold_steps=cold, warm_steps=warm, mesh=mesh,
     donate=True).run(4)
 assert np.abs(rep_plain.committed - rep_don.committed).max() < 1e-5
 assert [t.inner_steps for t in rep_don.ticks] == [cold, warm, warm, warm]
 
 # warm-vs-cold objective gap on the last window (PR-2 criterion)
 stream = ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5)
-rhs = RollingHorizonSolver(p, stream, policy="cr1", lam=lam,
+rhs = RollingHorizonSolver(p, stream, policy=CR1(lam=lam),
                            cold_steps=cold, warm_steps=warm, mesh=mesh)
 rhs.run(4)
 last = rhs._history[-1]
 p_t = rhs._window_problem(last.tick, stream.forecast(last.tick))
-cold_r = solve_cr1_fleet(p_t, lam=lam, steps=cold, mesh=mesh)
+cold_r = solve(p_t, CR1(lam=lam), ctx=SolveContext(steps=cold, mesh=mesh))
 obj = lambda r: lam * r.total_penalty_pct - r.carbon_reduction_pct
 gap = obj(last.plan) - obj(cold_r)
 assert gap <= 0.1, f"warm obj gap {gap}"
+print("OK")
+""")
+
+
+def test_sharded_sweep_parity():
+    """Acceptance: `sweep(p, grid, ctx=SolveContext(mesh=...))` — the
+    hyper axis vmapped INSIDE the W-axis shard_map — matches per-policy
+    single-device solves to <0.01 pp on 8 virtual devices, for both the
+    CR1 and CR2 families, with W=13 exercising inert-row padding."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1, CR2, SolveContext, solve, sweep
+from repro.core.fleet_solver import synthetic_fleet
+from repro.launch.mesh import make_fleet_mesh
+
+mesh = make_fleet_mesh()
+p = synthetic_fleet(13)
+
+grid = [1.0, 1.45, 2.2]
+sharded = sweep(p, [CR1(lam=l) for l in grid],
+                ctx=SolveContext(steps=300, mesh=mesh))
+for l, r8 in zip(grid, sharded):
+    r1 = solve(p, CR1(lam=l), ctx=SolveContext(steps=300))
+    gap = abs((l * r8.total_penalty_pct - r8.carbon_reduction_pct)
+              - (l * r1.total_penalty_pct - r1.carbon_reduction_pct))
+    assert gap < 0.01, f"CR1 lam={l} gap {gap}"
+    assert r8.D.shape == (13, 48)
+
+caps = [0.74, 0.8]
+sharded = sweep(p, [CR2(cap_frac=c, outer=2) for c in caps],
+                ctx=SolveContext(steps=200, mesh=mesh))
+for c, r8 in zip(caps, sharded):
+    r1 = solve(p, CR2(cap_frac=c, outer=2), ctx=SolveContext(steps=200))
+    assert abs(r8.carbon_reduction_pct - r1.carbon_reduction_pct) < 0.01, c
+    assert abs(r8.total_penalty_pct - r1.total_penalty_pct) < 0.01, c
 print("OK")
 """)

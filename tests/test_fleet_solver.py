@@ -1,4 +1,5 @@
-"""Vectorized fleet solver tests (beyond-paper scaling path)."""
+"""Vectorized fleet solver tests (beyond-paper scaling path), exercised
+through the unified policy API (`repro.core.api`)."""
 import dataclasses
 import warnings
 
@@ -6,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.api import CR1, CR2, CR3, SolveContext, solve
 from repro.core.fleet_solver import (FleetProblem, fleet_penalties,
-                                     from_models, solve_cr1_fleet,
-                                     solve_cr3_fleet, synthetic_fleet)
+                                     from_models, synthetic_fleet)
 
 
 @pytest.fixture(scope="module")
@@ -37,7 +38,7 @@ def test_fleet_solver_matches_slsqp(dr_problem, fp4):
     from repro.core.policies import cr1_spec
     from repro.core.solver import solve_slsqp
     ref = solve_slsqp(cr1_spec(dr_problem, 1.4), maxiter=250)
-    got = solve_cr1_fleet(fp4, lam=1.4)
+    got = solve(fp4, CR1(lam=1.4))
     assert abs(got.carbon_reduction_pct - ref.carbon_reduction_pct) < 1.5
     assert abs(got.total_penalty_pct - ref.total_penalty_pct) < 1.5
     assert got.preservation_violation < 1e-3
@@ -45,7 +46,7 @@ def test_fleet_solver_matches_slsqp(dr_problem, fp4):
 
 def test_fleet_scales_to_many_workloads():
     p = synthetic_fleet(256)
-    r = solve_cr1_fleet(p, lam=1.4, steps=300)
+    r = solve(p, CR1(lam=1.4), ctx=SolveContext(steps=300))
     assert r.carbon_reduction_pct > 0
     assert r.preservation_violation < 1e-3
     assert r.D.shape == (256, 48)
@@ -98,20 +99,23 @@ def test_cr3_unbalanced_clearing_warns():
     # tax pool; one clearing iteration can at most halve rho.
     tight = dataclasses.replace(p, entitlement=0.6 * p.usage.max(axis=1))
     with pytest.warns(RuntimeWarning, match="did not converge"):
-        r, rho = solve_cr3_fleet(tight, rho=1e4, tax_frac=0.1, steps=100,
-                                 outer=2, clearing_iters=1)
-    assert not r.balanced
-    assert r.fiscal_deficit > 0
-    assert rho < 1e4                                  # it did try
+        r = solve(tight, CR3(rho=1e4, tax_frac=0.1, outer=2,
+                             clearing_iters=1),
+                  ctx=SolveContext(steps=100))
+    assert not r.extras["balanced"] and not r.balanced
+    assert r.extras["fiscal_deficit"] > 0
+    assert r.fiscal_deficit == r.extras["fiscal_deficit"]
+    assert r.extras["rho"] < 1e4                      # it did try
 
 
 def test_cr3_balanced_clearing_reports_clean(fp4):
     with warnings.catch_warnings():
         warnings.simplefilter("error", RuntimeWarning)
-        r, rho = solve_cr3_fleet(fp4, rho=0.02, steps=150, outer=2,
-                                 clearing_iters=8)
-    assert r.balanced
-    assert r.fiscal_deficit == 0.0
+        r = solve(fp4, CR3(rho=0.02, outer=2, clearing_iters=8),
+                  ctx=SolveContext(steps=150))
+    assert r.extras["balanced"] and r.balanced
+    assert r.extras["fiscal_deficit"] == 0.0
+    assert r.extras["rho"] > 0
 
 
 def test_cr2_fleet_hits_rts_targets(dr_problem, fp4):
@@ -119,14 +123,10 @@ def test_cr2_fleet_hits_rts_targets(dr_problem, fp4):
     targets exactly; batch lands at-or-below target (the preservation
     projection bounds attainable deferral penalties — fairer than required,
     never unfairer)."""
-    import jax.numpy as jnp
-    from repro.core.fleet_solver import (cr2_reference_fleet,
-                                         solve_cr2_fleet)
-    r = solve_cr2_fleet(fp4, cap_frac=0.78)
+    from repro.core.fleet_solver import cr2_reference_fleet
+    r = solve(fp4, CR2(cap_frac=0.78))
     refs = cr2_reference_fleet(fp4, 0.78)
-    pens = np.asarray(
-        __import__("repro.core.fleet_solver", fromlist=["fleet_penalties"])
-        .fleet_penalties(fp4, jnp.asarray(r.D)))
+    pens = np.asarray(fleet_penalties(fp4, jnp.asarray(r.D)))
     rts = ~fp4.is_batch
     np.testing.assert_allclose(pens[rts], refs[rts], rtol=0.05, atol=0.02)
     assert (pens[fp4.is_batch] <= refs[fp4.is_batch] + 0.05).all()

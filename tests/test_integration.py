@@ -64,6 +64,24 @@ def test_fleet_coordinator_plans():
     assert abs(tr[:24].sum()) < 0.05 * np.abs(tr).sum() + 1e-6
 
 
+def test_fleet_coordinator_policy_resolution():
+    """String policies resolve through the registry with the coordinator's
+    knobs — CR2/CR3 keep the historical streaming outer=4 budget, every
+    registered name means the same policy as elsewhere, and unregistered
+    names keep the legacy CR1 fallback."""
+    from repro.core.api import B1, CR1, CR2, CR3
+    sig = caiso_2021(24)
+    coord = FleetCoordinator([], sig, policy="cr2", cap_frac=0.8)
+    assert coord._policy_obj() == CR2(cap_frac=0.8, outer=4)
+    assert FleetCoordinator([], sig, policy="cr3")._policy_obj() \
+        == CR3(outer=4)
+    assert FleetCoordinator([], sig, policy="b1")._policy_obj() == B1()
+    assert FleetCoordinator([], sig, policy="nope", lam=1.3)._policy_obj() \
+        == CR1(lam=1.3)
+    assert FleetCoordinator([], sig, policy=CR1(lam=1.2))._policy_obj() \
+        == CR1(lam=1.2)
+
+
 def test_power_model_roundtrip():
     m = JobPowerModel("x", chips=256, t_compute_s=0.4, t_step_s=0.5,
                       chip=ChipPower())

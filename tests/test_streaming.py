@@ -6,9 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.api import CR1, CR2, SolveContext, solve
 from repro.core.carbon import ForecastStream, caiso_2021
 from repro.core.engine import EngineConfig, EngineState, al_minimize
-from repro.core.fleet_solver import solve_cr1_fleet, synthetic_fleet
+from repro.core.fleet_solver import synthetic_fleet
 from repro.core.streaming import RollingHorizonSolver
 
 
@@ -140,13 +141,13 @@ def test_warm_resolve_matches_cold_on_shifted_horizon():
     must reach the cold solve's CR1 objective (pp units) to 0.1 pp."""
     lam = 1.45
     p = synthetic_fleet(8)
-    prev = solve_cr1_fleet(p, lam=lam, steps=600)
+    prev = solve(p, CR1(lam=lam), ctx=SolveContext(steps=600))
     shifted = dataclasses.replace(
         p, mci=np.roll(p.mci, -1), usage=np.roll(p.usage, -1, axis=1),
         jobs=np.roll(p.jobs, -1, axis=1))
-    warm = solve_cr1_fleet(shifted, lam=lam, steps=150,
-                           warm=prev.state.shifted(1))
-    cold = solve_cr1_fleet(shifted, lam=lam, steps=600)
+    warm = solve(shifted, CR1(lam=lam),
+                 ctx=SolveContext(steps=150, warm=prev.state.shifted(1)))
+    cold = solve(shifted, CR1(lam=lam), ctx=SolveContext(steps=600))
 
     def obj(r):
         return lam * r.total_penalty_pct - r.carbon_reduction_pct
@@ -188,11 +189,29 @@ def test_rolling_horizon_validates_inputs():
     with pytest.raises(ValueError):
         RollingHorizonSolver(p, stream)          # horizon mismatch
     stream48 = ForecastStream.caiso(n_ticks=2, horizon=p.T)
-    with pytest.raises(ValueError):
+    # unknown policy names fail at construction, naming the registry's
+    # choices — not as an opaque failure at the first step()
+    with pytest.raises(ValueError,
+                       match="registered policies.*cr1.*cr2.*cr3"):
         RollingHorizonSolver(p, stream48, policy="cr9")
+    with pytest.raises(TypeError, match="DRPolicy"):
+        RollingHorizonSolver(p, stream48, policy=1.45)
     rhs = RollingHorizonSolver(p, stream48, cold_steps=50, warm_steps=20)
     with pytest.raises(RuntimeError):
         rhs.report()                             # nothing committed yet
+
+
+def test_rolling_horizon_accepts_policy_objects():
+    """A DRPolicy object IS the configuration: string names resolve to the
+    equivalent object via the registry + legacy knobs."""
+    p = synthetic_fleet(2)
+    stream = ForecastStream.caiso(n_ticks=2, horizon=p.T)
+    by_name = RollingHorizonSolver(p, stream, policy="cr2", cap_frac=0.8,
+                                   outer=2)
+    assert by_name.policy == CR2(cap_frac=0.8, outer=2)
+    by_obj = RollingHorizonSolver(p, stream, policy=CR2(cap_frac=0.8,
+                                                        outer=2))
+    assert by_obj.policy == by_name.policy
 
 
 @pytest.mark.slow
