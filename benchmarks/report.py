@@ -1,6 +1,9 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from var/dryrun.json.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from var/dryrun.json,
+or the benchmark-trajectory table from the machine-readable
+``var/BENCH_<name>.json`` records `benchmarks.run` writes.
 
   PYTHONPATH=src python -m benchmarks.report [--json var/dryrun.json]
+  PYTHONPATH=src python -m benchmarks.report --bench [--var var]
 """
 from __future__ import annotations
 
@@ -99,10 +102,45 @@ def render(records: list[dict]) -> str:
     return "\n".join(out)
 
 
+def render_bench(var: pathlib.Path) -> str:
+    """Markdown table over every var/BENCH_*.json record (the cross-PR
+    perf-trajectory view; rows keep the derived CSV column verbatim)."""
+    paths = sorted(var.glob("BENCH_*.json"))
+    if not paths:
+        return (f"no BENCH_*.json under {var}/ — run "
+                "`python -m benchmarks.run` first")
+    out = ["### Benchmark records (machine-readable trajectory)\n",
+           "| benchmark | status | row | us/call | derived |",
+           "|---|---|---|---|---|"]
+    for path in paths:
+        try:
+            r = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            out.append(f"| {path.stem.removeprefix('BENCH_')} | "
+                       f"unreadable ({type(e).__name__}) | | | |")
+            continue
+        if r.get("status") != "ok" or not r.get("rows"):
+            out.append(f"| {r.get('benchmark', path.stem)} | "
+                       f"{r.get('status', '?')} | | | |")
+            continue
+        for rr in r["rows"]:
+            out.append(f"| {r['benchmark']} | ok | {rr['name']} | "
+                       f"{rr['us_per_call']:.0f} | {rr['derived']} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="var/dryrun.json")
+    ap.add_argument("--bench", action="store_true",
+                    help="render var/BENCH_*.json records instead of the "
+                         "dry-run tables")
+    ap.add_argument("--var", default="var",
+                    help="directory holding BENCH_*.json (with --bench)")
     args = ap.parse_args()
+    if args.bench:
+        print(render_bench(pathlib.Path(args.var)))
+        return
     records = json.loads(pathlib.Path(args.json).read_text())
     print(render(records))
 

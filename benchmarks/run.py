@@ -1,21 +1,85 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (stdout). Usage:
-  PYTHONPATH=src python -m benchmarks.run [--only fig8]
+Prints ``name,us_per_call,derived`` CSV (stdout) and, per benchmark,
+writes a machine-readable ``var/BENCH_<name>.json`` record (wall times,
+problem sizes and objective/parity numbers parsed from the CSV rows,
+plus host metadata) so the performance trajectory is tracked across PRs
+— diff two checkouts' ``var/BENCH_*.json`` instead of eyeballing
+stdout. Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig8] [--no-json]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
+import time
 import traceback
+
+#: value with an optional unit suffix the benchmarks emit (%, x, pp, ms,
+#: us, s, ...): group 1 is the numeric part.
+_NUM = re.compile(r"^(-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)([a-zA-Z%/]{0,3})$")
+
+
+def _parse_rows(rows) -> list[dict]:
+    """CSV rows `name,us_per_call,derived` -> JSON records. The derived
+    column's `key=value` tokens (objective, parity, speedup, latencies,
+    problem sizes) are lifted into a dict — numeric wherever the value is
+    a number with at most a short unit suffix — so trajectories diff
+    structurally."""
+    out = []
+    for line in rows or []:
+        name, us, derived = str(line).split(",", 2)
+        numbers = {}
+        for tok in derived.replace(";", " ").split():
+            if "=" in tok:
+                k, v = tok.split("=", 1)
+                m = _NUM.match(v)
+                numbers[k] = float(m.group(1)) if m else v
+        out.append({"name": name, "us_per_call": float(us),
+                    "derived": derived, "numbers": numbers})
+    return out
+
+
+def _write_json(bench: str, status: str, rows, elapsed_s: float) -> None:
+    import os
+    import tempfile
+
+    import jax
+
+    from benchmarks.common import VAR
+    VAR.mkdir(exist_ok=True)
+    record = {
+        "benchmark": bench,
+        "status": status,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": _parse_rows(rows),
+        "host": {
+            "platform": jax.default_backend(),
+            "n_devices": len(jax.devices()),
+            "jax": jax.__version__,
+        },
+        "unix_time": int(time.time()),
+    }
+    # temp-file + os.replace (the fleetcache pattern): an interrupted run
+    # must never leave a truncated record for report.py --bench to choke on
+    fd, tmp = tempfile.mkstemp(dir=VAR, prefix=f"BENCH_{bench}.",
+                               suffix=".tmp")
+    with os.fdopen(fd, "w") as f:
+        f.write(json.dumps(record, indent=1))
+    os.replace(tmp, VAR / f"BENCH_{bench}.json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing var/BENCH_<name>.json records")
     args = ap.parse_args()
 
-    from benchmarks import paper_figs, perf_micro
+    from benchmarks import paper_figs, perf_micro, scenario_ensemble
     benches = [
         ("fig1_carbon_series", paper_figs.fig1_carbon_series),
         ("table5_lasso", paper_figs.table5_lasso),
@@ -29,6 +93,7 @@ def main() -> None:
         ("fleet_cr3_scale", perf_micro.fleet_cr3_scale),
         ("fleet_shard_scale", perf_micro.fleet_shard_scale),
         ("streaming_resolve", perf_micro.streaming_resolve),
+        ("scenario_ensemble", scenario_ensemble.scenario_ensemble),
         ("kernel_micro", perf_micro.kernel_micro),
         ("train_throughput", perf_micro.train_throughput),
     ]
@@ -37,12 +102,23 @@ def main() -> None:
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
+        t0 = time.perf_counter()
         try:
-            fn()
+            rows = fn()
+            status = "ok"
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
             print(f"{name},0,FAILED", flush=True)
+            rows, status = [], "failed"
+        if not args.no_json:
+            # a JSON-record failure (read-only var/, disk full) must not
+            # fail a benchmark that ran, nor abort the remaining ones
+            try:
+                _write_json(name, status, rows, time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 — reporting side-channel
+                print(f"# BENCH_{name}.json not written: {e}",
+                      file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

@@ -1,0 +1,84 @@
+"""Scenario-ensemble scale benchmark: batched vs sequential evaluation.
+
+The ensemble runner (`repro.core.ensemble.evaluate_ensemble`) solves S
+scenarios as ONE vmapped XLA call; the alternative is a Python loop of S
+`api.solve` calls. This measures both at S ∈ {16, 64, 256} × W=512 for
+CR1 (+ one CR2 row), reporting per-scenario latency, the speedup, and
+the batched-vs-loop parity in percentage points.
+
+CPU caveat: the batched win on CPU comes from fusing S small (W, T) ops
+into (S, W, T) ops plus dropping S-1 dispatch/host-sync round-trips —
+measured ≈2-3x on the 2-core CI box. The structural property that
+transfers to TPU/many-core is ONE dispatch for the whole ensemble with
+MXU-shaped batched operands (where the ≥5x target of the ISSUE-5
+acceptance applies); the loop column here is measured fully at S ≤ 64
+and extrapolated (marked `est`) at S=256 to keep the benchmark under
+control.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+
+def scenario_ensemble() -> list[str]:
+    from repro.core.api import CR1, CR2, SolveContext
+    from repro.core.ensemble import evaluate_ensemble
+    from repro.core.fleet_solver import synthetic_fleet
+    from repro.core.scenario import (CambiumMix, DuckPerturb,
+                                     resolve_scenarios)
+
+    rows = []
+    W, steps = 512, 60
+    p = synthetic_fleet(W)
+    cr1 = CR1(lam=1.45)
+    ctx = SolveContext(steps=steps)
+    from repro.core.api import solve
+    solve(p, cr1, ctx=ctx)    # warm the loop lane's trace (fair timing)
+    loop_per_scn = None
+    for S in (16, 64, 256):
+        stack = resolve_scenarios(
+            [DuckPerturb(n_scenarios=S - S // 2, seed=0),
+             CambiumMix(n_scenarios=S // 2, seed=1)], p)
+        evaluate_ensemble(p, cr1, stack, ctx=ctx)          # compile
+        us_b = timeit(lambda: evaluate_ensemble(p, cr1, stack, ctx=ctx),
+                      repeats=2, warmup=0)
+        if S <= 64:
+            t0 = time.perf_counter()
+            r_loop = evaluate_ensemble(p, cr1, stack, ctx=ctx,
+                                       batched=False)
+            us_l = (time.perf_counter() - t0) * 1e6
+            loop_per_scn = us_l / S
+            r_b = evaluate_ensemble(p, cr1, stack, ctx=ctx)
+            parity = float(np.abs(r_b.carbon_reduction_pct
+                                  - r_loop.carbon_reduction_pct).max())
+            loop_note = f"loop={us_l / 1e3:.0f}ms parity={parity:.2e}pp"
+        else:
+            us_l = loop_per_scn * S
+            loop_note = f"loop~{us_l / 1e3:.0f}ms(est)"
+        rows.append(row(
+            f"scenario_ensemble_S{S}_W{W}", us_b,
+            f"batched={us_b / 1e3:.0f}ms ({us_b / S / 1e3:.1f}ms/scn) "
+            f"{loop_note} speedup={us_l / max(us_b, 1e-9):.2f}x "
+            f"one-XLA-call"))
+    # CR2 (equality-constrained family) coverage + risk-report latency
+    S = 16
+    stack = DuckPerturb(n_scenarios=S, seed=2).generate(p)
+    cr2 = CR2(cap_frac=0.8, outer=2)
+    ctx2 = SolveContext(steps=50)
+    evaluate_ensemble(p, cr2, stack, ctx=ctx2)             # compile
+    us_b = timeit(lambda: evaluate_ensemble(p, cr2, stack, ctx=ctx2),
+                  repeats=1, warmup=0)
+    res = evaluate_ensemble(p, cr2, stack, ctx=ctx2)
+    us_rep = timeit(lambda: res.report(), repeats=3)
+    rep = res.report()
+    rows.append(row(
+        f"scenario_ensemble_cr2_S{S}_W{W}", us_b,
+        f"{us_b / S / 1e3:.1f}ms/scn report={us_rep / 1e3:.1f}ms "
+        f"carbon_p50={rep.carbon_quantiles['p50']:.2f}% "
+        f"cvar25={rep.carbon_cvar:.2f}% "
+        f"slo_prob={rep.slo_violation_prob:.2f}"))
+    return rows

@@ -1,20 +1,23 @@
 """Quickstart: build the paper's four-service fleet, fit penalty models,
 and run Carbon Responder through the unified policy API
 (`repro.core.api`): policies are values (`CR1(lam=...)`, `CR3(...)`),
-`solve()` is the single entry point, and `sweep()` runs a whole
-hyperparameter grid as one vmapped XLA call.
+`solve()` is the single entry point, `sweep()` runs a whole
+hyperparameter grid as one vmapped XLA call, and `ensemble()` evaluates
+a policy across a stack of Monte Carlo grid scenarios the same way
+(the "Scenario ensembles & risk" section at the end).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import CR1, CR3, SolveContext, solve, sweep
+from repro.core.api import CR1, CR3, SolveContext, ensemble, solve, sweep
 from repro.core.carbon import caiso_2021
 from repro.core.fleet_solver import FleetProblem, fleet_penalties
 from repro.core.fleetcache import cached_paper_fleet
 from repro.core.metrics import capacity_scaled_entropy
 from repro.core.policies import DRProblem
+from repro.core.scenario import DuckPerturb, RenewableDrought
 
 
 def main() -> None:
@@ -74,6 +77,26 @@ def main() -> None:
           f"penalty {r3.total_penalty_pct:.2f}%  "
           f"clearing ρ={r3.extras['rho']:.4f}  "
           f"balanced={r3.extras['balanced']}")
+
+    # Scenario ensembles & risk: stress the policy across Monte Carlo
+    # grid futures (duck-curve jitter, renewable droughts, Cambium
+    # projections — repro.core.scenario) in ONE batched XLA call, then
+    # read the risk layer: quantiles, CVaR tail risk, fairness
+    # dispersion, SLO-violation probability. See
+    # examples/scenario_risk.py for the full report.
+    print("\nscenario ensemble — ensemble(problem, CR1(...), generators):")
+    res = ensemble(
+        problem, CR1(lam=1.45),
+        [DuckPerturb(n_scenarios=4), RenewableDrought(n_scenarios=2)],
+        ctx=SolveContext(steps=300))
+    rep = res.report()
+    print(f"  {res.S} scenarios, one batched solve: carbon p50="
+          f"{rep.carbon_quantiles['p50']:.2f}% "
+          f"[p5={rep.carbon_quantiles['p5']:.2f}], "
+          f"CVaR25={rep.carbon_cvar:.2f}%")
+    print(f"  fairness (Jain) p50={rep.jain_quantiles['p50']:.2f}, "
+          f"SLO breach in {100 * rep.slo_violation_prob:.0f}% "
+          f"of scenarios")
 
 
 if __name__ == "__main__":

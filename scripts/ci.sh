@@ -43,6 +43,34 @@ if [[ $# -eq 0 ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python examples/streaming_dr.py --ticks 2 > /dev/null
 
+  echo "== ensemble smoke (S=4 x W=16 x 2 policies + risk example) =="
+  # The scenario-ensemble subsystem end-to-end: batched CR1 + CR2 over a
+  # mixed MCI/fleet scenario stack, with the batched-vs-loop parity
+  # contract asserted, plus the risk-report example.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import numpy as np
+from repro.core.api import CR1, CR2, SolveContext
+from repro.core.ensemble import evaluate_ensemble
+from repro.core.fleet_solver import synthetic_fleet
+from repro.core.scenario import DuckPerturb, FleetJitter, resolve_scenarios
+
+p = synthetic_fleet(16)
+stack = resolve_scenarios([DuckPerturb(n_scenarios=2, seed=0),
+                           FleetJitter(n_scenarios=2, seed=1)], p)
+ctx = SolveContext(steps=80)
+for pol in (CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)):
+    got = evaluate_ensemble(p, pol, stack, ctx=ctx)
+    ref = evaluate_ensemble(p, pol, stack, ctx=ctx, batched=False)
+    assert got.batched and got.D.shape == (4, 16, 48)
+    gap = np.abs(got.carbon_reduction_pct - ref.carbon_reduction_pct).max()
+    assert gap < 0.01, f"{pol.name} ensemble parity gap {gap}"
+    got.report().lines()
+print("ensemble smoke OK")
+PY
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/scenario_risk.py --scenarios 4 --workloads 8 \
+    --steps 120 > /dev/null
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -41,6 +41,14 @@ policies — Efficient (CR1), Fair-Centralized (CR2), Fair-Decentralized
     streaming controller) resolve to policy objects in one place, and
     `solve(p, "cr1")` works for quick default-hyper runs.
 
+  * `ensemble(problem, policy, scenarios, ctx=...)` evaluates one
+    policy across S Monte Carlo grid/fleet scenarios
+    (`repro.core.scenario`) the same way `sweep` runs a policy grid:
+    CR1/CR2 ride ONE vmapped XLA call over the scenario axis (nesting
+    inside the W-axis shard_map under `ctx.mesh`), and the result's
+    `.report()` distills quantile/CVaR/fairness risk
+    (`repro.core.ensemble`).
+
 Sharding contract, padding semantics, and the donated streaming tick are
 documented on `repro.core.fleet_solver` (data model) and
 `repro.core.engine` (loop); the policy backends here only assemble those
@@ -73,8 +81,8 @@ from repro.launch.mesh import fleet_axis
 Array = jax.Array
 
 __all__ = ["B1", "B3", "CR1", "CR2", "CR3", "DRPolicy", "POLICY_REGISTRY",
-           "SolveContext", "configured_policy", "resolve_policy", "solve",
-           "sweep"]
+           "SolveContext", "configured_policy", "ensemble",
+           "resolve_policy", "solve", "sweep"]
 
 
 # ---------------------------------------------------------------------------
@@ -232,6 +240,24 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
             ctx = dataclasses.replace(ctx, donate=False)
         return [pl.solve(problem, ctx) for pl in pols]
     return fam._sweep_family(problem, pols, ctx)
+
+
+def ensemble(problem: FleetProblem, policy, scenarios, *,
+             ctx: SolveContext | None = None, batched: bool | None = None):
+    """Evaluate `policy` across S Monte Carlo scenarios of `problem`.
+
+    The scenario-ensemble entry point: `scenarios` is a
+    `repro.core.scenario.ScenarioStack`, a scenario generator (or
+    `SCENARIO_REGISTRY` name), or a sequence of those. CR1/CR2 solve all
+    S scenarios as ONE vmapped XLA call (nested inside the W-axis
+    shard_map when `ctx.mesh` is set); other policies loop over
+    `solve()`. Returns `repro.core.ensemble.EnsembleResult`; call
+    `.report()` for the quantile/CVaR/fairness risk summary. Thin
+    delegate to `repro.core.ensemble.evaluate_ensemble` (kept lazy —
+    the ensemble layer imports this module)."""
+    from repro.core.ensemble import evaluate_ensemble
+    return evaluate_ensemble(problem, policy, scenarios, ctx=ctx,
+                             batched=batched)
 
 
 # ---------------------------------------------------------------------------

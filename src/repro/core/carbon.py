@@ -21,6 +21,7 @@ replayed snapshots) — the input signal of the rolling-horizon solver in
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Sequence
 
 import numpy as np
@@ -61,7 +62,8 @@ class CarbonSignal:
 
 def _duck_curve(hours: int, peak: float, trough_frac: float,
                 solar_center: float = 13.0, solar_width: float = 4.5,
-                evening_bump: float = 0.18, seed: int = 0,
+                evening_bump: float = 0.18,
+                seed: int | tuple[int, ...] = 0,
                 noise: float = 0.02) -> np.ndarray:
     """Synthesize a duck-curve MCI: solar depresses midday marginal intensity,
     evening ramp brings gas peakers to the margin."""
@@ -92,11 +94,20 @@ def projection(year: int, state: str = "CA", hours: int = 48,
 
     Per-state variation: solar-heavy states get deeper troughs (some reach
     zero MCI by 2050, per the AEO-2023 analysis cited in the paper).
+
+    Deterministic per (seed, year, state): the rng is tuple-seeded
+    `default_rng((seed, year, state_idx))` — additive `seed + idx` seeding
+    collided distinct (seed, state) pairs (e.g. seed=8/"NY" and
+    seed=1/"MA") onto one stream, so scenario sweeps over states silently
+    reused noise realizations. States outside `STATES` hash with crc32
+    (stable across processes, unlike `hash()`) into an index range
+    disjoint from the listed states'.
     """
     if year not in (2024, 2050):
         raise ValueError(f"unsupported projection year {year}")
-    idx = STATES.index(state) if state in STATES else (hash(state) % 20)
-    rng = np.random.default_rng(seed + idx)
+    idx = STATES.index(state) if state in STATES \
+        else len(STATES) + zlib.crc32(state.encode("utf-8"))
+    rng = np.random.default_rng((seed, year, idx))
     # State-specific solar penetration in [0, 1]; CA/AZ/NV/NM highest.
     solar_rank = {"CA": .95, "AZ": .92, "NV": .9, "NM": .88, "TX": .8,
                   "UT": .75, "CO": .7, "FL": .68, "GA": .55, "NC": .5}
@@ -107,8 +118,56 @@ def projection(year: int, state: str = "CA", hours: int = 48,
     else:
         trough = max(0.0, 1.0 - (1.0 - PROJ_2050_TROUGH_FRAC) * pen * 1.55)
         peak = CAISO_2021_PEAK * 0.85
-    mci = _duck_curve(hours, peak, trough, solar_width=5.0, seed=seed + idx)
+    mci = _duck_curve(hours, peak, trough, solar_width=5.0,
+                      seed=(seed, year, idx, 1))
     return CarbonSignal(mci=mci, label=f"cambium-{year}-{state}-synthetic")
+
+
+# ---------------------------------------------------------------------------
+# Grid-event hooks (scenario-ensemble building blocks, `repro.core.scenario`)
+#
+# Deterministic transforms of an hourly MCI series, each modelling one grid
+# event the paper's single CAISO-2021 trace cannot express. Scenario
+# generators randomize the event parameters (tuple-seeded rngs) and stack S
+# transformed series for the vmapped ensemble runner.
+# ---------------------------------------------------------------------------
+def apply_drought(mci: np.ndarray, day: int, n_days: int = 1,
+                  severity: float = 0.7, day_hours: int = 24) -> np.ndarray:
+    """Renewable-drought days: fill the midday solar trough back in.
+
+    For `n_days` days starting at `day`, each hour's MCI is lifted toward
+    that day's running peak by `severity` (1.0 = no solar at all, the
+    trough disappears; 0.0 = no event). Models multi-day wind/solar
+    droughts ("dunkelflaute") where gas stays at the margin all day.
+    """
+    out = np.asarray(mci, float).copy()
+    for d in range(day, min(day + n_days, -(-out.shape[0] // day_hours))):
+        sl = slice(d * day_hours, min((d + 1) * day_hours, out.shape[0]))
+        peak = out[sl].max()
+        out[sl] = out[sl] + severity * (peak - out[sl])
+    return out
+
+
+def apply_evening_spike(mci: np.ndarray, hour: int, magnitude: float = 1.4,
+                        width: float = 2.0) -> np.ndarray:
+    """Evening-ramp spike: multiply MCI by a gaussian bump centred at
+    `hour` (absolute hour index), peaking at `magnitude`. Models a steeper
+    ramp than forecast — peakers brought online hard."""
+    t = np.arange(np.asarray(mci).shape[0], dtype=float)
+    bump = 1.0 + (magnitude - 1.0) * np.exp(
+        -0.5 * ((t - hour) / max(width, 1e-6)) ** 2)
+    return np.asarray(mci, float) * bump
+
+
+def apply_zero_window(mci: np.ndarray, start: int, length: int,
+                      ) -> np.ndarray:
+    """Zero-MCI window: clamp hours [start, start+length) to zero marginal
+    intensity — curtailed renewables on the margin (the 2050
+    deep-decarbonization grids of Fig. 11 reach this today in CAISO
+    spring)."""
+    out = np.asarray(mci, float).copy()
+    out[max(start, 0):max(start, 0) + max(length, 0)] = 0.0
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,677 @@
+"""Batched scenario-ensemble evaluation and risk reports.
+
+`repro.core.scenario` materializes S grid/fleet scenarios as a
+`ScenarioStack` — per-field overlays with a leading S axis. This module
+evaluates a `DRPolicy` across the whole stack:
+
+  * `evaluate_ensemble(problem, policy, scenarios, ctx=...)` — the entry
+    point (also exposed as `repro.core.api.ensemble`). For the engine
+    policy families whose solve is a single XLA call (CR1/CR2), the S
+    axis rides `jax.vmap` through the same `_cr{1,2}_impl` backends
+    `api.solve` jits — ONE batched XLA call for the whole ensemble, no
+    Python loop over scenarios. With `ctx.mesh`, the scenario vmap nests
+    *inside* the W-axis shard_map exactly like `api.sweep`'s policy-grid
+    vmap does, so fleet-scale ensembles run sharded too. Every other
+    policy (CR3's host-side clearing loop, closed-form baselines, warm/
+    donated contexts) falls back to an equivalent sequential loop of
+    `api.solve` over the materialized scenarios — `evaluate_ensemble` is
+    always safe to call.
+
+  * `run_streaming_ensemble(problem, policy, streams, ...)` — the
+    rolling-horizon variant: S independent `ForecastStream`s (e.g. from
+    `scenario.ForecastRegime.streams`) drive one batched controller.
+    Each tick stacks the S revised forecasts, warm-starts every
+    scenario's lane from its own previous `EngineState` (shift + mu
+    reset folded into the same batched call), and commits hour 0 per
+    scenario — S online controllers for the price of one batched
+    re-solve per tick.
+
+  * `EnsembleResult.report()` / `EnsembleReport` — the risk layer:
+    quantiles and CVaR of realized carbon reduction and fleet penalty,
+    per-workload penalty distributions and SLO-violation probabilities,
+    fairness dispersion per scenario (Jain index, max/min share ratio),
+    and `compare_policies` tables for benchmarks and examples.
+
+Parity contract (tested in tests/test_ensemble.py and the sharding
+suite): the batched lane matches the sequential `api.solve` loop to
+<0.01 pp on every scenario, single-device and on a device mesh — vmap
+reorders floating-point reductions, so bitwise equality is not promised,
+convergence-level equality is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.api import (CR1, CR2, SolveContext, _cr1_impl, _cr1_norms,
+                            _cr1_pieces, _cr2_cfg, _cr2_impl, _cr2_norms,
+                            _cr2_pieces, resolve_policy, solve)
+from repro.core.engine import EngineConfig, EngineState, al_minimize
+from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, PAD_FILLS,
+                                     FleetProblem, _fleet_specs, _jit_view,
+                                     cr2_reference_fleet, fleet_penalties,
+                                     pad_fleet, resolve_use_kernel)
+from repro.core.metrics import jain_index, max_min_ratio
+from repro.core.scenario import ScenarioStack, resolve_scenarios
+from repro.launch.mesh import fleet_axis
+
+__all__ = ["EnsembleReport", "EnsembleResult", "compare_policies",
+           "comparison_table", "evaluate_ensemble",
+           "run_streaming_ensemble", "StreamingEnsembleReport"]
+
+# ---------------------------------------------------------------------------
+# Batched engine lanes (CR1/CR2): vmap over the scenario axis
+# ---------------------------------------------------------------------------
+def _overlay_args(stack: ScenarioStack) -> tuple[tuple[str, ...], tuple]:
+    over = stack.overlay_fields()
+    keys = tuple(over)
+    return keys, tuple(jnp.asarray(over[k]) for k in keys)
+
+
+def _cold_states(S: int, shape: tuple[int, int], n_eq: int = 0,
+                 n_in: int = 0, mu0: float = EngineConfig.mu0) -> EngineState:
+    """S stacked cold EngineStates (leading S axis on every leaf)."""
+    return EngineState(x=jnp.zeros((S,) + shape),
+                       lam_eq=jnp.zeros((S, n_eq)),
+                       lam_in=jnp.zeros((S, n_in)),
+                       mu=jnp.full((S,), mu0))
+
+
+_ENS1_STATIC = ("keys", "steps", "use_kernel", "shift", "reset_mu")
+
+
+@functools.partial(jax.jit, static_argnames=_ENS1_STATIC)
+def _cr1_ens_run(p: FleetProblem, vals, keys, lam, states: EngineState,
+                 steps: int, use_kernel: bool, shift: int, reset_mu: bool):
+    """All S scenario solves as one vmapped call through the same
+    `_cr1_impl` backend `api.solve` jits — warm/cold/streaming alike."""
+    def one(vals_s, st):
+        ps = dataclasses.replace(p, **dict(zip(keys, vals_s)))
+        return _cr1_impl(ps, lam, st, steps, use_kernel, shift, reset_mu)
+
+    return jax.vmap(one)(vals, states)
+
+
+_ENS2_STATIC = ("keys", "steps", "outer", "use_kernel", "shift", "reset_mu")
+
+
+@functools.partial(jax.jit, static_argnames=_ENS2_STATIC)
+def _cr2_ens_run(p: FleetProblem, vals, keys, refs, states: EngineState,
+                 steps: int, outer: int, use_kernel: bool, shift: int,
+                 reset_mu: bool):
+    def one(vals_s, refs_s, st):
+        ps = dataclasses.replace(p, **dict(zip(keys, vals_s)))
+        return _cr2_impl(ps, refs_s, st, steps, outer, use_kernel, shift,
+                         reset_mu)
+
+    return jax.vmap(one)(vals, refs, states)
+
+
+def _overlay_specs(keys: tuple[str, ...], axis: str):
+    """shard_map specs for stacked overlays: per-workload fields sharded on
+    their W axis (dim 1, after the scenario axis), the MCI replicated."""
+    return tuple(P() if k == "mci" else P(None, axis) for k in keys)
+
+
+def _ens_state_specs(axis: str) -> EngineState:
+    return EngineState(x=P(None, axis), lam_eq=P(None, axis),
+                       lam_in=P(None, axis), mu=P())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("keys", "mesh", "steps", "use_kernel"))
+def _cr1_ens_sharded(p: FleetProblem, vals, keys, lam, norms,
+                     states: EngineState, mesh, steps: int,
+                     use_kernel: bool):
+    """The scenario axis vmapped INSIDE the W-axis shard_map (the
+    `api.sweep` sharded-grid pattern): every device solves its row block
+    for all S scenarios in one call. Per-scenario global normalizers come
+    from the TRUE fleets (computed outside, stacked, replicated)."""
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axis(mesh)
+
+    def body(pb, vals_b, norms_b, states_b):
+        def one(vals_s, norms_s, st):
+            ps = dataclasses.replace(pb, **dict(zip(keys, vals_s)))
+            objective, project, step_scale = _cr1_pieces(
+                ps, use_kernel, norms=norms_s)
+            D, aux = al_minimize(
+                objective, project, st.x, hyper=lam,
+                step_scale=step_scale, init=st,
+                cfg=EngineConfig(inner_steps=steps, outer_steps=1))
+            return D, fleet_penalties(ps, D, use_kernel), aux["state"]
+
+        return jax.vmap(one)(vals_b, norms_b, states_b)
+
+    specs = _ens_state_specs(axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), _overlay_specs(keys, axis),
+                  (P(), P(), P()), specs),
+        out_specs=(P(None, axis), P(None, axis), specs),
+    )(p, vals, norms, states)
+
+
+@functools.partial(jax.jit, static_argnames=("keys", "mesh", "steps",
+                                             "outer", "use_kernel"))
+def _cr2_ens_sharded(p: FleetProblem, vals, keys, refs, norms,
+                     states: EngineState, mesh, steps: int, outer: int,
+                     use_kernel: bool):
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axis(mesh)
+
+    def body(pb, vals_b, refs_b, norms_b, states_b):
+        def one(vals_s, refs_s, norms_s, st):
+            ps = dataclasses.replace(pb, **dict(zip(keys, vals_s)))
+            objective, eq, project, step_scale = _cr2_pieces(
+                ps, refs_s, use_kernel, norms=norms_s)
+            D, aux = al_minimize(
+                objective, project, st.x, eq_residual=eq,
+                step_scale=step_scale, init=st,
+                cfg=_cr2_cfg(steps, outer))
+            return D, fleet_penalties(ps, D, use_kernel), aux["state"]
+
+        return jax.vmap(one)(vals_b, refs_b, norms_b, states_b)
+
+    specs = _ens_state_specs(axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), _overlay_specs(keys, axis),
+                  P(None, axis), (P(), P(), P()), specs),
+        out_specs=(P(None, axis), P(None, axis), specs),
+    )(p, vals, refs, norms, states)
+
+
+def _pad_overlays(keys: tuple[str, ...], vals: tuple, W: int, W_pad: int):
+    """Pad stacked per-workload overlays with `pad_fleet`'s inert fills
+    (`fleet_solver.PAD_FILLS` — shared so the conventions cannot drift)."""
+    if W_pad == W:
+        return vals
+    out = []
+    for k, v in zip(keys, vals):
+        if k == "mci":
+            out.append(v)
+            continue
+        pad_shape = (v.shape[0], W_pad - W) + v.shape[2:]
+        out.append(jnp.concatenate(
+            [v, jnp.full(pad_shape, PAD_FILLS[k], v.dtype)], axis=1))
+    return tuple(out)
+
+
+def _cr2_refs(policy, p: FleetProblem, stack: ScenarioStack) -> list:
+    """Per-scenario CR2 fairness targets. The reference depends on
+    usage/entitlement/jobs (the capped penalty under an equal power cap)
+    but never on the MCI, so MCI-only ensembles — every streaming tick —
+    compute it once and share it across all S lanes."""
+    over = stack.overlay_fields()
+    if not {"usage", "entitlement", "jobs"} & set(over):
+        return [jnp.asarray(cr2_reference_fleet(p, policy.cap_frac))] \
+            * stack.S
+    return [jnp.asarray(cr2_reference_fleet(ps, policy.cap_frac))
+            for ps in stack.problems(p)]
+
+
+def _run_batched(policy, p: FleetProblem, stack: ScenarioStack, *,
+                 steps: int, use_kernel: bool, mesh=None,
+                 init: EngineState | None = None, shift: int = 0,
+                 reset_mu: bool = False):
+    """One batched XLA call solving all S scenarios under `policy`
+    (CR1/CR2). Returns (D (S, W, T) np, pens (S, W) np, states stacked).
+
+    `init` (stacked `EngineState`, e.g. the previous streaming tick's)
+    warm-starts every lane; `shift`/`reset_mu` fold the rolling-horizon
+    tick entry into the same call. The mesh lane is cold-only (the
+    streaming ensemble runs single-device)."""
+    S = stack.S
+    keys, vals = _overlay_args(stack)
+    if mesh is None:
+        pj = _jit_view(p)
+        if type(policy) is CR1:
+            if init is None:
+                init = _cold_states(S, p.usage.shape, mu0=CR1_MU0)
+            D, pens, states = _cr1_ens_run(
+                pj, vals, keys, policy.lam, init, steps=steps,
+                use_kernel=use_kernel, shift=shift, reset_mu=reset_mu)
+        else:
+            refs = jnp.stack(_cr2_refs(policy, p, stack))
+            if init is None:
+                init = _cold_states(S, p.usage.shape, n_eq=p.W,
+                                    mu0=CR2_MU0)
+            D, pens, states = _cr2_ens_run(
+                pj, vals, keys, refs, init, steps=steps,
+                outer=policy.outer, use_kernel=use_kernel, shift=shift,
+                reset_mu=reset_mu)
+        return np.asarray(D), np.asarray(pens), states
+    if init is not None or shift or reset_mu:
+        raise ValueError(
+            "the sharded ensemble lane is cold-only (no warm/shift/"
+            "reset_mu); run the streaming ensemble without a mesh")
+    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
+    vals_p = _pad_overlays(keys, vals, W, pp.W)
+    if type(policy) is CR1:
+        norms = [_cr1_norms(ps) for ps in stack.problems(p)]
+        norms_stack = tuple(jnp.stack([n[i] for n in norms])
+                            for i in range(3))
+        states = _cold_states(S, pp.usage.shape, mu0=CR1_MU0)
+        D, pens, states = _cr1_ens_sharded(
+            pp, vals_p, keys, policy.lam, norms_stack, states, mesh=mesh,
+            steps=steps, use_kernel=use_kernel)
+    else:
+        refs = _cr2_refs(policy, p, stack)
+        norms = [_cr2_norms(ps, r)
+                 for ps, r in zip(stack.problems(p), refs)]
+        norms_stack = tuple(jnp.stack([n[i] for n in norms])
+                            for i in range(3))
+        refs_p = jnp.stack([
+            jnp.concatenate([r, jnp.zeros(pp.W - W, r.dtype)])
+            for r in refs])
+        states = _cold_states(S, pp.usage.shape, n_eq=pp.W, mu0=CR2_MU0)
+        D, pens, states = _cr2_ens_sharded(
+            pp, vals_p, keys, refs_p, norms_stack, states, mesh=mesh,
+            steps=steps, outer=policy.outer, use_kernel=use_kernel)
+    return np.asarray(D)[:, :W], np.asarray(pens)[:, :W], states
+
+
+def _batched_capable(policy) -> bool:
+    return type(policy) in (CR1, CR2)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble results + the risk layer
+# ---------------------------------------------------------------------------
+def _quantiles(x: np.ndarray, qs: Sequence[float]) -> dict[str, float]:
+    return {f"p{int(q)}": float(np.percentile(x, q)) for q in qs}
+
+
+def _cvar(x: np.ndarray, alpha: float, worst: str) -> np.ndarray:
+    """Mean of the worst `alpha` tail — `worst='low'` for quantities where
+    small is bad (carbon reduction), `'high'` where large is bad
+    (penalty)."""
+    x = np.sort(np.asarray(x, float))
+    k = max(1, int(np.ceil(alpha * x.shape[0])))
+    tail = x[:k] if worst == "low" else x[-k:]
+    return float(tail.mean())
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleResult:
+    """Per-scenario outcomes of one policy across a scenario stack."""
+
+    policy: Any                          # the DRPolicy evaluated
+    labels: tuple[str, ...]              # scenario labels, length S
+    carbon_reduction_pct: np.ndarray     # (S,)
+    total_penalty_pct: np.ndarray        # (S,)
+    penalties: np.ndarray                # (S, W) raw per-workload penalties
+    entitlement: np.ndarray              # (S, W) per-scenario entitlements
+    preservation_violation: np.ndarray   # (S,)
+    D: np.ndarray                        # (S, W, T) adjustment plans
+    extras: tuple[dict, ...]             # per-scenario policy extras
+    batched: bool                        # one vmapped call vs solve() loop
+
+    @property
+    def S(self) -> int:
+        return int(self.carbon_reduction_pct.shape[0])
+
+    def penalty_shares(self) -> np.ndarray:
+        """(S, W) capacity-scaled penalty shares pen_i/E_i."""
+        return np.maximum(self.penalties, 0.0) / self.entitlement
+
+    def report(self, *, slo_frac: float = 0.05, cvar_alpha: float = 0.25,
+               quantiles: Sequence[float] = (5, 25, 50, 75, 95),
+               ) -> "EnsembleReport":
+        """Distill the ensemble into risk metrics (see `EnsembleReport`)."""
+        # p5/p50/p95 are always computed — `lines()`/`comparison_table`
+        # render them regardless of the caller's quantile choice.
+        quantiles = sorted({*quantiles, 5, 50, 95})
+        car = self.carbon_reduction_pct
+        pen = self.total_penalty_pct
+        shares = self.penalty_shares()
+        jain = jain_index(self.penalties, self.entitlement, axis=-1)
+        mm = max_min_ratio(self.penalties, self.entitlement, axis=-1)
+        viol = shares > slo_frac                   # (S, W)
+        k = max(1, int(np.ceil(cvar_alpha * self.S)))
+        worst = tuple(self.labels[i] for i in np.argsort(car)[:k])
+        return EnsembleReport(
+            policy=getattr(self.policy, "name", str(self.policy)),
+            n_scenarios=self.S,
+            carbon_quantiles=_quantiles(car, quantiles),
+            carbon_mean=float(car.mean()),
+            carbon_cvar=_cvar(car, cvar_alpha, "low"),
+            penalty_quantiles=_quantiles(pen, quantiles),
+            penalty_mean=float(pen.mean()),
+            penalty_cvar=_cvar(pen, cvar_alpha, "high"),
+            jain_quantiles=_quantiles(jain, quantiles),
+            jain_min=float(jain.min()),
+            maxmin_median=float(np.median(mm)),
+            slo_frac=slo_frac, cvar_alpha=cvar_alpha,
+            slo_violation_prob=float(viol.any(axis=1).mean()),
+            workload_slo_prob=viol.mean(axis=0),
+            workload_penalty_p95=np.percentile(shares, 95, axis=0),
+            worst_scenarios=worst)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleReport:
+    """Risk summary of a policy over S scenarios.
+
+    CVaR_α is the expected outcome over the worst α-fraction of
+    scenarios — lowest carbon reductions, highest penalties — the
+    number an operator signs off on, not the median. SLO violation:
+    a workload breaches when its capacity-scaled penalty share
+    pen_i/E_i exceeds `slo_frac`; `slo_violation_prob` is the fraction
+    of scenarios where ANY workload breaches."""
+
+    policy: str
+    n_scenarios: int
+    carbon_quantiles: dict[str, float]   # carbon reduction, % of baseline
+    carbon_mean: float
+    carbon_cvar: float
+    penalty_quantiles: dict[str, float]  # fleet penalty, % of entitlement
+    penalty_mean: float
+    penalty_cvar: float
+    jain_quantiles: dict[str, float]     # fairness dispersion per scenario
+    jain_min: float
+    maxmin_median: float                 # median max/min share ratio
+    slo_frac: float
+    cvar_alpha: float
+    slo_violation_prob: float
+    workload_slo_prob: np.ndarray        # (W,) per-workload breach prob
+    workload_penalty_p95: np.ndarray     # (W,) p95 penalty share
+    worst_scenarios: tuple[str, ...]     # labels of the CVaR tail
+
+    def lines(self) -> list[str]:
+        cq, pq, jq = (self.carbon_quantiles, self.penalty_quantiles,
+                      self.jain_quantiles)
+        a = int(100 * self.cvar_alpha)
+        return [
+            f"policy {self.policy} over {self.n_scenarios} scenarios:",
+            f"  carbon reduction : p50={cq['p50']:.2f}%  "
+            f"[p5={cq['p5']:.2f}, p95={cq['p95']:.2f}]  "
+            f"CVaR{a}={self.carbon_cvar:.2f}%",
+            f"  fleet penalty    : p50={pq['p50']:.2f}%  "
+            f"[p5={pq['p5']:.2f}, p95={pq['p95']:.2f}]  "
+            f"CVaR{a}={self.penalty_cvar:.2f}%",
+            f"  fairness (Jain)  : p50={jq['p50']:.3f}  "
+            f"min={self.jain_min:.3f}  "
+            f"max/min share p50="
+            + (f"{self.maxmin_median:.1f}x" if self.maxmin_median < 9999.5
+               else ">=10000x (saturated: some workload pays ~nothing)"),
+            f"  SLO (> {100 * self.slo_frac:.0f}% of E_i) breach prob: "
+            f"{100 * self.slo_violation_prob:.0f}% of scenarios",
+            f"  worst scenarios  : {', '.join(self.worst_scenarios[:3])}",
+        ]
+
+    def as_dict(self) -> dict:
+        """JSON-ready record (benchmark trajectory files)."""
+        d = dataclasses.asdict(self)
+        d["workload_slo_prob"] = np.asarray(
+            self.workload_slo_prob).tolist()
+        d["workload_penalty_p95"] = np.asarray(
+            self.workload_penalty_p95).tolist()
+        d["worst_scenarios"] = list(self.worst_scenarios)
+        return d
+
+
+def _stack_arrays(base: FleetProblem, stack: ScenarioStack):
+    """Per-scenario (mci, usage, entitlement) with the S axis broadcast
+    from the base where not overlaid."""
+    S = stack.S
+    mci = stack.mci if stack.mci is not None else np.broadcast_to(
+        np.asarray(base.mci, float), (S, base.T))
+    usage = stack.usage if stack.usage is not None else np.broadcast_to(
+        np.asarray(base.usage, float), (S, base.W, base.T))
+    ent = stack.entitlement if stack.entitlement is not None else \
+        np.broadcast_to(np.asarray(base.entitlement, float), (S, base.W))
+    return np.asarray(mci, float), np.asarray(usage, float), \
+        np.asarray(ent, float)
+
+
+def _result_from_stacks(base: FleetProblem, stack: ScenarioStack, policy,
+                        D: np.ndarray, pens: np.ndarray, batched: bool,
+                        ) -> EnsembleResult:
+    """Vectorized `fleet_solver._report` over the scenario axis."""
+    mci, usage, ent = _stack_arrays(base, stack)
+    carbon_base = (usage.sum(axis=1) * mci).sum(axis=1)          # (S,)
+    car = np.einsum("swt,st->s", D, mci)
+    n_days = max(1, base.T // base.day_hours)
+    span = n_days * base.day_hours
+    sums = D[:, :, :span].reshape(D.shape[0], base.W, n_days,
+                                  base.day_hours).sum(-1)
+    is_batch = np.asarray(base.is_batch, bool)
+    viol = np.abs(sums[:, is_batch]).max(axis=(1, 2)) if is_batch.any() \
+        else np.zeros(D.shape[0])
+    labels = tuple(stack.label(s) for s in range(stack.S))
+    return EnsembleResult(
+        policy=policy, labels=labels,
+        carbon_reduction_pct=100 * car / carbon_base,
+        total_penalty_pct=100 * pens.sum(axis=1) / ent.sum(axis=1),
+        penalties=pens, entitlement=ent, preservation_violation=viol,
+        D=D, extras=tuple({} for _ in range(stack.S)), batched=batched)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def evaluate_ensemble(problem: FleetProblem, policy, scenarios, *,
+                      ctx: SolveContext | None = None,
+                      batched: bool | None = None) -> EnsembleResult:
+    """Evaluate `policy` on S scenarios of `problem` — the ensemble entry
+    point (also `repro.core.api.ensemble`).
+
+    `scenarios` is a `ScenarioStack`, a scenario generator (or
+    `SCENARIO_REGISTRY` name), or a sequence of those (concatenated).
+    CR1/CR2 run all S scenarios as ONE vmapped XLA call (nested inside
+    the W-axis shard_map when `ctx.mesh` is set); other policies and
+    warm/donated contexts fall back to a sequential loop of `api.solve`
+    with identical semantics. `batched` forces the lane (True raises if
+    the policy has no batched backend; False forces the loop — the
+    parity-test hook)."""
+    ctx = ctx or SolveContext()
+    policy = resolve_policy(policy)
+    stack = resolve_scenarios(scenarios, problem)
+    can_batch = (_batched_capable(policy) and ctx.warm is None
+                 and not ctx.donate and not ctx.shift and not ctx.reset_mu)
+    if batched is True and not can_batch:
+        raise ValueError(
+            f"no batched ensemble lane for policy "
+            f"{getattr(policy, 'name', policy)!r} under this context "
+            "(CR1/CR2, no warm/donate/shift/reset_mu)")
+    if batched is False or not can_batch:
+        probs = list(stack.problems(problem))
+        results = [solve(ps, policy,
+                         ctx=dataclasses.replace(ctx, donate=False))
+                   for ps in probs]
+        mci, usage, ent = _stack_arrays(problem, stack)
+        uk = resolve_use_kernel(ctx.use_kernel)
+        return EnsembleResult(
+            policy=policy,
+            labels=tuple(stack.label(s) for s in range(stack.S)),
+            carbon_reduction_pct=np.asarray(
+                [r.carbon_reduction_pct for r in results]),
+            total_penalty_pct=np.asarray(
+                [r.total_penalty_pct for r in results]),
+            # per-workload penalties are not part of FleetSolveResult, so
+            # they are evaluated once per scenario on the solved plans
+            penalties=np.stack([
+                np.asarray(fleet_penalties(ps, jnp.asarray(r.D), uk))
+                for ps, r in zip(probs, results)]),
+            entitlement=ent,
+            preservation_violation=np.asarray(
+                [r.preservation_violation for r in results]),
+            D=np.stack([r.D for r in results]),
+            extras=tuple(r.extras for r in results), batched=False)
+    steps = ctx.resolved_steps(policy)
+    use_kernel = resolve_use_kernel(ctx.use_kernel)
+    D, pens, _ = _run_batched(policy, problem, stack, steps=steps,
+                              use_kernel=use_kernel, mesh=ctx.mesh)
+    return _result_from_stacks(problem, stack, policy, D, pens,
+                               batched=True)
+
+
+def compare_policies(problem: FleetProblem, policies: Sequence, scenarios,
+                     *, ctx: SolveContext | None = None,
+                     **report_kw) -> dict[str, EnsembleReport]:
+    """Risk reports for several policies on the SAME scenario stack —
+    the policy-vs-policy comparison feeding `benchmarks/` and examples.
+    Keys are registry names (duplicate families get `name#i` suffixes)."""
+    stack = resolve_scenarios(scenarios, problem)
+    out: dict[str, EnsembleReport] = {}
+    for pl in policies:
+        pl = resolve_policy(pl)
+        rep = evaluate_ensemble(problem, pl, stack, ctx=ctx).report(
+            **report_kw)
+        key = rep.policy
+        if key in out:
+            key = f"{key}#{sum(k.split('#')[0] == rep.policy for k in out)}"
+        out[key] = rep
+    return out
+
+
+def comparison_table(reports: dict[str, EnsembleReport]) -> list[str]:
+    """Fixed-width policy-vs-policy table (one row per report)."""
+    a = int(100 * next(iter(reports.values())).cvar_alpha) if reports else 0
+    head = (f"{'policy':10s} {'carbon p50':>10s} {'carbon p5':>10s} "
+            f"{f'CVaR{a}':>8s} {'pen p50':>8s} {'pen CVaR':>9s} "
+            f"{'jain p50':>9s} {'SLO prob':>9s}")
+    rows = [head, "-" * len(head)]
+    for name, r in reports.items():
+        rows.append(
+            f"{name:10s} {r.carbon_quantiles['p50']:>9.2f}% "
+            f"{r.carbon_quantiles['p5']:>9.2f}% {r.carbon_cvar:>7.2f}% "
+            f"{r.penalty_quantiles['p50']:>7.2f}% "
+            f"{r.penalty_cvar:>8.2f}% {r.jain_quantiles['p50']:>9.3f} "
+            f"{100 * r.slo_violation_prob:>8.0f}%")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Rolling-horizon ensemble: S streams, one batched controller
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StreamingEnsembleReport:
+    """S rolling-horizon runs, batched: per-scenario committed plans and
+    carbon ledgers (the streaming analogue of `EnsembleResult`)."""
+
+    labels: tuple[str, ...]
+    committed: np.ndarray          # (S, W, n_ticks)
+    realized_carbon: np.ndarray    # (S,) kg CO2 eliminated at actual MCI
+    forecast_carbon: np.ndarray    # (S,) same hours at solve-time forecast
+    realized_baseline: np.ndarray  # (S,) no-DR carbon of committed hours
+    total_inner_steps: int         # engine iterations per scenario lane
+    batched: bool
+
+    @property
+    def S(self) -> int:
+        return int(self.realized_carbon.shape[0])
+
+    @property
+    def n_ticks(self) -> int:
+        return int(self.committed.shape[-1])
+
+    @property
+    def realized_reduction_pct(self) -> np.ndarray:
+        return 100.0 * self.realized_carbon / np.maximum(
+            self.realized_baseline, 1e-12)
+
+    def risk(self, *, cvar_alpha: float = 0.25,
+             quantiles: Sequence[float] = (5, 25, 50, 75, 95),
+             ) -> dict[str, float]:
+        red = self.realized_reduction_pct
+        out = _quantiles(red, quantiles)
+        out["mean"] = float(red.mean())
+        out[f"cvar{int(100 * cvar_alpha)}"] = _cvar(red, cvar_alpha, "low")
+        return out
+
+
+def run_streaming_ensemble(problem: FleetProblem, policy, streams, *,
+                           n_ticks: int | None = None,
+                           cold_steps: int = 600, warm_steps: int = 150,
+                           use_kernel: bool | None = None,
+                           ) -> StreamingEnsembleReport:
+    """Drive S independent forecast streams through batched warm-started
+    rolling-horizon ticks.
+
+    `streams` is a sequence of `ForecastStream`s (every horizon must equal
+    `problem.T`) or a `scenario.ForecastRegime` (its `streams()` factory
+    is called with `n_ticks`). Per tick, the S revised forecasts stack
+    into one scenario axis and the whole ensemble re-solves as one
+    batched XLA call, each lane warm-started from its own previous
+    `EngineState` (shift + mu reset inside the call) — the
+    `RollingHorizonSolver` loop, vmapped over scenarios. Policies
+    without a batched lane fall back to S sequential
+    `RollingHorizonSolver` runs."""
+    from repro.core.scenario import ForecastRegime
+    from repro.core.streaming import RollingHorizonSolver
+    policy = resolve_policy(policy)
+    if isinstance(streams, ForecastRegime):
+        streams = streams.streams(problem, n_ticks=n_ticks or 1)
+    streams = tuple(streams)
+    if not streams:
+        raise ValueError("run_streaming_ensemble needs >= 1 stream")
+    for st in streams:
+        if st.horizon != problem.T:
+            raise ValueError(
+                f"stream horizon {st.horizon} != problem.T {problem.T}")
+    max_ticks = min(st.n_ticks for st in streams)
+    n = max_ticks if n_ticks is None else n_ticks
+    if not 0 < n <= max_ticks:
+        raise ValueError(f"n_ticks {n} outside (0, {max_ticks}]")
+    S = len(streams)
+    labels = tuple(
+        f"stream[sigma={st.revision_sigma:.3f},seed={st.seed}]"
+        for st in streams)
+    base_usage = np.asarray(problem.usage, float)
+
+    if not _batched_capable(policy):
+        reports = [RollingHorizonSolver(
+            problem, st, policy=policy, cold_steps=cold_steps,
+            warm_steps=warm_steps, use_kernel=use_kernel).run(n)
+            for st in streams]
+        return StreamingEnsembleReport(
+            labels=labels,
+            committed=np.stack([r.committed for r in reports]),
+            realized_carbon=np.asarray(
+                [r.realized_carbon for r in reports]),
+            forecast_carbon=np.asarray(
+                [r.forecast_carbon for r in reports]),
+            realized_baseline=np.asarray(
+                [r.realized_baseline for r in reports]),
+            total_inner_steps=reports[0].total_inner_steps,
+            batched=False)
+
+    use_kernel = resolve_use_kernel(use_kernel)
+    committed = np.zeros((S, problem.W, n))
+    realized = np.zeros(S)
+    forecast = np.zeros(S)
+    baseline = np.zeros(S)
+    states: EngineState | None = None
+    total_steps = 0
+    for t in range(n):
+        mcis = np.stack([st.forecast(t) for st in streams])
+        p_t = dataclasses.replace(
+            problem, mci=np.asarray(problem.mci),
+            usage=np.roll(problem.usage, -t, axis=1),
+            jobs=np.roll(problem.jobs, -t, axis=1),
+            upper=None if problem.upper is None
+            else np.roll(problem.upper, -t, axis=1))
+        steps = cold_steps if states is None else warm_steps
+        D, _, states = _run_batched(
+            policy, p_t, ScenarioStack(mci=mcis, labels=labels),
+            steps=steps, use_kernel=use_kernel, init=states,
+            shift=0 if t == 0 else 1, reset_mu=t > 0)
+        committed[:, :, t] = D[:, :, 0]
+        total_steps += steps * (policy.outer if type(policy) is CR2 else 1)
+        real_t = np.asarray([st.realized(t) for st in streams])
+        realized += committed[:, :, t].sum(axis=1) * real_t
+        forecast += committed[:, :, t].sum(axis=1) * mcis[:, 0]
+        baseline += real_t * base_usage[:, t % base_usage.shape[1]].sum()
+    return StreamingEnsembleReport(
+        labels=labels, committed=committed, realized_carbon=realized,
+        forecast_carbon=forecast, realized_baseline=baseline,
+        total_inner_steps=total_steps, batched=True)

@@ -285,6 +285,18 @@ def _inf_upper(shape: tuple[int, int]) -> np.ndarray:
     return out
 
 
+#: Inert-row fill value per FleetProblem field — the single source for
+#: `pad_fleet` AND the scenario-overlay padding in `repro.core.ensemble`
+#: (stacked overlays must pad byte-identically or pad rows stop being
+#: inert in sharded ensemble lanes). The values are load-bearing; see
+#: `pad_fleet`'s docstring for why usage=0.01 specifically.
+PAD_FILLS: dict[str, float] = {
+    "usage": 0.01, "entitlement": 1.0, "k": 0.0, "rts_coeffs": 0.0,
+    "betas": 0.0, "x2_kind": 0.0, "jobs": 1.0, "is_batch": False,
+    "upper": 0.0,
+}
+
+
 def pad_fleet(p: FleetProblem, multiple: int) -> tuple[FleetProblem, int]:
     """Pad W up to a multiple of `multiple` with inert workloads.
 
@@ -307,17 +319,18 @@ def pad_fleet(p: FleetProblem, multiple: int) -> tuple[FleetProblem, int]:
     if pad == 0:
         return dataclasses.replace(p, upper=upper, names=None), p.W
 
-    def rows(a, fill):
-        a = np.asarray(a)
+    def rows(field, a=None):
+        a = np.asarray(getattr(p, field) if a is None else a)
         return np.concatenate(
-            [a, np.full((pad,) + a.shape[1:], fill, dtype=a.dtype)])
+            [a, np.full((pad,) + a.shape[1:], PAD_FILLS[field],
+                        dtype=a.dtype)])
 
     return dataclasses.replace(
-        p, usage=rows(p.usage, 0.01), entitlement=rows(p.entitlement, 1.0),
-        k=rows(p.k, 0.0), rts_coeffs=rows(p.rts_coeffs, 0.0),
-        betas=rows(p.betas, 0.0), x2_kind=rows(p.x2_kind, 0.0),
-        jobs=rows(p.jobs, 1.0), is_batch=rows(p.is_batch, False),
-        upper=rows(upper, 0.0), names=None), p.W
+        p, usage=rows("usage"), entitlement=rows("entitlement"),
+        k=rows("k"), rts_coeffs=rows("rts_coeffs"), betas=rows("betas"),
+        x2_kind=rows("x2_kind"), jobs=rows("jobs"),
+        is_batch=rows("is_batch"), upper=rows("upper", upper),
+        names=None), p.W
 
 
 def _pad_state(state: EngineState, W_pad: int) -> EngineState:

@@ -37,6 +37,37 @@ def entropy_over_sweep(results, entitlements: np.ndarray,
     return {"penalty_entropy": pen, "carbon_entropy": car}
 
 
+def jain_index(values: np.ndarray, entitlements: np.ndarray,
+               axis: int = -1) -> np.ndarray | float:
+    """Jain fairness index (Σx)²/(n·Σx²) over capacity-scaled shares
+    x_i = max(values_i, 0)/E_i, along `axis` (ensemble risk reports pass
+    (S, W) stacks and get one index per scenario).
+
+    1.0 = perfectly proportional losses; 1/n = one workload bears all.
+    All-zero shares (no DR) are trivially fair -> 1.0."""
+    x = np.maximum(np.asarray(values, float), 0.0) \
+        / np.asarray(entitlements, float)
+    n = x.shape[axis]
+    num = x.sum(axis=axis) ** 2
+    den = n * (x * x).sum(axis=axis)
+    out = np.where(den > 1e-24, num / np.maximum(den, 1e-24), 1.0)
+    return float(out) if np.ndim(out) == 0 else out
+
+
+def max_min_ratio(values: np.ndarray, entitlements: np.ndarray,
+                  axis: int = -1) -> np.ndarray | float:
+    """Max/min capacity-scaled share along `axis` — the worst-treated vs
+    best-treated workload (1.0 = equal treatment; large = concentrated
+    burden). Shares are floored at 1e-4 of the max share, capping the
+    dispersion at 1e4: zero-loss workloads read as "≥10000x", not inf."""
+    x = np.maximum(np.asarray(values, float), 0.0) \
+        / np.asarray(entitlements, float)
+    top = x.max(axis=axis)
+    bot = np.maximum(x.min(axis=axis), 1e-4 * np.maximum(top, 1e-30))
+    out = np.where(top > 1e-24, top / bot, 1.0)
+    return float(out) if np.ndim(out) == 0 else out
+
+
 def box_stats(x: np.ndarray) -> dict[str, float]:
     """1st/2nd/3rd quartiles + min/max (Fig. 10 box-and-whisker)."""
     return {

@@ -120,6 +120,21 @@ class RollingHorizonSolver:
       cold_steps: inner Adam steps for the tick-0 cold solve.
       warm_steps: inner steps for warm-started re-solves — the streaming
         speedup is `cold_steps / warm_steps` per multiplier round.
+      adaptive_warm: scale each warm tick's budget by the forecast
+        revision magnitude instead of spending `warm_steps` flat. The
+        tick's relative revision `‖mci_t[:-1] − mci_{t−1}[1:]‖₂ /
+        ‖mci_{t−1}[1:]‖₂` (the re-forecast hours both horizons cover) is
+        mapped linearly onto `[warm_steps_min, warm_steps]` (quantized
+        to 4 levels — the budget is a static jit argument, so this
+        bounds the trace cache), saturating at `revision_ref`: a quiet
+        tick (the forecast barely moved, the shifted warm start is
+        already near-optimal) re-solves with `warm_steps_min` inner
+        steps, a heavily revised tick gets the full warm budget.
+      warm_steps_min: floor for adaptive budgets (default
+        `warm_steps // 4`).
+      revision_ref: relative revision magnitude that earns the full
+        `warm_steps` (default 0.05 — about the day-ahead error of the
+        default `ForecastStream` sigma).
       mesh: optional device mesh — every tick's re-solve runs sharded over
         its fleet axis (workloads padded to the device count once; the
         engine state stays padded between ticks).
@@ -142,7 +157,10 @@ class RollingHorizonSolver:
                  tax_frac: float = 0.2, cold_steps: int = 600,
                  warm_steps: int = 150, outer: int = 4,
                  use_kernel: bool | None = None,
-                 mesh=None, donate: bool = False):
+                 mesh=None, donate: bool = False,
+                 adaptive_warm: bool = False,
+                 warm_steps_min: int | None = None,
+                 revision_ref: float = 0.05):
         if stream.horizon != problem.T:
             raise ValueError(
                 f"stream horizon {stream.horizon} != problem.T {problem.T}")
@@ -157,10 +175,21 @@ class RollingHorizonSolver:
         self.last_rho = getattr(self.policy, "rho", None)
         self.cold_steps = cold_steps
         self.warm_steps = warm_steps
+        self.adaptive_warm = adaptive_warm
+        self.warm_steps_min = max(1, warm_steps // 4) \
+            if warm_steps_min is None else warm_steps_min
+        if not 0 < self.warm_steps_min <= warm_steps:
+            raise ValueError(
+                f"warm_steps_min must be in (0, warm_steps={warm_steps}]; "
+                f"got {self.warm_steps_min}")
+        if revision_ref <= 0:
+            raise ValueError(f"revision_ref must be > 0, got {revision_ref}")
+        self.revision_ref = revision_ref
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.donate = donate
         self._state: EngineState | None = None
+        self._prev_forecast: np.ndarray | None = None
         self._tick = 0
         self._history: list[TickResult] = []
 
@@ -186,6 +215,24 @@ class RollingHorizonSolver:
             self.last_rho = plan.extras["rho"]
         return plan
 
+    def _warm_budget(self, mci_hat: np.ndarray) -> int:
+        """Inner steps for this warm tick: `warm_steps` flat, or scaled by
+        the forecast revision magnitude under `adaptive_warm` (the hours
+        both horizons forecast — hour k of this tick vs hour k+1 of the
+        previous one)."""
+        if not self.adaptive_warm or self._prev_forecast is None:
+            return self.warm_steps
+        prev = self._prev_forecast[1:]
+        rel = float(np.linalg.norm(mci_hat[:-1] - prev)
+                    / max(np.linalg.norm(prev), 1e-12))
+        frac = min(1.0, rel / self.revision_ref)
+        # Quantize to 4 budget levels: the step count is a static jit
+        # argument, so a continuum of budgets would compile a fresh trace
+        # per tick; 4 levels bound the cache at 4 warm traces.
+        frac = round(3 * frac) / 3
+        return int(round(self.warm_steps_min
+                         + (self.warm_steps - self.warm_steps_min) * frac))
+
     def step(self) -> TickResult:
         """Ingest the next forecast revision, re-solve, commit hour 0."""
         tick = self._tick
@@ -198,10 +245,12 @@ class RollingHorizonSolver:
         # handful of ticks (multipliers still carry the constraint prices).
         # Both happen *inside* the solve's jitted call, so a tick is one
         # XLA dispatch (donated when self.donate).
-        steps = self.cold_steps if warm is None else self.warm_steps
+        steps = self.cold_steps if warm is None \
+            else self._warm_budget(mci_hat)
         plan = self._solve(p_t, warm, steps, shift=0 if warm is None else 1,
                            reset_mu=warm is not None)
         self._state = plan.state
+        self._prev_forecast = mci_hat
         self._tick = tick + 1
         out = TickResult(
             tick=tick, committed=np.asarray(plan.D[:, 0]),

@@ -176,6 +176,43 @@ print("OK")
 """)
 
 
+def test_sharded_ensemble_parity():
+    """Acceptance (ISSUE 5): `evaluate_ensemble` with `ctx.mesh` — the
+    scenario axis vmapped INSIDE the W-axis shard_map — matches the
+    sequential single-device `api.solve` loop to <0.01 pp for CR1 and
+    CR2, with W=13 exercising inert-row padding of the scenario
+    overlays (usage/entitlement/jobs/upper stacks)."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1, CR2, SolveContext
+from repro.core.ensemble import evaluate_ensemble
+from repro.core.fleet_solver import synthetic_fleet
+from repro.core.scenario import (DuckPerturb, FleetJitter, FlexMixShift,
+                                 resolve_scenarios)
+from repro.launch.mesh import make_fleet_mesh
+
+mesh = make_fleet_mesh()
+assert len(mesh.devices.ravel()) == 8
+p = synthetic_fleet(13)
+stack = resolve_scenarios([DuckPerturb(n_scenarios=2, seed=1),
+                           FleetJitter(n_scenarios=1, seed=2),
+                           FlexMixShift(n_scenarios=1, seed=3)], p)
+
+for pol, steps in ((CR1(lam=1.45), 300), (CR2(cap_frac=0.8, outer=2), 200)):
+    r8 = evaluate_ensemble(p, pol, stack,
+                           ctx=SolveContext(steps=steps, mesh=mesh))
+    r1 = evaluate_ensemble(p, pol, stack, ctx=SolveContext(steps=steps),
+                           batched=False)
+    assert r8.batched and not r1.batched
+    assert r8.D.shape == (4, 13, 48)
+    gc = np.abs(r8.carbon_reduction_pct - r1.carbon_reduction_pct).max()
+    gp = np.abs(r8.total_penalty_pct - r1.total_penalty_pct).max()
+    assert gc < 0.01, f"{pol.name} carbon gap {gc}"
+    assert gp < 0.01, f"{pol.name} penalty gap {gp}"
+print("OK")
+""")
+
+
 def test_sharded_sweep_parity():
     """Acceptance: `sweep(p, grid, ctx=SolveContext(mesh=...))` — the
     hyper axis vmapped INSIDE the W-axis shard_map — matches per-policy

@@ -1,0 +1,220 @@
+"""Scenario-generation layer (`repro.core.scenario`): registry, stack
+shapes/validation/concat, tuple-seeded determinism, and the carbon.py
+grid-event hooks the generators randomize."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import carbon
+from repro.core.fleet_solver import synthetic_fleet
+from repro.core.scenario import (SCENARIO_REGISTRY, CambiumMix, DuckPerturb,
+                                 EveningRampSpike, FleetJitter, FlexMixShift,
+                                 ForecastRegime, RenewableDrought,
+                                 ScenarioGenerator, ScenarioStack,
+                                 ZeroMciWindow, resolve_scenarios)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return synthetic_fleet(5, seed=3)
+
+
+ALL_GENERATORS = [DuckPerturb, RenewableDrought, EveningRampSpike,
+                  ZeroMciWindow, CambiumMix, ForecastRegime, FleetJitter,
+                  FlexMixShift]
+
+
+# ---------------------------------------------------------------------------
+# Grid-event hooks (carbon.py)
+# ---------------------------------------------------------------------------
+def test_apply_drought_fills_the_trough():
+    mci = carbon.caiso_2021(48).mci
+    out = carbon.apply_drought(mci, day=0, n_days=1, severity=0.8)
+    assert out.shape == mci.shape
+    # day 0 lifted toward its peak, day 1 untouched
+    assert out[:24].min() > mci[:24].min()
+    assert np.isclose(out[:24].max(), mci[:24].max())
+    np.testing.assert_array_equal(out[24:], mci[24:])
+    # severity 1.0 erases the trough entirely
+    flat = carbon.apply_drought(mci, day=0, severity=1.0)
+    np.testing.assert_allclose(flat[:24], mci[:24].max())
+
+
+def test_apply_evening_spike_is_local_and_multiplicative():
+    mci = carbon.caiso_2021(48).mci
+    out = carbon.apply_evening_spike(mci, hour=19, magnitude=1.5, width=1.5)
+    assert np.isclose(out[19], 1.5 * mci[19])
+    assert out[19] > mci[19]
+    np.testing.assert_allclose(out[40:], mci[40:], rtol=1e-6)
+
+
+def test_apply_zero_window_clamps():
+    mci = carbon.caiso_2021(48).mci
+    out = carbon.apply_zero_window(mci, start=12, length=3)
+    assert (out[12:15] == 0).all()
+    np.testing.assert_array_equal(out[:12], mci[:12])
+    np.testing.assert_array_equal(out[15:], mci[15:])
+
+
+# ---------------------------------------------------------------------------
+# Registry + generator protocol
+# ---------------------------------------------------------------------------
+def test_registry_holds_every_generator():
+    assert {"duck_perturb", "renewable_drought", "evening_ramp_spike",
+            "zero_mci_window", "cambium_mix", "forecast_regime",
+            "fleet_jitter", "flex_mix_shift"} <= set(SCENARIO_REGISTRY)
+    for cls in ALL_GENERATORS:
+        assert SCENARIO_REGISTRY[cls.name] is cls
+        assert isinstance(cls(), ScenarioGenerator)
+
+
+def test_resolve_scenarios_accepts_names_objects_stacks(fleet):
+    by_name = resolve_scenarios("duck_perturb", fleet)
+    by_obj = resolve_scenarios(DuckPerturb(), fleet)
+    np.testing.assert_array_equal(by_name.mci, by_obj.mci)
+    assert resolve_scenarios(by_obj, fleet) is by_obj
+    with pytest.raises(ValueError, match="duck_perturb"):
+        resolve_scenarios("not_a_generator", fleet)
+    with pytest.raises(TypeError, match="ScenarioStack"):
+        resolve_scenarios(3.14, fleet)
+
+
+@pytest.mark.parametrize("cls", ALL_GENERATORS)
+def test_generators_are_deterministic_and_well_shaped(cls, fleet):
+    gen = cls(n_scenarios=4, seed=11)
+    a = gen.generate(fleet)
+    b = cls(n_scenarios=4, seed=11).generate(fleet)
+    assert a.S == 4
+    a.validate(fleet)
+    assert len(a.labels) == 4
+    for f, v in a.overlay_fields().items():
+        # bitwise reproducible under the same (seed, s) tuples
+        np.testing.assert_array_equal(v, getattr(b, f), err_msg=f)
+        assert not np.isnan(v).any()
+    # different seeds produce different scenarios
+    c = cls(n_scenarios=4, seed=12).generate(fleet)
+    assert any(not np.array_equal(v, getattr(c, f))
+               for f, v in a.overlay_fields().items())
+    # scenarios within a stack differ from each other
+    for f, v in a.overlay_fields().items():
+        if f == "mci" or cls is not FlexMixShift:
+            assert not np.array_equal(v[0], v[1])
+            break
+
+
+@pytest.mark.parametrize("cls", ALL_GENERATORS)
+def test_generators_reject_empty_ensembles(cls):
+    with pytest.raises(ValueError, match="n_scenarios"):
+        cls(n_scenarios=0)
+    with pytest.raises(ValueError, match="n_scenarios"):
+        cls(n_scenarios=-1)
+
+
+def test_mci_generators_stay_nonnegative(fleet):
+    for cls in (DuckPerturb, RenewableDrought, EveningRampSpike,
+                ZeroMciWindow, CambiumMix, ForecastRegime):
+        st = cls(n_scenarios=6, seed=0).generate(fleet)
+        assert st.mci.shape == (6, fleet.T)
+        assert (st.mci >= 0).all(), cls.name
+
+
+def test_fleet_generators_overlay_per_workload_fields(fleet):
+    st = FleetJitter(n_scenarios=3, seed=0).generate(fleet)
+    assert st.usage.shape == (3, fleet.W, fleet.T)
+    assert st.entitlement.shape == (3, fleet.W)
+    assert (st.usage > 0).all() and (st.entitlement > 0).all()
+    mix = FlexMixShift(n_scenarios=3, seed=0).generate(fleet)
+    assert mix.upper.shape == (3, fleet.W, fleet.T)
+    # the operational cap is a fraction of that scenario's usage
+    assert (mix.upper <= mix.usage + 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# ScenarioStack mechanics
+# ---------------------------------------------------------------------------
+def test_stack_validation_and_problem_materialization(fleet):
+    st = DuckPerturb(n_scenarios=3, seed=0).generate(fleet)
+    p1 = st.problem(fleet, 1)
+    np.testing.assert_array_equal(p1.mci, st.mci[1])
+    np.testing.assert_array_equal(p1.usage, fleet.usage)  # not overlaid
+    with pytest.raises(ValueError, match="shape"):
+        ScenarioStack(mci=np.ones((3, fleet.T + 1))).validate(fleet)
+    with pytest.raises(ValueError, match="disagree|empty"):
+        ScenarioStack(mci=np.ones((3, 48)), usage=np.ones((2, 5, 48)))
+    with pytest.raises(ValueError, match="disagree|empty"):
+        ScenarioStack()
+
+
+def test_stack_concat_mixes_generators(fleet):
+    a = DuckPerturb(n_scenarios=2, seed=0).generate(fleet)
+    b = FleetJitter(n_scenarios=3, seed=0).generate(fleet)
+    mix = ScenarioStack.concat([a, b], fleet)
+    mix.validate(fleet)
+    assert mix.S == 5
+    # a's scenarios keep base usage; b's keep base mci
+    np.testing.assert_array_equal(mix.usage[0], fleet.usage)
+    np.testing.assert_array_equal(mix.mci[2:],
+                                  np.broadcast_to(fleet.mci, (3, fleet.T)))
+    np.testing.assert_array_equal(mix.mci[:2], a.mci)
+    np.testing.assert_array_equal(mix.usage[2:], b.usage)
+    assert mix.labels == a.labels + b.labels
+    # sequence form of resolve_scenarios concats the same way
+    mix2 = resolve_scenarios([a, b], fleet)
+    np.testing.assert_array_equal(mix.mci, mix2.mci)
+
+
+def test_forecast_regime_streams_match_generate(fleet):
+    reg = ForecastRegime(n_scenarios=3, seed=4)
+    streams = reg.streams(fleet, n_ticks=5)
+    assert len(streams) == 3
+    sigmas = {st.revision_sigma for st in streams}
+    assert len(sigmas) == 3            # distinct regimes
+    for st in streams:
+        assert st.horizon == fleet.T
+        assert st.n_ticks >= 5
+    # generate() serves each stream's tick-0 forecast
+    stack = reg.generate(fleet)
+    np.testing.assert_allclose(stack.mci[0], streams[0].forecast(0))
+
+
+# ---------------------------------------------------------------------------
+# carbon.projection tuple-seeding regression (ISSUE-5 satellite)
+# ---------------------------------------------------------------------------
+def test_projection_tuple_seeding_kills_additive_collisions():
+    """Regression: `default_rng(seed + idx)` collided distinct
+    (seed, state) pairs — STATES[10]="NY" at seed=8 and STATES[17]="MA"
+    at seed=1 both seeded rng(18) and (neither being in the solar_rank
+    table) drew identical penetration AND noise, i.e. identical series.
+    Tuple seeding keeps every (seed, year, state) stream distinct."""
+    a = carbon.projection(2050, "NY", seed=8)
+    b = carbon.projection(2050, "MA", seed=1)
+    assert not np.allclose(a.mci, b.mci)
+    # same (seed, year, state) stays bitwise reproducible
+    np.testing.assert_array_equal(a.mci,
+                                  carbon.projection(2050, "NY", seed=8).mci)
+    # the same state across years must differ too
+    y24 = carbon.projection(2024, "NY", seed=8)
+    assert not np.allclose(a.mci, y24.mci)
+
+
+def test_projection_unlisted_state_is_process_stable():
+    """States outside `STATES` must hash stably (crc32), not with the
+    per-process-salted builtin hash(): the same (seed, year, state) has
+    to reproduce bitwise across interpreter runs."""
+    import subprocess
+    import sys
+    code = ("import os, sys; sys.path.insert(0, 'src'); "
+            "from repro.core.carbon import projection; "
+            "print(projection(2050, 'NJ', seed=0).mci.tobytes().hex())")
+    outs = set()
+    for hashseed in ("0", "5"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed)
+        outs.add(subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True).stdout.strip())
+    assert len(outs) == 1, "projection('NJ') varies with PYTHONHASHSEED"
+    # and an unlisted state cannot collide onto a listed state's stream
+    assert not np.allclose(carbon.projection(2050, "NJ", seed=0).mci,
+                           carbon.projection(2050, "NY", seed=0).mci)

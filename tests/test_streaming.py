@@ -78,6 +78,38 @@ def test_forecast_stream_realized_is_actual():
     assert s.realized(5) == float(sig.mci[5])
 
 
+def test_forecast_stream_replay_tick_boundary():
+    """The last valid tick is n_ticks - 1 exactly; n_ticks itself must
+    raise for both forecast() and realized() in replay mode."""
+    snaps = np.arange(4 * 6, dtype=float).reshape(4, 6)
+    s = ForecastStream(actual=np.ones(4), horizon=6, replay=snaps)
+    assert s.n_ticks == 4
+    np.testing.assert_array_equal(s.forecast(s.n_ticks - 1), snaps[3])
+    assert s.realized(s.n_ticks - 1) == 1.0
+    with pytest.raises(IndexError):
+        s.forecast(s.n_ticks)
+    with pytest.raises(IndexError):
+        s.forecast(-1)
+
+
+def test_forecast_stream_horizon_longer_than_actual():
+    """Revision mode with horizon > len(actual) supports zero ticks (no
+    full horizon exists) and says so via IndexError, not a crash deep in
+    the revision model."""
+    s = ForecastStream(actual=np.ones(10), horizon=48)
+    assert s.n_ticks == 0
+    with pytest.raises(IndexError, match=r"\[0, 0\)"):
+        s.forecast(0)
+    # replay mode: snapshots may cover a longer horizon than the realized
+    # series; ticks clamp to the realized hours
+    s2 = ForecastStream(actual=np.ones(2), horizon=48,
+                        replay=np.ones((5, 48)))
+    assert s2.n_ticks == 2
+    assert s2.forecast(1).shape == (48,)
+    with pytest.raises(IndexError):
+        s2.forecast(2)
+
+
 # ---------------------------------------------------------------------------
 # Engine warm starts
 # ---------------------------------------------------------------------------
@@ -212,6 +244,58 @@ def test_rolling_horizon_accepts_policy_objects():
     by_obj = RollingHorizonSolver(p, stream, policy=CR2(cap_frac=0.8,
                                                         outer=2))
     assert by_obj.policy == by_name.policy
+
+
+def test_adaptive_warm_budget_scales_with_revision_magnitude():
+    """ROADMAP adaptive-warm-budgets item: a quiet stream (tiny forecast
+    revisions) must spend fewer inner steps per warm tick than the fixed
+    budget, at an objective gap < 0.01 pp; a violently revised stream
+    keeps the full warm budget."""
+    lam = 1.45
+    p = synthetic_fleet(6, seed=0)
+
+    def run(adaptive, sigma):
+        stream = ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=3,
+                                      revision_sigma=sigma)
+        rhs = RollingHorizonSolver(p, stream, policy=CR1(lam=lam),
+                                   cold_steps=300, warm_steps=120,
+                                   adaptive_warm=adaptive)
+        objs = {}
+        rep = rhs.run(4, on_tick=lambda tk: objs.__setitem__(
+            tk.tick, lam * tk.plan.total_penalty_pct
+            - tk.plan.carbon_reduction_pct))
+        return rep, objs
+
+    fixed, objs_f = run(False, 0.002)
+    adapt, objs_a = run(True, 0.002)
+    # quiet ticks: every warm budget strictly below the fixed 120
+    assert [t.inner_steps for t in fixed.ticks] == [300, 120, 120, 120]
+    warm_a = [t.inner_steps for t in adapt.ticks][1:]
+    assert all(30 <= s < 120 for s in warm_a), warm_a
+    assert adapt.total_inner_steps < fixed.total_inner_steps
+    # ...at a per-tick objective gap below 0.01 pp
+    gaps = [abs(objs_a[k] - objs_f[k]) for k in objs_f]
+    assert max(gaps) < 0.01, gaps
+    # violent revisions keep the full budget
+    noisy, _ = run(True, 0.5)
+    assert [t.inner_steps for t in noisy.ticks][1:] == [120, 120, 120]
+
+
+def test_adaptive_warm_budget_validates_and_defaults():
+    p = synthetic_fleet(2, seed=0)
+    stream = ForecastStream.caiso(n_ticks=2, horizon=p.T)
+    rhs = RollingHorizonSolver(p, stream, warm_steps=100,
+                               adaptive_warm=True)
+    assert rhs.warm_steps_min == 25          # warm_steps // 4
+    with pytest.raises(ValueError, match="revision_ref"):
+        RollingHorizonSolver(p, stream, adaptive_warm=True,
+                             revision_ref=0.0)
+    # a floor above the warm budget would invert the adaptive scaling
+    with pytest.raises(ValueError, match="warm_steps_min"):
+        RollingHorizonSolver(p, stream, warm_steps=100,
+                             adaptive_warm=True, warm_steps_min=200)
+    with pytest.raises(ValueError, match="warm_steps_min"):
+        RollingHorizonSolver(p, stream, warm_steps_min=0)
 
 
 @pytest.mark.slow
