@@ -17,13 +17,19 @@ VAR = pathlib.Path(__file__).resolve().parents[1] / "var"
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall-time per call in microseconds."""
+    """Median wall-time per call in microseconds.
+
+    `fn()`'s result is blocked on (`jax.block_until_ready`, a no-op for
+    host values) before the clock stops — jax dispatch is async, so
+    timing the bare call measures enqueue latency, not the computation.
+    """
+    import jax
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn()
+        jax.block_until_ready(fn())
         times.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(times))
 

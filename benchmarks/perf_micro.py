@@ -291,6 +291,96 @@ def kernel_micro() -> list[str]:
     return rows
 
 
+def al_step_micro() -> list[str]:
+    """Fused AL inner-step kernel (kernels/al_step) vs the generic
+    autodiff engine: full CR1 solve latency + objective parity, and the
+    raw fused-chunk step rate (interpret mode on CPU — the structural
+    win is steps-per-HBM-round-trip, which transfers to TPU)."""
+    from repro.core.api import CR1, SolveContext, solve
+    from repro.core.engine import EngineConfig
+    from repro.core.fleet_solver import _bounds, synthetic_fleet
+    from repro.kernels.al_step.ops import make_fused_inner, pack_rows
+
+    rows = []
+    W, steps, lam = 256, 120, 1.45
+    p = synthetic_fleet(W)
+    cr1 = CR1(lam=lam)
+
+    def obj(r):
+        return lam * r.total_penalty_pct - r.carbon_reduction_pct
+
+    ctx_g = SolveContext(steps=steps, use_kernel=False)
+    ctx_k = SolveContext(steps=steps, use_kernel=True)
+    solve(p, cr1, ctx=ctx_g)          # compile both traces
+    solve(p, cr1, ctx=ctx_k)
+    us_g = timeit(lambda: solve(p, cr1, ctx=ctx_g), repeats=2, warmup=0)
+    us_k = timeit(lambda: solve(p, cr1, ctx=ctx_k), repeats=2, warmup=0)
+    gap = abs(obj(solve(p, cr1, ctx=ctx_g)) - obj(solve(p, cr1, ctx=ctx_k)))
+    rows.append(row(
+        f"al_step_fused_solve_W{W}", us_k,
+        f"fused={us_k / 1e3:.0f}ms vs generic={us_g / 1e3:.0f}ms"
+        f" obj_gap={gap:.4f}pp steps={steps} (interpret)"))
+
+    # Raw chunk throughput: one jitted fused_inner = inner_steps/k_steps
+    # kernel calls, x + Adam moments VMEM-resident within each chunk.
+    inner, k = 64, 8
+    cfg = EngineConfig(inner_steps=inner, outer_steps=1)
+    lo, hi = _bounds(p)
+    rowp = pack_rows(jnp.asarray(p.rts_coeffs), jnp.asarray(p.betas),
+                     jnp.asarray(p.k), jnp.asarray(p.x2_kind),
+                     jnp.asarray(p.is_batch))
+    cvec = -0.01 * jnp.asarray(p.mci, jnp.float32)[None, :]
+    fused = make_fused_inner(
+        jnp.asarray(p.usage, jnp.float32), jnp.asarray(p.jobs, jnp.float32),
+        lo.astype(jnp.float32), hi.astype(jnp.float32), rowp, cvec,
+        mode="cr1", cfg=cfg, step_scale=1.0, coef0=lam, k_steps=k,
+        day_hours=p.day_hours)
+    zl = jnp.zeros(0)
+    f = jax.jit(lambda x: fused(x, zl, zl, jnp.asarray(10.0)))
+    x0 = jnp.zeros((W, p.T), jnp.float32)
+    f(x0)                              # compile
+    us = timeit(lambda: f(x0), repeats=3, warmup=0)
+    rows.append(row(
+        f"al_step_chunk_W{W}", us,
+        f"{inner / (us / 1e6):.0f} fused steps/s k={k}"
+        f" calls/inner-loop={-(-inner // k)} (interpret)"))
+    return rows
+
+
+def streaming_day() -> list[str]:
+    """Whole-day scan (`run_scanned`) vs the per-tick step() loop: same
+    warm-started rolling-horizon day, one XLA dispatch instead of
+    n_ticks — the ISSUE-6 acceptance artifact (parity < 0.01 pp)."""
+    from repro.core.carbon import ForecastStream
+    from repro.core.fleet_solver import synthetic_fleet
+    from repro.core.streaming import RollingHorizonSolver
+
+    rows = []
+    W, n_ticks, cold, warm = 32, 12, 300, 75
+    p = synthetic_fleet(W)
+
+    def mk():
+        return RollingHorizonSolver(
+            p, ForecastStream.caiso(n_ticks=n_ticks, horizon=p.T, seed=7),
+            policy="cr1", cold_steps=cold, warm_steps=warm)
+
+    rep_l = mk().run(n_ticks)          # compiles cold + warm tick traces
+    rep_s = mk().run_scanned(n_ticks)  # compiles the day-scan trace
+    us_loop = timeit(lambda: mk().run(n_ticks), repeats=2, warmup=0)
+    us_scan = timeit(lambda: mk().run_scanned(n_ticks), repeats=2,
+                     warmup=0)
+    gap = abs(rep_l.realized_reduction_pct - rep_s.realized_reduction_pct)
+    rows.append(row(
+        f"streaming_day_W{W}", us_scan,
+        f"scan({n_ticks}ticks)={us_scan / 1e3:.0f}ms vs"
+        f" loop={us_loop / 1e3:.0f}ms"
+        f" speedup={us_loop / max(us_scan, 1e-9):.2f}x"
+        f" dispatches=1"
+        f" parity={gap:.4f}pp"
+        f" realized={rep_s.realized_reduction_pct:.2f}%"))
+    return rows
+
+
 def train_throughput() -> list[str]:
     """End-to-end reduced-model training throughput on CPU (the example
     driver's speed — sanity, not a TPU number)."""

@@ -93,8 +93,10 @@ def main() -> None:
         ("fleet_cr3_scale", perf_micro.fleet_cr3_scale),
         ("fleet_shard_scale", perf_micro.fleet_shard_scale),
         ("streaming_resolve", perf_micro.streaming_resolve),
+        ("streaming_day", perf_micro.streaming_day),
         ("scenario_ensemble", scenario_ensemble.scenario_ensemble),
         ("kernel_micro", perf_micro.kernel_micro),
+        ("al_step_micro", perf_micro.al_step_micro),
         ("train_throughput", perf_micro.train_throughput),
     ]
     print("name,us_per_call,derived")

@@ -98,6 +98,25 @@ def main() -> None:
           f"SLO breach in {100 * rep.slo_violation_prob:.0f}% "
           f"of scenarios")
 
+    # One-dispatch day: solve_day() runs a whole rolling-horizon day —
+    # window roll + plan shift + warm re-solve per tick — inside one
+    # lax.scan, so 24 online ticks cost ONE XLA dispatch instead of 24
+    # (examples/streaming_dr.py --scan drives the full controller).
+    # SolveContext(use_kernel=True) additionally routes the inner Adam
+    # loop through the fused al_step Pallas kernel, and
+    # moment_dtype="bfloat16" halves the optimizer-state footprint
+    # (f32 master iterate, bf16 Adam moments).
+    from repro.core.api import solve_day
+    mci_stack = np.stack([np.roll(mci, -i) for i in range(4)])
+    day = solve_day(problem, CR1(lam=1.45), mci_stack,
+                    ctx=SolveContext(use_kernel=True,
+                                     moment_dtype="bfloat16"),
+                    cold_steps=300)
+    print("\none-dispatch day — solve_day(problem, CR1, mci_stack):")
+    print(f"  {day.committed.shape[0]} ticks in one XLA call, "
+          f"committed NP {day.committed.sum():.1f}, "
+          f"steps/tick {list(day.inner_steps)}")
+
 
 if __name__ == "__main__":
     main()

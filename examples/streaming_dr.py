@@ -16,6 +16,15 @@ first, e.g.:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python examples/streaming_dr.py --shard --workloads 10000
+
+One-dispatch day: `--scan` folds the whole run into a single XLA call
+(`RollingHorizonSolver.run_scanned` -> `api.solve_day`) — the tick loop
+(window roll + plan shift + mu reset + warm re-solve) runs inside
+`lax.scan` instead of Python, so a 24-tick day is one donated-buffer
+dispatch instead of 24. CR1/CR2 only; parity with the per-tick loop is
+<0.01 pp realized carbon:
+
+  PYTHONPATH=src python examples/streaming_dr.py --scan --ticks 24
 """
 import argparse
 
@@ -38,6 +47,10 @@ def main() -> None:
     ap.add_argument("--shard", action="store_true",
                     help="shard the W axis over all devices and donate the "
                          "engine state each tick (in-place re-solves)")
+    ap.add_argument("--scan", action="store_true",
+                    help="whole run as ONE XLA dispatch: the tick loop "
+                         "runs inside lax.scan (run_scanned/solve_day; "
+                         "CR1/CR2 only)")
     args = ap.parse_args()
 
     print("== Carbon Responder: rolling-horizon streaming DR ==")
@@ -70,7 +83,17 @@ def main() -> None:
               f"{tk.forecast_mci:5.0f}->{tk.realized_mci:3.0f}   "
               f"{tk.forecast_carbon:7.1f}/{tk.realized_carbon:7.1f}")
 
-    report = solver.run(args.ticks, on_tick=show)
+    if args.scan:
+        if args.shard:
+            raise SystemExit("--scan under --shard is a ROADMAP follow-up "
+                             "(the day scan must nest inside the fleet "
+                             "shard_map); drop one of the flags")
+        report = solver.run_scanned(args.ticks)
+        for tk in report.ticks:
+            show(tk)
+        print(f"\n(one XLA dispatch for all {args.ticks} ticks)")
+    else:
+        report = solver.run(args.ticks, on_tick=show)
 
     cold_total = args.cold_steps * args.ticks
     print(f"\ncommitted hours      : {len(report.ticks)}")

@@ -71,6 +71,66 @@ PY
     python examples/scenario_risk.py --scenarios 4 --workloads 8 \
     --steps 120 > /dev/null
 
+  echo "== al_step kernel smoke (interpret parity + scanned day) =="
+  # The fused AL inner-step kernel against its jnp oracle at small W,T,
+  # and a 4-tick run_scanned() day against the per-tick step() loop —
+  # the one-dispatch-day contract on every PR.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import dataclasses
+import numpy as np
+import jax.numpy as jnp
+from repro.core.carbon import ForecastStream
+from repro.core.fleet_solver import _bounds, synthetic_fleet
+from repro.core.streaming import RollingHorizonSolver
+from repro.kernels.al_step.kernel import al_step_pallas
+from repro.kernels.al_step.ops import pack_rows
+from repro.kernels.al_step.ref import al_step_ref
+
+# kernel vs oracle, hinge-free rows (see kernels/al_step/ref.py)
+p = synthetic_fleet(8, hours=48, seed=0)
+p = dataclasses.replace(
+    p, is_batch=np.zeros(8, bool), betas=np.zeros((8, 3)),
+    rts_coeffs=np.where(np.asarray(p.is_batch)[:, None],
+                        [2e-4, 1.5e-3, 0.04], p.rts_coeffs))
+lo, hi = (np.asarray(a, np.float32) for a in _bounds(p))
+rng = np.random.default_rng(0)
+x = np.clip(rng.normal(0, .3, lo.shape), lo, hi).astype(np.float32)
+m = np.zeros_like(x); v = np.zeros_like(x)
+rowp = jnp.concatenate([pack_rows(p.rts_coeffs, p.betas, p.k, p.x2_kind,
+                                  p.is_batch),
+                        jnp.zeros((8, 2), jnp.float32)], axis=1)
+cvec = rng.normal(-.5, .2, (1, p.T)).astype(np.float32)
+scal = np.array([[1.45, 10., 0., .02, 0., 0, 0, 0]], np.float32)
+args = [jnp.asarray(a) for a in
+        (x, m, v, p.usage, p.jobs, lo, hi, rowp, cvec, scal)]
+out = al_step_pallas(*args, mode="cr1", k_steps=4, interpret=True)
+ref = al_step_ref(*args, mode="cr1", k_steps=4)
+err = max(float(jnp.abs(o - r).max()) for o, r in zip(out, ref))
+assert err <= 1e-5, f"al_step kernel-vs-oracle err {err}"
+
+# 4-tick scanned day == per-tick loop
+p = synthetic_fleet(6, seed=0)
+mk = lambda: ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=3)
+kw = dict(policy="cr1", cold_steps=120, warm_steps=30)
+loop = RollingHorizonSolver(p, mk(), **kw).run(4)
+scan = RollingHorizonSolver(p, mk(), **kw).run_scanned(4)
+gap = abs(loop.realized_reduction_pct - scan.realized_reduction_pct)
+assert gap < 0.01, f"scanned-day parity gap {gap}pp"
+print(f"al_step smoke OK (kernel err {err:.1e}, day gap {gap:.1e}pp)")
+PY
+
+  echo "== bench-record sanity (write + parse BENCH_*.json) =="
+  # The micro-bench must run end-to-end and its freshly written record
+  # must parse through the report renderer.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only al_step > /dev/null
+  # (grep without -q: it must read the stream to EOF, otherwise the
+  # early exit closes the pipe mid-print and pipefail trips on the
+  # renderer's BrokenPipeError.)
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.report --bench | grep al_step_fused_solve \
+    > /dev/null
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

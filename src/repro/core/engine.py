@@ -80,6 +80,11 @@ class EngineConfig:
     beta1: float = 0.9
     beta2: float = 0.999
     eps: float = 1e-8
+    # Storage dtype for the Adam moments (m, v). "bfloat16" halves the
+    # optimizer-state footprint; x stays a float32 master copy and every
+    # arithmetic step runs in f32 (moments are up-cast on load, down-cast
+    # on store). "float32" is bit-identical to the historical behaviour.
+    moment_dtype: str = "float32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +144,8 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
                 grad_transform: Callable[[Array], Array] | None = None,
                 cfg: EngineConfig = EngineConfig(),
                 init: EngineState | None = None,
+                fused_inner: Callable[[Array, Array, Array, Array], Array]
+                | None = None,
                 ) -> tuple[Array, dict[str, Array]]:
     """Minimize objective(x, hyper) s.t. eq(x)=0, ineq(x)>=0, x = project(x).
 
@@ -161,6 +168,13 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
     per-coordinate sign normalization can emit near-uniform steps that the
     projection then annihilates (uniform push − day-mean ≈ 0), stalling
     progress along the manifold.
+
+    `fused_inner` (optional) replaces the generic inner Adam scan with a
+    caller-supplied fused implementation — e.g. the Pallas `al_step`
+    kernel (`repro.kernels.al_step`) that keeps x and the Adam moments
+    VMEM-resident. Signature: ``fused_inner(x, lam_eq, lam_in, mu) -> x``;
+    it must run exactly `cfg.inner_steps` projected-Adam steps from fresh
+    (zero) moments. The multiplier updates between rounds stay generic.
     """
     n_eq = _residual_dim(eq_residual, x0, hyper)
     n_in = _residual_dim(ineq_residual, x0, hyper)
@@ -185,6 +199,8 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
 
     grad_fn = jax.grad(lagrangian)
 
+    mdt = jnp.dtype(cfg.moment_dtype)
+
     def outer_body(carry, _):
         x, lam_eq, lam_in, mu = carry
 
@@ -194,17 +210,20 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
             if grad_transform is not None:
                 g = grad_transform(g)
             t = t + 1
-            m = cfg.beta1 * m + (1.0 - cfg.beta1) * g
-            v = cfg.beta2 * v + (1.0 - cfg.beta2) * g * g
+            m = cfg.beta1 * m.astype(x.dtype) + (1.0 - cfg.beta1) * g
+            v = cfg.beta2 * v.astype(x.dtype) + (1.0 - cfg.beta2) * g * g
             mhat = m / (1.0 - cfg.beta1 ** t)
             vhat = v / (1.0 - cfg.beta2 ** t)
             x = project(x - cfg.lr * step_scale * mhat
                         / (jnp.sqrt(vhat) + cfg.eps))
-            return (x, m, v, t), None
+            return (x, m.astype(mdt), v.astype(mdt), t), None
 
-        (x, _, _, _), _ = jax.lax.scan(
-            inner, (x, jnp.zeros_like(x), jnp.zeros_like(x), 0), None,
-            length=cfg.inner_steps)
+        if fused_inner is not None:
+            x = fused_inner(x, lam_eq, lam_in, mu)
+        else:
+            (x, _, _, _), _ = jax.lax.scan(
+                inner, (x, jnp.zeros(x.shape, mdt), jnp.zeros(x.shape, mdt),
+                        0), None, length=cfg.inner_steps)
         if n_eq:
             lam_eq = lam_eq + mu * eq_vec(x)
         if n_in:
@@ -307,5 +326,9 @@ def al_minimize_sharded(build_pieces: Callable[[Any], dict], data: Any, *,
         return al_minimize(objective, project, state_blk.x,
                            init=state_blk, cfg=cfg, **pieces)
 
+    # check_rep=False: the body may invoke a pallas_call (the fused
+    # al_step kernel), which has no shard_map replication rule; all
+    # outputs here are explicitly spec'd, so the check adds nothing.
     return shard_map(body, mesh=mesh, in_specs=(data_specs, state_specs),
-                     out_specs=(P(axis_name), aux_specs))(data, init)
+                     out_specs=(P(axis_name), aux_specs),
+                     check_rep=False)(data, init)

@@ -1,0 +1,113 @@
+"""Chunked dispatch for the fused AL inner-step kernel.
+
+`make_fused_inner` packages a fleet's static arrays into the kernel's
+packed layout once, and returns a `fused_inner(x, lam_eq, lam_in, mu)`
+callback for `engine.al_minimize`: a `lax.scan` of `inner_steps /
+k_steps` kernel invocations carrying (x, m, v, t) — the Adam step count
+threads through so bias correction is identical to one long loop. Fresh
+(zero) moments per call match the engine contract (moments reset every
+outer multiplier round).
+
+Everything here is pure jnp + `pallas_call`, so the callback is safe
+under `jit`, `vmap` (λ/cap sweeps and scenario ensembles batch the
+packed scalars), and inside `shard_map` bodies (each device runs the
+kernel on its local row block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.al_step.kernel import al_step_pallas
+from repro.kernels.al_step.ref import al_step_ref
+from repro.kernels.dispatch import interpret_default
+
+
+def pack_rows(rts_coeffs, betas, k, x2_kind, is_batch, refs=None):
+    """Per-workload penalty parameters -> the (W, 10) static row block
+    (cols 0-9 of the kernel's `rowp`; see `ref.py` for the layout).
+    `refs=None` fills zeros (CR1 has no per-row reference)."""
+    f32 = jnp.float32
+    k = jnp.asarray(k, f32)[:, None]
+    x2 = jnp.asarray(x2_kind, f32)[:, None]
+    isb = jnp.asarray(is_batch, f32)[:, None]
+    r = (jnp.zeros_like(k) if refs is None
+         else jnp.asarray(refs, f32)[:, None])
+    return jnp.concatenate([jnp.asarray(rts_coeffs, f32),
+                            jnp.asarray(betas, f32), k, x2, isb, r], axis=1)
+
+
+def make_fused_inner(usage, jobs, lo, hi, row_base, cvec, *, mode: str,
+                     cfg, step_scale, coef0=0.0, scale=None,
+                     k_steps: int = 8, block_w: int | None = None,
+                     interpret: bool | None = None, use_ref: bool = False,
+                     day_hours: int = 24):
+    """Build the `fused_inner` hook for `engine.al_minimize`.
+
+    Args:
+      usage/jobs/lo/hi: (W, T) fleet constants (bounds from
+        `fleet_solver._bounds`).
+      row_base: (W, 10) from `pack_rows` (CR2 passes `refs` there).
+      cvec: (1, T) carbon gradient term, i.e. `-car_norm * mci[None, :]`.
+      mode: "cr1" (fixed penalty weight `coef0 = lam * pen_norm`) or
+        "cr2" (equality-multiplier form; needs `scale`).
+      cfg: `EngineConfig` — supplies inner_steps, lr, betas, eps and the
+        moment storage dtype.
+      step_scale: the adapter's scalar step scale (multiplies cfg.lr).
+      k_steps: fused steps per kernel invocation; `inner_steps` need not
+        divide evenly — the remainder runs as one short call.
+      use_ref: route through the jnp oracle instead of Pallas (parity
+        harnesses; identical call structure).
+
+    The returned callback runs exactly `cfg.inner_steps` projected-Adam
+    steps from zero moments and returns the new x (f32).
+    """
+    W, T = usage.shape
+    mdt = jnp.dtype(cfg.moment_dtype)
+    inv_scale = 0.0 if scale is None else 1.0 / scale
+    lr_scale = cfg.lr * step_scale
+    steps = int(cfg.inner_steps)
+    k_steps = max(1, min(int(k_steps), steps))
+    n_full, rem = divmod(steps, k_steps)
+    if not use_ref:
+        interpret = interpret_default(interpret)
+
+    def call(x, m, v, rowp, mu, t0, n):
+        vals = (coef0, mu, inv_scale, lr_scale, t0, 0.0, 0.0, 0.0)
+        scal = jnp.stack([jnp.asarray(s, jnp.float32).reshape(())
+                          for s in vals]).reshape(1, 8)
+        kw = dict(mode=mode, k_steps=n, beta1=cfg.beta1, beta2=cfg.beta2,
+                  eps=cfg.eps, day_hours=day_hours)
+        if use_ref:
+            return al_step_ref(x, m, v, usage, jobs, lo, hi, rowp, cvec,
+                               scal, **kw)
+        return al_step_pallas(x, m, v, usage, jobs, lo, hi, rowp, cvec,
+                              scal, block_w=block_w, interpret=interpret,
+                              **kw)
+
+    def fused_inner(x, lam_eq, lam_in, mu):
+        del lam_in  # CR1/CR2 carry no inequality multipliers
+        x = x.astype(jnp.float32)
+        if mode == "cr2":
+            lam_col = lam_eq.astype(jnp.float32).reshape(W, 1)
+        else:
+            lam_col = jnp.zeros((W, 1), jnp.float32)
+        rowp = jnp.concatenate(
+            [row_base, lam_col, jnp.zeros((W, 1), jnp.float32)], axis=1)
+        m0 = jnp.zeros((W, T), mdt)
+        v0 = jnp.zeros((W, T), mdt)
+
+        def chunk(c, _):
+            xx, mm, vv, t0 = c
+            xx, mm, vv = call(xx, mm, vv, rowp, mu, t0, k_steps)
+            return (xx, mm, vv, t0 + jnp.asarray(k_steps, jnp.float32)), None
+
+        c = (x, m0, v0, jnp.asarray(0.0, jnp.float32))
+        if n_full:
+            c, _ = jax.lax.scan(chunk, c, None, length=n_full)
+        xx, mm, vv, t0 = c
+        if rem:
+            xx, _, _ = call(xx, mm, vv, rowp, mu, t0, rem)
+        return xx
+
+    return fused_inner

@@ -1,0 +1,197 @@
+"""Fused AL inner-step kernel (kernels/al_step) vs its jnp oracle, the
+chunked `fused_inner` dispatcher, and the fused-vs-generic solve paths.
+
+Tolerance strategy (see the note in `kernels/al_step/ref.py`): the
+analytic subgradient is discontinuous at the batch-penalty hinges, so a
+1-ulp arithmetic difference (Pallas interpret mode associates cumsum
+reductions differently than plain XLA) can flip an indicator and grow
+into O(1) iterate differences over a few steps. Bitwise-tight (<=1e-5)
+kernel-vs-oracle checks therefore use hinge-stable inputs — RTS-only
+fleets (smooth cubic penalty, no hinges) for multi-step/vmap/padding
+coverage, batch rows only for a single step from a hinge-stable point —
+while mixed-fleet semantics are checked at the solve level against the
+independent autodiff engine path with a pp-scale tolerance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import CR1, CR2, SolveContext, solve
+from repro.core.engine import EngineConfig
+from repro.core.fleet_solver import _bounds, synthetic_fleet
+from repro.kernels.al_step.kernel import al_step_pallas
+from repro.kernels.al_step.ops import make_fused_inner, pack_rows
+from repro.kernels.al_step.ref import al_step_ref
+
+TOL = 1e-5
+
+
+def _rts_only(p):
+    """Recast every batch row as an RTS row (smooth cubic penalty only):
+    hinge-free inputs for bitwise-tight kernel-vs-oracle parity."""
+    W = p.W
+    cubic = np.array([2e-4, 1.5e-3, 0.04], np.float64)
+    rts = np.where(np.asarray(p.is_batch)[:, None], cubic, p.rts_coeffs)
+    return dataclasses.replace(p, is_batch=np.zeros(W, bool),
+                               betas=np.zeros((W, 3)), rts_coeffs=rts)
+
+
+def _raw_inputs(p, mode, seed=1, stable=False):
+    """Random-but-feasible (x, m, v, usage, jobs, lo, hi, rowp, cvec,
+    scal) in the kernel's packed layout. `stable=True` keeps x strictly
+    positive and away from hinge boundaries (cumsums and the batch
+    penalty argument z stay clearly one-sided for one step)."""
+    rng = np.random.default_rng(seed)
+    lo, hi = (np.asarray(a, np.float32) for a in _bounds(p))
+    if stable:
+        x = np.clip(0.25 * np.asarray(p.usage) + 0.01, lo, hi)
+    else:
+        x = np.clip(rng.normal(0.0, 0.3, lo.shape), lo, hi)
+    x = x.astype(np.float32)
+    m = rng.normal(0.0, 0.01, x.shape).astype(np.float32)
+    v = np.abs(rng.normal(0.0, 1e-4, x.shape)).astype(np.float32)
+    refs = (np.abs(rng.normal(1.0, 0.2, p.W)).astype(np.float32)
+            if mode == "cr2" else None)
+    row10 = pack_rows(jnp.asarray(p.rts_coeffs), jnp.asarray(p.betas),
+                      jnp.asarray(p.k), jnp.asarray(p.x2_kind),
+                      jnp.asarray(p.is_batch), refs=refs)
+    lam = (rng.normal(0.0, 0.5, (p.W, 1)).astype(np.float32)
+           if mode == "cr2" else np.zeros((p.W, 1), np.float32))
+    rowp = jnp.concatenate([row10, jnp.asarray(lam),
+                            jnp.zeros((p.W, 1), jnp.float32)], axis=1)
+    cvec = rng.normal(-0.5, 0.2, (1, p.T)).astype(np.float32)
+    # [coef0, mu, inv_scale, lr_scale, t0, 0, 0, 0]
+    scal = np.array([[1.45, 10.0, 0.8, 0.02, 3.0, 0, 0, 0]], np.float32)
+    arrs = (x, m, v, np.asarray(p.usage, np.float32),
+            np.asarray(p.jobs, np.float32), lo, hi)
+    return tuple(jnp.asarray(a) for a in arrs) + (rowp, jnp.asarray(cvec),
+                                                  jnp.asarray(scal))
+
+
+@pytest.mark.parametrize("mode", ["cr1", "cr2"])
+@pytest.mark.parametrize("k_steps", [1, 4, 7])
+def test_al_step_matches_ref_rts(mode, k_steps):
+    """Hinge-free multi-step parity: kernel == oracle to <=1e-5 on the
+    iterate AND both Adam moments."""
+    p = _rts_only(synthetic_fleet(12, hours=48, seed=0))
+    args = _raw_inputs(p, mode, seed=k_steps)
+    out = al_step_pallas(*args, mode=mode, k_steps=k_steps, interpret=True)
+    ref = al_step_ref(*args, mode=mode, k_steps=k_steps)
+    for o, r, name in zip(out, ref, "xmv"):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=TOL,
+                                   atol=TOL, err_msg=name)
+
+
+@pytest.mark.parametrize("mode", ["cr1", "cr2"])
+def test_al_step_batch_rows_single_step(mode):
+    """Mixed RTS+batch fleet, one step from a hinge-stable point: the
+    hinged batch gradient path agrees to <=1e-5 too."""
+    p = synthetic_fleet(12, hours=48, seed=0)
+    assert np.asarray(p.is_batch).any()          # exercise both branches
+    args = _raw_inputs(p, mode, seed=5, stable=True)
+    out = al_step_pallas(*args, mode=mode, k_steps=1, interpret=True)
+    ref = al_step_ref(*args, mode=mode, k_steps=1)
+    for o, r, name in zip(out, ref, "xmv"):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=TOL,
+                                   atol=TOL, err_msg=name)
+
+
+@pytest.mark.parametrize("W", [5, 130])
+def test_al_step_padding(W):
+    """Row padding (W -> block_w multiples) is inert: padded rows never
+    leak into the true rows and outputs slice back to (W, T)."""
+    p = _rts_only(synthetic_fleet(W, hours=48, seed=2))
+    args = _raw_inputs(p, "cr1", seed=0)
+    out = al_step_pallas(*args, mode="cr1", k_steps=2, interpret=True)
+    ref = al_step_ref(*args, mode="cr1", k_steps=2)
+    assert out[0].shape == (W, p.T)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               rtol=TOL, atol=TOL)
+
+
+def test_al_step_bf16_moments():
+    """bf16 moment storage: kernel and oracle share the cast points, so
+    parity stays tight; moment dtypes round-trip."""
+    p = _rts_only(synthetic_fleet(8, hours=48, seed=1))
+    x, m, v, *rest = _raw_inputs(p, "cr1", seed=3)
+    m, v = m.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    out = al_step_pallas(x, m, v, *rest, mode="cr1", k_steps=4,
+                         interpret=True)
+    ref = al_step_ref(x, m, v, *rest, mode="cr1", k_steps=4)
+    assert out[1].dtype == out[2].dtype == jnp.bfloat16
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=TOL, atol=TOL)
+
+
+def test_al_step_vmap_over_scalars():
+    """The sweep/ensemble lanes vmap the packed scalars (per-λ coef0):
+    batched kernel == per-lane oracle."""
+    p = _rts_only(synthetic_fleet(8, hours=48, seed=4))
+    x, m, v, u, j, lo, hi, rowp, cvec, scal = _raw_inputs(p, "cr1", seed=2)
+    scals = jnp.stack([scal.at[0, 0].set(c) for c in (0.5, 1.45, 3.0)])
+
+    def run(s):
+        return al_step_pallas(x, m, v, u, j, lo, hi, rowp, cvec, s,
+                              mode="cr1", k_steps=3, interpret=True)[0]
+
+    batched = jax.vmap(run)(scals)
+    for i in range(3):
+        ref = al_step_ref(x, m, v, u, j, lo, hi, rowp, cvec, scals[i],
+                          mode="cr1", k_steps=3)[0]
+        np.testing.assert_allclose(np.asarray(batched[i]), np.asarray(ref),
+                                   rtol=TOL, atol=TOL)
+
+
+def test_al_step_rejects_bad_mode():
+    p = _rts_only(synthetic_fleet(4, hours=48, seed=0))
+    args = _raw_inputs(p, "cr1")
+    with pytest.raises(ValueError, match="cr1|cr2"):
+        al_step_ref(*args, mode="cr3", k_steps=1)
+
+
+@pytest.mark.parametrize("steps,k_steps", [(13, 5), (8, 8), (6, 16)])
+def test_fused_inner_chunking_matches_oracle_path(steps, k_steps):
+    """`make_fused_inner` splits inner_steps into full chunks + remainder
+    inside a lax.scan; the Pallas route must equal the oracle route for
+    uneven splits, exact fits, and k_steps > inner_steps (clamped)."""
+    p = _rts_only(synthetic_fleet(8, hours=48, seed=6))
+    lo, hi = _bounds(p)
+    cfg = EngineConfig(inner_steps=steps, outer_steps=1)
+    row = pack_rows(jnp.asarray(p.rts_coeffs), jnp.asarray(p.betas),
+                    jnp.asarray(p.k), jnp.asarray(p.x2_kind),
+                    jnp.asarray(p.is_batch))
+    cvec = -0.01 * jnp.asarray(p.mci, jnp.float32)[None, :]
+    kw = dict(mode="cr1", cfg=cfg, step_scale=1.0, coef0=1.45,
+              k_steps=k_steps, day_hours=p.day_hours)
+    mk = lambda **o: make_fused_inner(           # noqa: E731
+        jnp.asarray(p.usage, jnp.float32), jnp.asarray(p.jobs, jnp.float32),
+        lo.astype(jnp.float32), hi.astype(jnp.float32), row, cvec,
+        **kw, **o)
+    x0 = jnp.zeros((p.W, p.T), jnp.float32)
+    zl = jnp.zeros(0)
+    mu = jnp.asarray(10.0)
+    a = mk(interpret=True)(x0, zl, zl, mu)
+    b = mk(use_ref=True)(x0, zl, zl, mu)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=TOL,
+                               atol=TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,steps", [(CR1(lam=1.45), 200),
+                                          (CR2(cap_frac=0.78, outer=3),
+                                           120)])
+def test_fused_solve_matches_generic_engine(policy, steps):
+    """Semantic check on the real mixed fleet: the fused-kernel solve and
+    the generic autodiff engine land on the same optimum (pp scale) —
+    independent gradient implementations, so hinge-chaos tolerance."""
+    p = synthetic_fleet(16, hours=48, seed=0)
+    a = solve(p, policy, ctx=SolveContext(use_kernel=False, steps=steps))
+    b = solve(p, policy, ctx=SolveContext(use_kernel=True, steps=steps))
+    assert abs(a.carbon_reduction_pct - b.carbon_reduction_pct) < 0.05
+    assert abs(a.total_penalty_pct - b.total_penalty_pct) < 0.05
+    assert b.preservation_violation < 1e-3

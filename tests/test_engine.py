@@ -53,6 +53,69 @@ def test_engine_ineq_constrained():
     np.testing.assert_allclose(np.asarray(x), np.zeros(3), atol=2e-2)
 
 
+def test_engine_moment_dtype_f32_is_default_path():
+    """moment_dtype='float32' must be byte-for-byte the legacy engine (the
+    up/down casts are no-ops)."""
+    def obj(x, _):
+        return ((x - 0.3) ** 2).sum()
+
+    def run(cfg):
+        return al_minimize(obj, lambda x: x, jnp.zeros(5), cfg=cfg)[0]
+
+    a = run(EngineConfig(inner_steps=80, outer_steps=2))
+    b = run(EngineConfig(inner_steps=80, outer_steps=2,
+                         moment_dtype="float32"))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_moment_dtype_bf16_tracks_f32():
+    """bf16 Adam moments with the f32 master copy of x land near the f32
+    optimum (moments only steer step sizes; precision loss is benign)."""
+    c = jnp.asarray([2.0, -1.0, 0.5, 0.5])
+
+    def obj(x, _):
+        return ((x - c) ** 2).sum()
+
+    def eq(x, _):
+        return jnp.atleast_1d(x.sum() - 1.0)
+
+    def run(mdt):
+        cfg = EngineConfig(inner_steps=300, outer_steps=6, lr=0.05,
+                           mu0=1.0, moment_dtype=mdt)
+        return al_minimize(obj, lambda x: x, jnp.zeros(4), eq_residual=eq,
+                           cfg=cfg)[0]
+
+    x32, xbf = run("float32"), run("bfloat16")
+    assert xbf.dtype == jnp.float32          # master copy stays f32
+    np.testing.assert_allclose(np.asarray(xbf), np.asarray(x32), atol=5e-2)
+    expect = np.asarray(c) + (1.0 - float(c.sum())) / 4.0
+    np.testing.assert_allclose(np.asarray(xbf), expect, atol=5e-2)
+
+
+def test_engine_moment_dtype_x64_reference_lane():
+    """Parity lane for the mixed-precision knob: under x64, float64 vs
+    float32 moments agree tightly on a fleet CR1 solve — the moment
+    precision isn't load-bearing at these step counts. Subprocess so x64
+    never leaks into this process's jit caches."""
+    from conftest import run_in_subprocess
+    run_in_subprocess("""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.core.api import CR1, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet
+
+p = synthetic_fleet(6, hours=48, seed=0)
+res = {m: solve(p, CR1(lam=1.45),
+                ctx=SolveContext(steps=200, moment_dtype=m))
+       for m in ("float64", "float32", "bfloat16")}
+r64 = res["float64"].carbon_reduction_pct
+assert abs(res["float32"].carbon_reduction_pct - r64) < 1e-3, res
+assert abs(res["bfloat16"].carbon_reduction_pct - r64) < 0.05, res
+print("ok")
+""", devices=1)
+
+
 def test_engine_batched_sweep_matches_unbatched():
     """vmapped hyper sweep = per-hyper solves (the compile-once Pareto path)."""
     def obj(x, h):

@@ -176,6 +176,45 @@ print("OK")
 """)
 
 
+def test_sharded_fused_kernel_parity():
+    """The fused al_step kernel inside the W-axis shard_map body: each
+    device runs the kernel on its local row block (W=13 -> 16 padded, 2
+    rows/device). Must match the single-device fused solve to <0.01 pp —
+    the kernel math is row-independent, so shard tiling cannot move the
+    optimum."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1, CR2, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet
+from repro.launch.mesh import make_fleet_mesh
+
+mesh = make_fleet_mesh()
+p = synthetic_fleet(13)
+
+obj = lambda r: 1.45 * r.total_penalty_pct - r.carbon_reduction_pct
+a1 = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=250, use_kernel=True))
+b1 = solve(p, CR1(lam=1.45),
+           ctx=SolveContext(steps=250, use_kernel=True, mesh=mesh))
+gap = abs(obj(a1) - obj(b1))
+assert gap < 0.01, f"CR1 fused shard gap {gap}"
+assert b1.D.shape == (13, 48)
+
+a2 = solve(p, CR2(outer=2), ctx=SolveContext(steps=150, use_kernel=True))
+b2 = solve(p, CR2(outer=2),
+           ctx=SolveContext(steps=150, use_kernel=True, mesh=mesh))
+assert abs(a2.carbon_reduction_pct - b2.carbon_reduction_pct) < 0.01
+assert abs(a2.total_penalty_pct - b2.total_penalty_pct) < 0.01
+
+# bf16 moments thread through the sharded path too
+c1 = solve(p, CR1(lam=1.45),
+           ctx=SolveContext(steps=250, use_kernel=True, mesh=mesh,
+                            moment_dtype="bfloat16"))
+gap = abs(obj(c1) - obj(b1))
+assert gap < 0.05, f"bf16 shard gap {gap}"
+print("OK")
+""")
+
+
 def test_sharded_ensemble_parity():
     """Acceptance (ISSUE 5): `evaluate_ensemble` with `ctx.mesh` — the
     scenario axis vmapped INSIDE the W-axis shard_map — matches the

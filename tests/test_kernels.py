@@ -115,6 +115,49 @@ def test_dr_features_matches_core(d):
     np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
+def _grad_pair(d, u, j, w):
+    """Gradient of w·features(d) through the kernel's analytic custom VJP
+    and through plain jnp autodiff of the oracle."""
+    u, j, w = jnp.asarray(u), jnp.asarray(j), jnp.asarray(w)
+
+    def loss(fn):
+        return lambda dd: (fn(dd, u, j) * w).sum()
+
+    return (jax.grad(loss(dr_features))(jnp.asarray(d)),
+            jax.grad(loss(dr_features_ref))(jnp.asarray(d)))
+
+
+def test_dr_features_grad_matches_autodiff():
+    """The hand-written backward pass (strict-> hinge subgradients +
+    reverse cumsums) must equal autodiff of the jnp oracle away from
+    exact hinge ties."""
+    rng = np.random.default_rng(7)
+    d = rng.normal(0.0, 1.0, (6, 48)).astype(np.float32)
+    d[np.abs(d) < 1e-3] += 0.01              # keep off measure-zero ties
+    u = (np.abs(rng.normal(2.0, 0.3, d.shape)) + 0.5).astype(np.float32)
+    j = (np.abs(rng.normal(1.0, 0.2, d.shape)) + 0.1).astype(np.float32)
+    g_k, g_r = _grad_pair(d, u, j, rng.normal(size=4).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dr_features_grad_at_hinge_crossings():
+    """Rows engineered so the running sums cross zero mid-horizon (the
+    active/inactive hinge boundary the analytic VJP gates on): both
+    directions of the crossing, no entry exactly at the tie."""
+    T = 48
+    up_down = np.r_[np.full(T // 2, 0.7), np.full(T // 2, -0.9)]
+    down_up = -up_down
+    d = np.stack([up_down, down_up]).astype(np.float32)
+    u = np.full(d.shape, 2.0, np.float32)
+    j = np.full(d.shape, 1.5, np.float32)
+    assert (np.cumsum(d, axis=1) > 0).any() \
+        and (np.cumsum(d, axis=1) < 0).any()
+    g_k, g_r = _grad_pair(d, u, j, np.ones(4, np.float32))
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("W,T", [(1, 24), (130, 48), (1000, 48)])
 def test_dr_features_shapes(W, T):
     d = jnp.ones((W, T))

@@ -298,6 +298,115 @@ def test_adaptive_warm_budget_validates_and_defaults():
         RollingHorizonSolver(p, stream, warm_steps_min=0)
 
 
+# ---------------------------------------------------------------------------
+# Whole-day scan: run_scanned() / api.solve_day — one dispatch per day
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,use_kernel", [
+    ("cr1", False), ("cr1", True), ("cr2", False), ("cr2", True)])
+def test_run_scanned_matches_per_tick_loop(policy, use_kernel):
+    """Acceptance: the scanned day reproduces the per-tick step() loop to
+    <0.01 pp realized carbon, with identical tick accounting — on both
+    the generic engine and the fused al_step kernel."""
+    p = synthetic_fleet(8, seed=0)
+
+    def mk():
+        return ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=3)
+
+    kw = dict(policy=policy, outer=2, cold_steps=160, warm_steps=40,
+              use_kernel=use_kernel)
+    loop = RollingHorizonSolver(p, mk(), **kw).run(4)
+    scan = RollingHorizonSolver(p, mk(), **kw).run_scanned(4)
+    assert abs(scan.realized_reduction_pct
+               - loop.realized_reduction_pct) < 0.01
+    assert scan.committed.shape == loop.committed.shape == (8, 4)
+    np.testing.assert_allclose(scan.committed, loop.committed, atol=5e-3)
+    assert [t.inner_steps for t in scan.ticks] \
+        == [t.inner_steps for t in loop.ticks]
+    assert [t.forecast_mci for t in scan.ticks] \
+        == [t.forecast_mci for t in loop.ticks]
+    # plan retention contract: full plan on the latest tick only
+    assert scan.ticks[-1].plan is not None
+    assert all(t.plan is None for t in scan.ticks[:-1])
+
+
+def test_run_scanned_is_one_dispatch(monkeypatch):
+    """The whole day funnels through ONE jitted day-scan call (the tick
+    loop is inside lax.scan, not Python)."""
+    import repro.core.api as api
+    p = synthetic_fleet(4, seed=0)
+    stream = ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=1)
+    calls = []
+    orig = api._day_cr1
+    monkeypatch.setattr(
+        api, "_day_cr1",
+        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    rep = RollingHorizonSolver(p, stream, policy="cr1", cold_steps=60,
+                               warm_steps=15).run_scanned(4)
+    assert len(calls) == 1
+    assert [t.inner_steps for t in rep.ticks] == [60, 15, 15, 15]
+    assert rep.total_inner_steps == 60 + 3 * 15
+
+
+def test_run_scanned_warm_continuation():
+    """Mixed schedules work: per-tick steps, then a scanned remainder —
+    the scan warm-starts from (and updates) the solver state."""
+    p = synthetic_fleet(4, seed=0)
+    stream = ForecastStream.caiso(n_ticks=6, horizon=p.T, seed=2)
+    rhs = RollingHorizonSolver(p, stream, policy="cr1", cold_steps=80,
+                               warm_steps=20)
+    rhs.step()
+    rhs.step()
+    rep = rhs.run_scanned(4)
+    assert len(rep.ticks) == 6
+    # ticks 2..5 came from the scan, all warm-budgeted
+    assert [t.inner_steps for t in rep.ticks] == [80] + [20] * 5
+    assert rhs._tick == 6
+    # a second scanned day keeps chaining
+    st = rep.ticks[-1].plan.state
+    assert st is rhs._state
+
+
+def test_run_scanned_guards():
+    p = synthetic_fleet(2, seed=0)
+
+    def mk():
+        return ForecastStream.caiso(n_ticks=2, horizon=p.T)
+
+    with pytest.raises(ValueError, match="adaptive_warm"):
+        RollingHorizonSolver(p, mk(), adaptive_warm=True).run_scanned(2)
+    with pytest.raises(NotImplementedError, match="CR1/CR2"):
+        RollingHorizonSolver(p, mk(), policy="cr3", cold_steps=20,
+                             warm_steps=5).run_scanned(2)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        RollingHorizonSolver(p, mk(), mesh=object()).run_scanned(2)
+    with pytest.raises(ValueError, match="n_ticks"):
+        RollingHorizonSolver(p, mk()).run_scanned(0)
+
+
+def test_solve_day_validates_inputs():
+    from repro.core.api import DayResult, solve_day
+    p = synthetic_fleet(3, seed=0)
+    stack = np.stack([np.asarray(p.mci)] * 2)
+    with pytest.raises(TypeError, match="FleetProblem"):
+        solve_day(object(), "cr1", stack)
+    with pytest.raises(ValueError, match="mci_stack"):
+        solve_day(p, "cr1", stack[:, :10])
+    with pytest.raises(NotImplementedError, match="mesh"):
+        solve_day(p, "cr1", stack, ctx=SolveContext(mesh=object()))
+    with pytest.raises(NotImplementedError, match="host-side"):
+        solve_day(p, "b1", stack)
+    day = solve_day(p, CR1(lam=1.45), stack, cold_steps=40)
+    assert isinstance(day, DayResult)
+    assert day.committed.shape == (2, 3)
+    assert day.inner_steps == (40, 10)
+    # warm chaining across days: every tick at the warm budget
+    day2 = solve_day(p, CR1(lam=1.45), stack,
+                     ctx=SolveContext(warm=day.last.state), cold_steps=40)
+    assert day2.inner_steps == (10, 10)
+    assert np.isfinite(day2.committed).all()
+
+
 @pytest.mark.slow
 def test_rolling_horizon_cr2_carries_multipliers():
     p = synthetic_fleet(4)
