@@ -6,6 +6,7 @@ solver vs the paper's SLSQP, and the Pallas kernels vs their jnp oracles
 carries the structural quantities that transfer)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -402,3 +403,48 @@ def train_throughput() -> list[str]:
     toks = shape.global_batch * shape.seq_len
     return [row("train_step_reduced", us,
                 f"{toks / (us / 1e6):.0f} tok/s loss={float(loss):.3f}")]
+
+
+def fleet_region_scale() -> list[str]:
+    """Multi-region engine at R ∈ {1, 2, 4} × W ∈ {1k, 10k}: CR1 solve
+    latency with per-region segment-summed norms vs the degenerate R=1
+    path (which canonicalizes onto the single-region engine, so its row
+    doubles as the refactor's zero-overhead check), plus the host-side
+    migration post-stage (`fleet_migration`) timed separately — it runs
+    once per committed plan, not per solver step."""
+    from repro.core.api import CR1, SolveContext, solve
+    from repro.core.carbon import regional_traces
+    from repro.core.fleet_solver import (RegionTopology, regional_fleet,
+                                         synthetic_fleet)
+    from repro.core.migration import fleet_migration
+    rows = []
+    states = ("CA", "TX", "NY", "FL")
+    base = synthetic_fleet(256)
+    lam = 1.45
+    cr1 = CR1(lam=lam)
+    for W, steps in ((1_000, 200), (10_000, 80)):
+        for R in (1, 2, 4):
+            mcis, _ = regional_traces(states[:R], 2050, hours=base.T,
+                                      utc_offsets="auto")
+            fleets = [_tiled_fleet(base, W // R, seed=r) for r in range(R)]
+            p = regional_fleet(fleets, mcis)        # no topology: pure solve
+            ctx = SolveContext(steps=steps)
+            solve(p, cr1, ctx=ctx)                  # compile
+            us = timeit(lambda: solve(p, cr1, ctx=ctx), repeats=2, warmup=0)
+            res = solve(p, cr1, ctx=ctx)
+            derived = (f"R={R} W={p.W} steps={steps}"
+                       f" carbon={res.carbon_reduction_pct:.2f}%")
+            if R > 1:
+                ent = float(np.asarray(p.entitlement).sum())
+                bw = np.full((R, R), 0.05 * ent / (R - 1))
+                np.fill_diagonal(bw, 0.0)
+                pt = dataclasses.replace(p, topology=RegionTopology(
+                    cost=np.full((R, R), 2.0), bandwidth=bw))
+                D = np.asarray(res.D)
+                plan = fleet_migration(pt, D)       # warm numpy caches
+                us_mig = timeit(lambda: fleet_migration(pt, D),
+                                repeats=2, warmup=0)
+                derived += (f" mig_ms={us_mig / 1e3:.0f}"
+                            f" mig_net={plan.net_saved:.0f}")
+            rows.append(row(f"fleet_region_R{R}_W{W}", us, derived))
+    return rows

@@ -92,6 +92,7 @@ def main() -> None:
         ("solver_scale", perf_micro.solver_scale),
         ("fleet_cr3_scale", perf_micro.fleet_cr3_scale),
         ("fleet_shard_scale", perf_micro.fleet_shard_scale),
+        ("fleet_region_scale", perf_micro.fleet_region_scale),
         ("streaming_resolve", perf_micro.streaming_resolve),
         ("streaming_day", perf_micro.streaming_day),
         ("scenario_ensemble", scenario_ensemble.scenario_ensemble),

@@ -131,6 +131,34 @@ PY
     python -m benchmarks.report --bench | grep al_step_fused_solve \
     > /dev/null
 
+  echo "== multi-region smoke (R=2 x W=16, CR1 + CR2, migration on/off) =="
+  # The (region x workload) engine end-to-end: per-region pricing under
+  # both policy families, the zero-bandwidth topology staying credit-free,
+  # and the migration post-stage leaving D untouched while crediting the
+  # net saving.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import dataclasses
+import numpy as np
+from repro.core.api import CR1, CR2, SolveContext, solve
+from repro.core.fleet_solver import RegionTopology, synthetic_regional_fleet
+
+p = synthetic_regional_fleet(16, ["CA", "TX"], hours=48, seed=0,
+                             utc_offsets="auto")
+off = dataclasses.replace(
+    p, topology=RegionTopology(cost=np.full((2, 2), 2.0),
+                               bandwidth=np.zeros((2, 2))))
+ctx = SolveContext(steps=120)
+for pol in (CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)):
+    r_on = solve(p, pol, ctx=ctx)
+    r_off = solve(off, pol, ctx=ctx)
+    assert "migration" not in r_off.extras
+    plan = r_on.extras["migration"]
+    np.testing.assert_array_equal(r_on.D, r_off.D)
+    assert plan.net_saved > 0.0
+    assert r_on.carbon_reduction_pct > r_off.carbon_reduction_pct
+print("multi-region smoke OK")
+PY
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

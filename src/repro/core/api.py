@@ -73,16 +73,17 @@ from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
                                      FleetProblem, FleetSolveResult,
                                      _bounds, _enter_tick, _fleet_specs,
                                      _jit_view, _pad_state, _projection,
-                                     _report, cr2_reference_fleet,
-                                     fleet_penalties, pad_fleet,
-                                     resolve_use_kernel)
-from repro.launch.mesh import fleet_axis
+                                     _report, _single_region_view,
+                                     cr2_reference_fleet, fleet_penalties,
+                                     pad_fleet, resolve_use_kernel)
+from repro.launch.mesh import fleet_axes, fleet_device_count
 
 Array = jax.Array
 
 __all__ = ["B1", "B3", "CR1", "CR2", "CR3", "DRPolicy", "DayResult",
            "POLICY_REGISTRY", "SolveContext", "configured_policy",
-           "ensemble", "resolve_policy", "solve", "solve_day", "sweep"]
+           "ensemble", "resolve_policy", "solve", "solve_day",
+           "stack_states", "sweep"]
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +212,9 @@ def solve(problem: FleetProblem, policy, *,
         raise TypeError(
             f"solve() takes a FleetProblem (convert a DRProblem with "
             f"FleetProblem.from_problem); got {type(problem).__name__}")
-    return resolve_policy(policy).solve(problem, ctx or SolveContext())
+    problem = _single_region_view(problem)
+    res = resolve_policy(policy).solve(problem, ctx or SolveContext())
+    return _maybe_migrate(problem, res)
 
 
 def sweep(problem: FleetProblem, policies: Sequence, *,
@@ -222,30 +225,81 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
     `[CR1(lam=l) for l in grid]`, or CR2s sharing `outer`) rides the
     engine's vmap lane as ONE XLA call; with `ctx.mesh` the hyper vmap
     nests inside the W-axis shard_map (sharded Pareto fronts). Everything
-    else — mixed families, non-uniform static knobs, warm/donated
-    contexts, CR3 with a mesh — falls back to a loop of `solve()` calls
-    with identical per-policy semantics, so `sweep` is always safe to
-    call. Sweeps are cold solves: `ctx.warm`/`donate`/`shift`/`reset_mu`
-    force the fallback loop, where a shared `warm` state is reused
-    read-only by every policy (so `donate` is dropped for multi-policy
-    loops — a buffer can only be donated once).
+    else — mixed families, non-uniform static knobs, donated contexts,
+    CR3 with a mesh — falls back to a loop of `solve()` calls with
+    identical per-policy semantics, so `sweep` is always safe to call.
+    Sweeps are cold solves unless warm-started:
+    `ctx.donate`/`shift`/`reset_mu` force the fallback loop, where a
+    shared `warm` state is reused read-only by every policy (so `donate`
+    is dropped for multi-policy loops — a buffer can only be donated
+    once). A *stacked* warm state (leading axis = len(policies), e.g.
+    `stack_states([r.state for r in last_sweep])`) instead rides the
+    CR1/CR2 vmap lane as a warm-started refinement sweep — each lane
+    warm-starts from its own slice, so a Pareto front can be polished
+    with a fraction of the cold step budget.
 
     Results are returned in `policies` order."""
     ctx = ctx or SolveContext()
+    problem = _single_region_view(problem)
     pols = [resolve_policy(pl) for pl in policies]
     if not pols:
         return []
     fam = type(pols[0])
+    stacked = _stacked_warm(ctx.warm, len(pols))
+    warm_ok = ctx.warm is None or (stacked and ctx.mesh is None
+                                   and fam in (CR1, CR2))
     vmappable = (all(type(pl) is fam for pl in pols)
                  and hasattr(fam, "_sweep_family")
                  and fam._sweep_uniform(pols)
-                 and ctx.warm is None and not ctx.donate
+                 and warm_ok and not ctx.donate
                  and not ctx.shift and not ctx.reset_mu)
     if not vmappable:
         if ctx.donate and len(pols) > 1:
             ctx = dataclasses.replace(ctx, donate=False)
-        return [pl.solve(problem, ctx) for pl in pols]
-    return fam._sweep_family(problem, pols, ctx)
+        if stacked:
+            res = [pl.solve(problem, dataclasses.replace(
+                       ctx, warm=jax.tree_util.tree_map(
+                           lambda a, i=i: a[i], ctx.warm)))
+                   for i, pl in enumerate(pols)]
+        else:
+            res = [pl.solve(problem, ctx) for pl in pols]
+    else:
+        res = fam._sweep_family(problem, pols, ctx)
+    return [_maybe_migrate(problem, r) for r in res]
+
+
+def stack_states(states: Sequence[EngineState]) -> EngineState:
+    """Stack per-lane `EngineState`s (e.g. `[r.state for r in sweep(...)]`)
+    along a new leading axis — the warm-start shape `sweep()` expects for
+    a warm refinement sweep (`ctx.warm=stack_states(...)`)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _stacked_warm(warm, n: int) -> bool:
+    """True when `warm` is a lane-stacked EngineState for an n-policy
+    sweep (fleet plans are always 2-D, so a 3-D x means stacked)."""
+    return (isinstance(warm, EngineState) and jnp.ndim(warm.x) == 3
+            and warm.x.shape[0] == n)
+
+
+def _maybe_migrate(p: FleetProblem, res: FleetSolveResult):
+    """Cross-region migration post-stage (see `core.migration`): on
+    multi-region problems with a usable topology, move curtailed batch
+    load along the migration network and credit the net carbon saved.
+    The committed plan D is unchanged — total curtailment and every
+    penalty stay exactly as solved."""
+    if (p.topology is None or not p.is_multiregion
+            or not np.any(np.asarray(p.topology.bandwidth) > 0.0)):
+        return res
+    from repro.core.migration import fleet_migration
+    plan = fleet_migration(p, np.asarray(res.D))
+    wmci = np.asarray(p.mci)[np.asarray(p.region)]
+    carbon_base = float((np.asarray(p.usage) * wmci).sum())
+    return dataclasses.replace(
+        res,
+        carbon_reduction_pct=res.carbon_reduction_pct
+        + 100.0 * plan.net_saved / carbon_base,
+        extras={**res.extras, "migration": plan})
 
 
 def ensemble(problem: FleetProblem, policy, scenarios, *,
@@ -295,15 +349,68 @@ def _al_fused_inner(p: FleetProblem, mode: str, cfg: EngineConfig, *,
 # ---------------------------------------------------------------------------
 # CR1 — Efficient DR (unconstrained trade-off objective)
 # ---------------------------------------------------------------------------
+def _region_rows(p: FleetProblem):
+    """Per-row region scatter helpers for a multi-region problem:
+    `(region, wmci, counts_w)` with `wmci[w] = mci[region[w]]` (W, T) and
+    `counts_w[w]` the row count of w's region. Segment sums over the
+    region ids turn per-region reductions into per-row normalizer
+    vectors — the multi-region twin of the fleet-global scalars, still
+    row-separable so the sharding contract holds (pad rows carry
+    region 0 but their norms are overridden by `_pad_row_norms`)."""
+    region = jnp.asarray(p.region)
+    R = jnp.asarray(p.mci).shape[0]
+    counts = jax.ops.segment_sum(jnp.ones(p.W), region, num_segments=R)
+    return region, jnp.asarray(p.mci)[region], counts[region]
+
+
+def _rsum(x, region, R):
+    """Per-row view of a per-region sum: segment-sum then gather back."""
+    return jax.ops.segment_sum(x, region, num_segments=R)[region]
+
+
 def _cr1_norms(p: FleetProblem):
     """Fleet-global CR1 reductions (normalizers + shared step scale) —
     computed from the TRUE fleet before any device padding, then passed
-    into the sharded solve as replicated scalars."""
+    into the sharded solve as replicated scalars.
+
+    Multi-region problems get the per-REGION twin: each region is
+    normalized on its own entitlement/carbon/step reductions (scattered
+    back to per-row vectors), so with zero migration bandwidth the joint
+    solve decomposes exactly into R independent single-region solves."""
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
+    if mci.ndim == 2:
+        region, wmci, counts_w = _region_rows(p)
+        R = mci.shape[0]
+        pen_w = 100.0 / _rsum(jnp.asarray(p.entitlement), region, R)
+        car_w = 100.0 / _rsum((jnp.asarray(p.usage) * wmci).sum(1),
+                              region, R)
+        rowmeans = jnp.maximum(hi - lo, 1e-6).mean(axis=1)
+        step_w = (_rsum(rowmeans, region, R) / counts_w)[:, None]
+        return pen_w, car_w, step_w
     return (100.0 / jnp.asarray(p.entitlement).sum(),
             100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
             jnp.maximum(hi - lo, 1e-6).mean())
+
+
+def _pad_row_norms(norms, W_pad: int, fills):
+    """Pad per-row multi-region norm vectors to the device-padded W.
+    Fill values keep pad rows inert (0 for weights so they contribute
+    nothing, 1 for step/scale divisors so nothing blows up)."""
+    out = []
+    for a, f in zip(norms, fills):
+        a = jnp.asarray(a)
+        pad = W_pad - a.shape[0]
+        out.append(a if pad == 0 else jnp.concatenate(
+            [a, jnp.full((pad,) + a.shape[1:], f, a.dtype)]))
+    return tuple(out)
+
+
+def _norm_specs(p: FleetProblem, axis, n: int = 3):
+    """shard_map specs for a norms tuple: replicated scalars for the
+    single-region path, row-sharded vectors for multi-region."""
+    one = P() if np.ndim(p.mci) == 1 else P(axis)
+    return (one,) * n
 
 
 def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
@@ -312,9 +419,17 @@ def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
     pen_norm, car_norm, step_scale = \
         _cr1_norms(p) if norms is None else norms
 
-    def objective(D: Array, lam) -> Array:
-        return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
-                - car_norm * (D @ mci).sum())
+    if mci.ndim == 2:
+        wmci = mci[jnp.asarray(p.region)]
+
+        def objective(D: Array, lam) -> Array:
+            return ((lam * pen_norm
+                     * fleet_penalties(p, D, use_kernel)).sum()
+                    - (car_norm[:, None] * D * wmci).sum())
+    else:
+        def objective(D: Array, lam) -> Array:
+            return (lam * pen_norm * fleet_penalties(p, D, use_kernel).sum()
+                    - car_norm * (D @ mci).sum())
 
     project = _projection(p, lo, hi)
     return objective, project, step_scale
@@ -327,9 +442,9 @@ def _cr1_cfg(steps: int, moment_dtype: str = "float32") -> EngineConfig:
 
 def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
               use_kernel: bool, shift: int = 0, reset_mu: bool = False,
-              moment_dtype: str = "float32"):
+              moment_dtype: str = "float32", norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
-    norms = _cr1_norms(p)
+    norms = _cr1_norms(p) if norms is None else norms
     objective, project, step_scale = _cr1_pieces(p, use_kernel, norms=norms)
     cfg = _cr1_cfg(steps, moment_dtype)
     fused = _al_fused_inner(p, "cr1", cfg, car_norm=norms[1],
@@ -352,7 +467,7 @@ def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
                       reset_mu: bool = False,
                       moment_dtype: str = "float32"):
     state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
     cfg = _cr1_cfg(steps, moment_dtype)
 
     def build(blk):
@@ -369,7 +484,7 @@ def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
 
     D, aux = al_minimize_sharded(
         build, (p, lam, norms), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
+        data_specs=(_fleet_specs(p, axis), P(), _norm_specs(p, axis)),
         init=state0, cfg=cfg)
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
@@ -383,21 +498,22 @@ _cr1_run_sharded_donated = jax.jit(_cr1_impl_sharded,
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "use_kernel"))
-def _cr1_sweep_run(p: FleetProblem, lams, steps: int, use_kernel: bool):
+def _cr1_sweep_run(p: FleetProblem, lams, init: EngineState, steps: int,
+                   use_kernel: bool):
     norms = _cr1_norms(p)
     objective, project, step_scale = _cr1_pieces(p, use_kernel, norms=norms)
     cfg = _cr1_cfg(steps)
 
-    def solve_one(lam):
+    def solve_one(lam, st):
         fused = _al_fused_inner(
             p, "cr1", cfg, car_norm=norms[1], step_scale=step_scale,
             coef0=lam * norms[0]) if use_kernel else None
-        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                           hyper=lam, step_scale=step_scale, cfg=cfg,
-                           fused_inner=fused)
-        return D, fleet_penalties(p, D, use_kernel)
+        D, aux = al_minimize(objective, project, st.x,
+                             hyper=lam, step_scale=step_scale, init=st,
+                             cfg=cfg, fused_inner=fused)
+        return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
-    return jax.vmap(solve_one)(lams)
+    return jax.vmap(solve_one)(lams, init)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "steps", "use_kernel"))
@@ -406,7 +522,7 @@ def _cr1_sweep_sharded(p: FleetProblem, lams, norms, mesh, steps: int,
     """The λ grid vmapped INSIDE the W-axis shard_map: every device solves
     its row block for all grid points in one call (sharded Pareto lane)."""
     from jax.experimental.shard_map import shard_map
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
 
     def body(pb, lams_b, norms_b):
         objective, project, step_scale = _cr1_pieces(pb, use_kernel,
@@ -427,8 +543,9 @@ def _cr1_sweep_sharded(p: FleetProblem, lams, norms, mesh, steps: int,
 
     return shard_map(
         body, mesh=mesh,
-        in_specs=(_fleet_specs(p, axis), P(), (P(), P(), P())),
-        out_specs=(P(None, axis), P(None, axis)))(p, lams, norms)
+        in_specs=(_fleet_specs(p, axis), P(), _norm_specs(p, axis)),
+        out_specs=(P(None, axis), P(None, axis)),
+        check_rep=False)(p, lams, norms)
 
 
 @_register
@@ -446,7 +563,8 @@ class CR1:
 
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
-        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        use_kernel = resolve_use_kernel(ctx.use_kernel) \
+            and not p.is_multiregion
         steps = ctx.resolved_steps(self)
         warm = ctx.warm
         if ctx.mesh is None:
@@ -459,8 +577,10 @@ class CR1:
                                  moment_dtype=ctx.moment_dtype)
             return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
                            state=state)
-        pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+        pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr1_norms(p)
+        if p.is_multiregion:
+            norms = _pad_row_norms(norms, pp.W, (0.0, 0.0, 1.0))
         warm = _pad_state(warm, pp.W) if warm is not None \
             else EngineState.cold(jnp.zeros(pp.usage.shape))
         run = _cr1_run_sharded_donated if ctx.donate else _cr1_run_sharded
@@ -479,20 +599,34 @@ class CR1:
     @classmethod
     def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR1"],
                       ctx: SolveContext) -> list[FleetSolveResult]:
-        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        use_kernel = resolve_use_kernel(ctx.use_kernel) \
+            and not p.is_multiregion
         steps = ctx.steps if ctx.steps is not None else cls.default_steps
         lams = jnp.asarray([pl.lam for pl in policies], jnp.float32)
+        N = len(policies)
         if ctx.mesh is None:
             W = p.W
-            Ds, pens = _cr1_sweep_run(_jit_view(p), lams, steps, use_kernel)
+            init = ctx.warm if ctx.warm is not None else EngineState(
+                x=jnp.zeros((N,) + p.usage.shape),
+                lam_eq=jnp.zeros((N, 0)), lam_in=jnp.zeros((N, 0)),
+                mu=jnp.full((N,), CR1_MU0))
+            Ds, pens, states = _cr1_sweep_run(_jit_view(p), lams, init,
+                                              steps, use_kernel)
         else:
-            pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
-            Ds, pens = _cr1_sweep_sharded(pp, lams, _cr1_norms(p),
+            pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
+            norms = _cr1_norms(p)
+            if p.is_multiregion:
+                norms = _pad_row_norms(norms, pp.W, (0.0, 0.0, 1.0))
+            Ds, pens = _cr1_sweep_sharded(pp, lams, norms,
                                           mesh=ctx.mesh, steps=steps,
                                           use_kernel=use_kernel)
+            states = None
         return [_report(p, np.asarray(D)[:W], np.asarray(pen)[:W],
-                        iters=steps)
-                for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
+                        iters=steps,
+                        state=None if states is None else
+                        jax.tree_util.tree_map(lambda a, i=i: a[i], states))
+                for i, (D, pen) in enumerate(zip(np.asarray(Ds),
+                                                 np.asarray(pens)))]
 
 
 # ---------------------------------------------------------------------------
@@ -500,9 +634,19 @@ class CR1:
 # ---------------------------------------------------------------------------
 def _cr2_norms(p: FleetProblem, refs):
     """Fleet-global CR2 reductions (carbon normalizer, equality-residual
-    scale, shared step scale) from the TRUE fleet before padding."""
+    scale, shared step scale) from the TRUE fleet before padding. Per-
+    region twin for multi-region problems, as in `_cr1_norms`."""
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
+    if mci.ndim == 2:
+        region, wmci, counts_w = _region_rows(p)
+        R = mci.shape[0]
+        car_w = 100.0 / _rsum((jnp.asarray(p.usage) * wmci).sum(1),
+                              region, R)
+        scale_w = jnp.maximum(_rsum(refs, region, R) / counts_w, 1e-3)
+        rowmeans = jnp.maximum(hi - lo, 1e-6).mean(axis=1)
+        step_w = (_rsum(rowmeans, region, R) / counts_w)[:, None]
+        return car_w, scale_w, step_w
     return (100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
             jnp.maximum(refs.mean(), 1e-3),
             jnp.maximum(hi - lo, 1e-6).mean())
@@ -514,8 +658,14 @@ def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
     car_norm, scale, step_scale = \
         _cr2_norms(p, refs) if norms is None else norms
 
-    def objective(D: Array, _) -> Array:
-        return -car_norm * (D @ mci).sum()
+    if mci.ndim == 2:
+        wmci = mci[jnp.asarray(p.region)]
+
+        def objective(D: Array, _) -> Array:
+            return -(car_norm[:, None] * D * wmci).sum()
+    else:
+        def objective(D: Array, _) -> Array:
+            return -car_norm * (D @ mci).sum()
 
     def eq(D: Array, _) -> Array:
         return (fleet_penalties(p, D, use_kernel) - refs) / scale
@@ -531,9 +681,10 @@ def _cr2_cfg(steps: int, outer: int,
 
 def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
               outer: int, use_kernel: bool, shift: int = 0,
-              reset_mu: bool = False, moment_dtype: str = "float32"):
+              reset_mu: bool = False, moment_dtype: str = "float32",
+              norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
-    norms = _cr2_norms(p, refs)
+    norms = _cr2_norms(p, refs) if norms is None else norms
     objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel,
                                                      norms=norms)
     cfg = _cr2_cfg(steps, outer, moment_dtype)
@@ -558,7 +709,7 @@ def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
                       shift: int = 0, reset_mu: bool = False,
                       moment_dtype: str = "float32"):
     state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
     cfg = _cr2_cfg(steps, outer, moment_dtype)
 
     def build(blk):
@@ -575,7 +726,7 @@ def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
 
     D, aux = al_minimize_sharded(
         build, (p, refs, norms), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), P(axis), (P(), P(), P())),
+        data_specs=(_fleet_specs(p, axis), P(axis), _norm_specs(p, axis)),
         init=state0, cfg=cfg)
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
@@ -589,9 +740,9 @@ _cr2_run_sharded_donated = jax.jit(_cr2_impl_sharded,
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "outer", "use_kernel"))
-def _cr2_sweep_run(p: FleetProblem, refs_stack, steps: int, outer: int,
-                   use_kernel: bool):
-    def solve_one(refs):
+def _cr2_sweep_run(p: FleetProblem, refs_stack, init: EngineState,
+                   steps: int, outer: int, use_kernel: bool):
+    def solve_one(refs, st):
         norms = _cr2_norms(p, refs)
         objective, eq, project, step_scale = _cr2_pieces(p, refs,
                                                          use_kernel,
@@ -600,12 +751,12 @@ def _cr2_sweep_run(p: FleetProblem, refs_stack, steps: int, outer: int,
         fused = _al_fused_inner(
             p, "cr2", cfg, car_norm=norms[0], step_scale=step_scale,
             scale=norms[1], refs=refs) if use_kernel else None
-        D, _ = al_minimize(objective, project, jnp.zeros(p.usage.shape),
-                           eq_residual=eq, step_scale=step_scale,
-                           cfg=cfg, fused_inner=fused)
-        return D, fleet_penalties(p, D, use_kernel)
+        D, aux = al_minimize(objective, project, st.x,
+                             eq_residual=eq, step_scale=step_scale,
+                             init=st, cfg=cfg, fused_inner=fused)
+        return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
-    return jax.vmap(solve_one)(refs_stack)
+    return jax.vmap(solve_one)(refs_stack, init)
 
 
 @functools.partial(jax.jit,
@@ -613,7 +764,7 @@ def _cr2_sweep_run(p: FleetProblem, refs_stack, steps: int, outer: int,
 def _cr2_sweep_sharded(p: FleetProblem, refs_stack, norms_stack, mesh,
                        steps: int, outer: int, use_kernel: bool):
     from jax.experimental.shard_map import shard_map
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
 
     def body(pb, refs_b, norms_b):
         def solve_one(refs, norms):
@@ -631,11 +782,13 @@ def _cr2_sweep_sharded(p: FleetProblem, refs_stack, norms_stack, mesh,
 
         return jax.vmap(solve_one)(refs_b, norms_b)
 
+    nspec = P() if np.ndim(p.mci) == 1 else P(None, axis)
     return shard_map(
         body, mesh=mesh,
-        in_specs=(_fleet_specs(p, axis), P(None, axis), (P(), P(), P())),
-        out_specs=(P(None, axis), P(None, axis)))(p, refs_stack,
-                                                  norms_stack)
+        in_specs=(_fleet_specs(p, axis), P(None, axis),
+                  (nspec, nspec, nspec)),
+        out_specs=(P(None, axis), P(None, axis)),
+        check_rep=False)(p, refs_stack, norms_stack)
 
 
 @_register
@@ -654,7 +807,8 @@ class CR2:
 
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
-        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        use_kernel = resolve_use_kernel(ctx.use_kernel) \
+            and not p.is_multiregion
         steps = ctx.resolved_steps(self)
         warm = ctx.warm
         refs = jnp.asarray(cr2_reference_fleet(p, self.cap_frac))
@@ -669,8 +823,10 @@ class CR2:
                                  moment_dtype=ctx.moment_dtype)
             return _report(p, np.asarray(D), np.asarray(pens),
                            iters=steps * self.outer, state=state)
-        pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+        pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr2_norms(p, refs)
+        if p.is_multiregion:
+            norms = _pad_row_norms(norms, pp.W, (0.0, 1.0, 1.0))
         refs_p = jnp.concatenate([refs, jnp.zeros(pp.W - W, refs.dtype)])
         warm = _pad_state(warm, pp.W) if warm is not None \
             else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
@@ -693,20 +849,30 @@ class CR2:
     @classmethod
     def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR2"],
                       ctx: SolveContext) -> list[FleetSolveResult]:
-        use_kernel = resolve_use_kernel(ctx.use_kernel)
+        use_kernel = resolve_use_kernel(ctx.use_kernel) \
+            and not p.is_multiregion
         steps = ctx.steps if ctx.steps is not None else cls.default_steps
         outer = policies[0].outer
+        N = len(policies)
         refs = [jnp.asarray(cr2_reference_fleet(p, pl.cap_frac))
                 for pl in policies]
         if ctx.mesh is None:
             W = p.W
-            Ds, pens = _cr2_sweep_run(_jit_view(p), jnp.stack(refs), steps,
-                                      outer, use_kernel)
+            init = ctx.warm if ctx.warm is not None else EngineState(
+                x=jnp.zeros((N,) + p.usage.shape),
+                lam_eq=jnp.zeros((N, p.W)), lam_in=jnp.zeros((N, 0)),
+                mu=jnp.full((N,), CR2_MU0))
+            Ds, pens, states = _cr2_sweep_run(_jit_view(p), jnp.stack(refs),
+                                              init, steps, outer,
+                                              use_kernel)
         else:
-            pp, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+            pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
             # per-lane global norms from the TRUE fleet; per-lane padded
             # refs (pad residuals are identically zero).
             norms = [_cr2_norms(p, r) for r in refs]
+            if p.is_multiregion:
+                norms = [_pad_row_norms(n, pp.W, (0.0, 1.0, 1.0))
+                         for n in norms]
             norms_stack = tuple(jnp.stack([n[i] for n in norms])
                                 for i in range(3))
             refs_p = jnp.stack([
@@ -716,9 +882,13 @@ class CR2:
                                           mesh=ctx.mesh, steps=steps,
                                           outer=outer,
                                           use_kernel=use_kernel)
+            states = None
         return [_report(p, np.asarray(D)[:W], np.asarray(pen)[:W],
-                        iters=steps * outer)
-                for D, pen in zip(np.asarray(Ds), np.asarray(pens))]
+                        iters=steps * outer,
+                        state=None if states is None else
+                        jax.tree_util.tree_map(lambda a, i=i: a[i], states))
+                for i, (D, pen) in enumerate(zip(np.asarray(Ds),
+                                                 np.asarray(pens)))]
 
 
 # ---------------------------------------------------------------------------
@@ -729,7 +899,10 @@ def _cr3_pieces(p: FleetProblem, use_kernel: bool, reg_scale):
 
     Everything here is row-separable; `reg_scale` is the regularizer
     normalizer 1e-3/(W_true·T), passed in so a padded sharded solve
-    regularizes identically to the unpadded single-device one.
+    regularizes identically to the unpadded single-device one. On
+    multi-region problems it is the per-row (W, 1) vector
+    1e-3/(W_region·T) and ρ is a per-region (R,) price vector, so each
+    region's market is exactly its standalone single-region market.
 
     Numerics, validated against the per-workload SLSQP reference:
       * tiny quadratic regularizer — a selfish workload takes the *minimal*
@@ -746,16 +919,32 @@ def _cr3_pieces(p: FleetProblem, use_kernel: bool, reg_scale):
     E = jnp.asarray(p.entitlement)
     mci = jnp.asarray(p.mci)
     tau = 0.02 * E
+    multi = mci.ndim == 2
+    if multi:
+        region = jnp.asarray(p.region)
+        wmci = mci[region]
 
-    def objective(D: Array, hyper) -> Array:
-        reg = reg_scale * ((D / E[:, None]) ** 2).sum()
-        return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
+        def objective(D: Array, hyper) -> Array:
+            reg = (reg_scale * (D / E[:, None]) ** 2).sum()
+            return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
 
-    def ineq(D: Array, hyper) -> Array:
-        rho_, tax_ = hyper
-        rebate = rho_ * (D @ mci)
-        peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None], axis=1)
-        return ((1.0 - tax_) * E + rebate - peak) / E
+        def ineq(D: Array, hyper) -> Array:
+            rho_, tax_ = hyper
+            rebate = rho_[region] * (D * wmci).sum(1)
+            peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None],
+                                          axis=1)
+            return ((1.0 - tax_) * E + rebate - peak) / E
+    else:
+        def objective(D: Array, hyper) -> Array:
+            reg = reg_scale * ((D / E[:, None]) ** 2).sum()
+            return (fleet_penalties(p, D, use_kernel) / E).sum() + reg
+
+        def ineq(D: Array, hyper) -> Array:
+            rho_, tax_ = hyper
+            rebate = rho_ * (D @ mci)
+            peak = tau * jax.nn.logsumexp((usage - D) / tau[:, None],
+                                          axis=1)
+            return ((1.0 - tax_) * E + rebate - peak) / E
 
     W, T = p.usage.shape
     n_days = max(1, T // p.day_hours)
@@ -810,9 +999,11 @@ def _cr3_impl_sharded(p: FleetProblem, rho, tax_frac, reg_scale,
                       reset_mu: bool = False):
     """Sharded best response: the allowance inequality, its multipliers and
     the per-row step scale all live with their rows; only ρ/tax/reg_scale
-    are replicated. The Eq.-6 fiscal sums live in `CR3.solve`."""
+    are replicated (multi-region: ρ stays a replicated (R,) vector and
+    reg_scale shards with its rows). The Eq.-6 fiscal sums live in
+    `CR3.solve`."""
     state0 = _enter_tick(state0, shift, reset_mu, CR3_MU0)
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
 
     def build(blk):
         pb, hyper_b, reg_b = blk
@@ -822,9 +1013,10 @@ def _cr3_impl_sharded(p: FleetProblem, rho, tax_frac, reg_scale,
                     ineq_residual=ineq, step_scale=step_scale,
                     grad_transform=day_tangent)
 
+    reg_spec = P() if np.ndim(p.mci) == 1 else P(axis)
     D, aux = al_minimize_sharded(
         build, (p, (rho, tax_frac), reg_scale), mesh=mesh, axis_name=axis,
-        data_specs=(_fleet_specs(p, axis), (P(), P()), P()),
+        data_specs=(_fleet_specs(p, axis), (P(), P()), reg_spec),
         init=state0, cfg=_cr3_cfg(steps, outer))
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
@@ -895,6 +1087,8 @@ class CR3:
 
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
+        if p.is_multiregion:
+            return self._solve_multiregion(p, ctx)
         use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.resolved_steps(self)
         mci = np.asarray(p.mci)
@@ -907,7 +1101,7 @@ class CR3:
             twin = _cr3_best_response_donated if ctx.donate \
                 else _cr3_best_response
         else:
-            pj, W = pad_fleet(p, ctx.mesh.shape[fleet_axis(ctx.mesh)])
+            pj, W = pad_fleet(p, fleet_device_count(ctx.mesh))
             state = _pad_state(ctx.warm, pj.W) if ctx.warm is not None \
                 else EngineState.cold(jnp.zeros(pj.usage.shape), n_in=pj.W,
                                       mu0=CR3_MU0)
@@ -946,6 +1140,96 @@ class CR3:
                        extras={"rho": rho_cur, "balanced": balanced,
                                "fiscal_deficit": deficit})
 
+    def _solve_multiregion(self, p: FleetProblem,
+                           ctx: SolveContext) -> FleetSolveResult:
+        """Per-region fiscal clearing: each region runs its own Eq.-6
+        market (its taxes cover its rebates at its own clearing price
+        ρ_r), so `extras["rho"]` is an (R,) vector. Every clearing round
+        re-solves the whole fleet in one engine call, but regions that
+        already cleared keep their frozen plan/state — each region's
+        trajectory is exactly what its standalone single-region solve
+        would produce (the zero-bandwidth decomposition tests rely on
+        this)."""
+        use_kernel = False   # kernel packing is single-region only
+        steps = ctx.resolved_steps(self)
+        mci = np.asarray(p.mci)
+        region = np.asarray(p.region)
+        R = p.R
+        wmci = mci[region]
+        counts = np.bincount(region, minlength=R)
+        collected = self.tax_frac * np.bincount(
+            region, weights=np.asarray(p.entitlement, float), minlength=R)
+        rho_cur = np.full(R, float(self.rho))
+        reg_scale = jnp.asarray((1e-3 / (counts * p.T))[region][:, None])
+        if ctx.mesh is None:
+            pj, W = _jit_view(p), p.W
+            state = ctx.warm if ctx.warm is not None else EngineState.cold(
+                jnp.zeros(p.usage.shape), n_in=p.W, mu0=CR3_MU0)
+            twin = _cr3_best_response_donated if ctx.donate \
+                else _cr3_best_response
+        else:
+            pj, W = pad_fleet(p, fleet_device_count(ctx.mesh))
+            reg_scale = jnp.concatenate(
+                [reg_scale, jnp.ones((pj.W - W, 1), reg_scale.dtype)])
+            state = _pad_state(ctx.warm, pj.W) if ctx.warm is not None \
+                else EngineState.cold(jnp.zeros(pj.usage.shape), n_in=pj.W,
+                                      mu0=CR3_MU0)
+            twin = _cr3_sharded_donated if ctx.donate else _cr3_sharded
+        region_pad = np.asarray(pj.region)
+
+        def best_response(st, shift_, reset_):
+            kw = {} if ctx.mesh is None else {"mesh": ctx.mesh}
+            return twin(pj, jnp.asarray(rho_cur, jnp.float32),
+                        self.tax_frac, reg_scale, st, steps=steps,
+                        outer=self.outer, use_kernel=use_kernel,
+                        shift=shift_, reset_mu=reset_, **kw)
+
+        def paid_of(D):
+            return rho_cur * np.bincount(
+                region, weights=(D * wmci).sum(1), minlength=R)
+
+        D, pens, state = best_response(state, ctx.shift, ctx.reset_mu)
+        D, pens = np.asarray(D)[:W], np.asarray(pens)[:W]
+        rounds = 1
+        paid = paid_of(D)
+        for _ in range(self.clearing_iters):
+            active = paid > collected + 1e-9
+            if not active.any():
+                break
+            rho_cur = np.where(
+                active,
+                rho_cur * np.maximum(0.5, 0.9 * collected
+                                     / np.maximum(paid, 1e-9)),
+                rho_cur)
+            Dn, pensn, staten = best_response(state, 0, True)
+            row = active[region]
+            D = np.where(row[:, None], np.asarray(Dn)[:W], D)
+            pens = np.where(row, np.asarray(pensn)[:W], pens)
+            # μ is reset every round so it is round-count independent;
+            # lam_eq is empty for CR3 — only x and the allowance
+            # multipliers need per-row freezing.
+            mask = jnp.asarray(active[region_pad])
+            state = EngineState(
+                x=jnp.where(mask[:, None], staten.x, state.x),
+                lam_eq=staten.lam_eq,
+                lam_in=jnp.where(mask, staten.lam_in, state.lam_in),
+                mu=staten.mu)
+            rounds += 1
+            paid = paid_of(D)
+        balanced = paid <= collected + 1e-9
+        deficit = np.where(balanced, 0.0, paid - collected)
+        if not balanced.all():
+            worst = int(np.argmax(deficit))
+            _cr3_unbalanced_warn(self.clearing_iters,
+                                 float(deficit.sum()),
+                                 float(rho_cur[worst]),
+                                 "CR3.solve (multi-region)")
+        return _report(p, D, pens,
+                       iters=steps * self.outer * rounds, state=state,
+                       extras={"rho": rho_cur,
+                               "balanced": bool(balanced.all()),
+                               "fiscal_deficit": float(deficit.sum())})
+
     # -- vmapped sweep lane -------------------------------------------------
     @classmethod
     def _sweep_uniform(cls, policies: Sequence["CR3"]) -> bool:
@@ -956,9 +1240,10 @@ class CR3:
     @classmethod
     def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR3"],
                       ctx: SolveContext) -> list[FleetSolveResult]:
-        if ctx.mesh is not None:
+        if ctx.mesh is not None or p.is_multiregion:
             # vmap-of-shard_map best responses with per-lane host clearing
-            # is a ROADMAP follow-up; sharded CR3 grids solve per policy.
+            # is a ROADMAP follow-up, and multi-region clearing tracks an
+            # (R,) price vector per lane; both solve per policy.
             return [pl.solve(p, ctx) for pl in policies]
         use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.steps if ctx.steps is not None else cls.default_steps
@@ -1075,36 +1360,40 @@ class DayResult:
     inner_steps: tuple[int, ...]
 
 
-def _day_impl(p: FleetProblem, mci_stack, state0: EngineState, tick_solve,
+def _day_impl(p: FleetProblem, xs, state0: EngineState, tick_solve,
               warm_steps: int, first_steps: int, first_shift: int,
               first_reset: bool):
     """Shared whole-day loop: tick 0 outside the scan (its step budget /
     shift / mu-reset differ), then `lax.scan` over the remaining forecast
     rows, each iteration fusing window-roll + `EngineState.shifted` +
-    mu-reset + warm re-solve. `tick_solve(p_t, st, steps, shift,
-    reset_mu) -> (D, pens, state)` is a policy impl (pure/traceable)."""
+    mu-reset + warm re-solve. `xs` is any pytree with a leading n_ticks
+    axis (per-tick forecasts, plus per-tick norms on the sharded path);
+    `tick_solve(p_t, x_t, st, steps, shift, reset_mu) -> (D, pens,
+    state)` is a policy impl (pure/traceable) that installs its slice
+    `x_t` into the windowed problem."""
     usage = jnp.asarray(p.usage)
     jobs = jnp.asarray(p.jobs)
     upper = None if p.upper is None else jnp.asarray(p.upper)
+    tmap = jax.tree_util.tree_map
 
     def roll(a):
         return None if a is None else jnp.roll(a, -1, axis=1)
 
-    p0 = dataclasses.replace(p, mci=mci_stack[0])
-    D, pens, st = tick_solve(p0, state0, first_steps, first_shift,
-                             first_reset)
+    D, pens, st = tick_solve(p, tmap(lambda a: a[0], xs), state0,
+                             first_steps, first_shift, first_reset)
 
-    def body(carry, mci_t):
+    def body(carry, x_t):
         st, usage, jobs, upper, _, _ = carry
         usage, jobs, upper = roll(usage), roll(jobs), roll(upper)
-        p_t = dataclasses.replace(p, mci=mci_t, usage=usage, jobs=jobs,
-                                  upper=upper)
-        D, pens, st = tick_solve(p_t, st, warm_steps, 1, True)
+        p_t = dataclasses.replace(p, usage=usage, jobs=jobs, upper=upper)
+        D, pens, st = tick_solve(p_t, x_t, st, warm_steps, 1, True)
         return (st, usage, jobs, upper, D, pens), D[:, 0]
 
     carry = (st, usage, jobs, upper, D, pens)
-    if mci_stack.shape[0] > 1:
-        carry, committed_w = jax.lax.scan(body, carry, mci_stack[1:])
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if n > 1:
+        carry, committed_w = jax.lax.scan(body, carry,
+                                          tmap(lambda a: a[1:], xs))
         committed = jnp.concatenate([D[:, 0][None], committed_w], axis=0)
     else:
         committed = D[:, 0][None]
@@ -1115,7 +1404,8 @@ def _day_impl(p: FleetProblem, mci_stack, state0: EngineState, tick_solve,
 def _day_cr1_impl(p: FleetProblem, lam, mci_stack, state0: EngineState,
                   warm_steps: int, first_steps: int, first_shift: int,
                   first_reset: bool, use_kernel: bool, moment_dtype: str):
-    def tick_solve(p_t, st, steps, shift, reset_mu):
+    def tick_solve(p_t, mci_t, st, steps, shift, reset_mu):
+        p_t = dataclasses.replace(p_t, mci=mci_t)
         return _cr1_impl(p_t, lam, st, steps, use_kernel, shift, reset_mu,
                          moment_dtype)
 
@@ -1136,7 +1426,8 @@ def _day_cr2_impl(p: FleetProblem, cap_frac, mci_stack,
                   use_kernel: bool, moment_dtype: str):
     E = jnp.asarray(p.entitlement)[:, None]
 
-    def tick_solve(p_t, st, steps, shift, reset_mu):
+    def tick_solve(p_t, mci_t, st, steps, shift, reset_mu):
+        p_t = dataclasses.replace(p_t, mci=mci_t)
         # Per-window fairness targets, recomputed in-scan (the jnp twin
         # of `cr2_reference_fleet`).
         d_cap = jnp.maximum(jnp.asarray(p_t.usage) - cap_frac * E, 0.0)
@@ -1153,6 +1444,118 @@ _DAY_CR2_STATIC = ("warm_steps", "first_steps", "first_shift",
 _day_cr2 = jax.jit(_day_cr2_impl, static_argnames=_DAY_CR2_STATIC)
 _day_cr2_donated = jax.jit(_day_cr2_impl, static_argnames=_DAY_CR2_STATIC,
                            donate_argnums=(3,))
+
+
+def _day_cr1_impl_sharded(p: FleetProblem, lam, mci_stack, norms_stack,
+                          state0: EngineState, mesh, warm_steps: int,
+                          first_steps: int, first_shift: int,
+                          first_reset: bool, use_kernel: bool,
+                          moment_dtype: str):
+    """The whole-day CR1 scan INSIDE the W-axis shard_map: each device
+    scans its row block through every tick of the day, so a full
+    rolling-horizon day is still one dispatch on a fleet mesh. Per-tick
+    fleet-global norms ride in as a replicated (n, ...) stack computed
+    host-side from the TRUE fleet (the in-scan twin of the solo path's
+    per-tick `_cr1_norms`)."""
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axes(mesh)
+
+    def body(pb, lam_b, mci_s, norms_s, st0):
+        def tick_solve(p_t, x_t, st, steps, shift, reset_mu):
+            mci_t, norms_t = x_t
+            p_t = dataclasses.replace(p_t, mci=mci_t)
+            return _cr1_impl(p_t, lam_b, st, steps, use_kernel, shift,
+                             reset_mu, moment_dtype, norms=norms_t)
+
+        return _day_impl(pb, (mci_s, norms_s), st0, tick_solve,
+                         warm_steps, first_steps, first_shift, first_reset)
+
+    state_specs = EngineState(x=P(axis), lam_eq=P(axis), lam_in=P(axis),
+                              mu=P())
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), P(), P(), (P(), P(), P()),
+                  state_specs),
+        out_specs=(P(None, axis), P(axis), P(axis), state_specs),
+        check_rep=False)(p, lam, mci_stack, norms_stack, state0)
+
+
+_DAY_CR1_STATIC_SH = ("mesh", "warm_steps", "first_steps", "first_shift",
+                      "first_reset", "use_kernel", "moment_dtype")
+_day_cr1_sharded = jax.jit(_day_cr1_impl_sharded,
+                           static_argnames=_DAY_CR1_STATIC_SH)
+_day_cr1_sharded_donated = jax.jit(_day_cr1_impl_sharded,
+                                   static_argnames=_DAY_CR1_STATIC_SH,
+                                   donate_argnums=(4,))
+
+
+def _day_cr2_impl_sharded(p: FleetProblem, cap_frac, mci_stack,
+                          norms_stack, state0: EngineState, mesh,
+                          warm_steps: int, first_steps: int,
+                          first_shift: int, first_reset: bool, outer: int,
+                          use_kernel: bool, moment_dtype: str):
+    """CR2 twin of `_day_cr1_impl_sharded`: fairness refs are recomputed
+    in-scan from the local row block (row-separable), while the fleet-
+    global norms (carbon normalizer, residual scale, step scale) ride in
+    per tick from the TRUE fleet."""
+    from jax.experimental.shard_map import shard_map
+    axis = fleet_axes(mesh)
+
+    def body(pb, cap_b, mci_s, norms_s, st0):
+        E = jnp.asarray(pb.entitlement)[:, None]
+
+        def tick_solve(p_t, x_t, st, steps, shift, reset_mu):
+            mci_t, norms_t = x_t
+            p_t = dataclasses.replace(p_t, mci=mci_t)
+            d_cap = jnp.maximum(jnp.asarray(p_t.usage) - cap_b * E, 0.0)
+            refs = fleet_penalties(p_t, d_cap, use_kernel)
+            return _cr2_impl(p_t, refs, st, steps, outer, use_kernel,
+                             shift, reset_mu, moment_dtype, norms=norms_t)
+
+        return _day_impl(pb, (mci_s, norms_s), st0, tick_solve,
+                         warm_steps, first_steps, first_shift, first_reset)
+
+    state_specs = EngineState(x=P(axis), lam_eq=P(axis), lam_in=P(axis),
+                              mu=P())
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(_fleet_specs(p, axis), P(), P(), (P(), P(), P()),
+                  state_specs),
+        out_specs=(P(None, axis), P(axis), P(axis), state_specs),
+        check_rep=False)(p, cap_frac, mci_stack, norms_stack, state0)
+
+
+_DAY_CR2_STATIC_SH = ("mesh", "warm_steps", "first_steps", "first_shift",
+                      "first_reset", "outer", "use_kernel", "moment_dtype")
+_day_cr2_sharded = jax.jit(_day_cr2_impl_sharded,
+                           static_argnames=_DAY_CR2_STATIC_SH)
+_day_cr2_sharded_donated = jax.jit(_day_cr2_impl_sharded,
+                                   static_argnames=_DAY_CR2_STATIC_SH,
+                                   donate_argnums=(4,))
+
+
+def _day_norm_stacks(problem: FleetProblem, mci_stack, policy):
+    """Per-tick fleet-global norms for the sharded day scan, computed
+    from the TRUE (unpadded) fleet exactly as the solo path computes
+    them inside each tick: the tick-t window is the day rolled -t."""
+    n = mci_stack.shape[0]
+    rolled = problem
+    norms = []
+    for t in range(n):
+        if t:
+            rolled = dataclasses.replace(
+                rolled,
+                usage=np.roll(np.asarray(rolled.usage), -1, axis=1),
+                jobs=np.roll(np.asarray(rolled.jobs), -1, axis=1),
+                upper=None if rolled.upper is None
+                else np.roll(np.asarray(rolled.upper), -1, axis=1))
+        p_t = dataclasses.replace(rolled, mci=mci_stack[t])
+        if isinstance(policy, CR1):
+            norms.append(_cr1_norms(p_t))
+        else:
+            refs = jnp.asarray(cr2_reference_fleet(p_t, policy.cap_frac))
+            norms.append(_cr2_norms(p_t, refs))
+    return tuple(jnp.stack([nm[i] for nm in norms]) for i in range(3))
 
 
 def solve_day(problem: FleetProblem, policy, mci_stack, *,
@@ -1172,8 +1575,13 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     Supports CR1/CR2 — the policies whose backends are pure traceable
     engine calls. CR3 clears its fiscal balance in a host-side loop and
     B1/B3 are closed-form per-tick evaluations; both keep the per-tick
-    path. `ctx.mesh` is a follow-up (the scan would need to live inside
-    the W-axis shard_map).
+    path. With `ctx.mesh` the whole day scan nests INSIDE the W-axis
+    shard_map (per-tick fleet-global norms ride in replicated, computed
+    host-side from the true fleet), so a sharded day is still one
+    dispatch. Multi-region problems run the off-mesh scan (row i of
+    `mci_stack` is then an (R, T) forecast stack); multi-region + mesh
+    is a follow-up. Migration is not applied per tick — run the
+    committed plan through `solve()` for migration credit.
 
     Returns `DayResult`; `result.last.state` warm-starts the next day
     (pass it via `ctx.warm` — the first tick then runs `warm_steps` with
@@ -1185,18 +1593,24 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
         raise TypeError(
             f"solve_day() takes a FleetProblem; got "
             f"{type(problem).__name__}")
-    if ctx.mesh is not None:
-        raise NotImplementedError(
-            "solve_day under a device mesh is a ROADMAP follow-up (the "
-            "day scan must nest inside the W-axis shard_map); drop "
-            "ctx.mesh or use the per-tick step() loop")
+    problem = _single_region_view(problem)
     mci_stack = np.asarray(mci_stack, np.float32)
-    if mci_stack.ndim != 2 or mci_stack.shape[1] != problem.T:
+    if np.ndim(problem.mci) == 1 and mci_stack.ndim == 3 \
+            and mci_stack.shape[1] == 1:
+        mci_stack = mci_stack[:, 0]   # degenerate R=1 stack, canonicalized
+    want = np.asarray(problem.mci).shape
+    if mci_stack.ndim != len(want) + 1 or mci_stack.shape[1:] != want:
         raise ValueError(
-            f"mci_stack must be (n_ticks, T={problem.T}); got shape "
-            f"{mci_stack.shape}")
+            f"mci_stack must be (n_ticks,) + {want} (one forecast per "
+            f"tick); got shape {mci_stack.shape}")
+    if ctx.mesh is not None and problem.is_multiregion:
+        raise NotImplementedError(
+            "multi-region solve_day under a device mesh is a ROADMAP "
+            "follow-up (per-region norms must ride the scan sharded); "
+            "drop ctx.mesh or use the per-tick step() loop")
     n = mci_stack.shape[0]
-    use_kernel = resolve_use_kernel(ctx.use_kernel)
+    use_kernel = resolve_use_kernel(ctx.use_kernel) \
+        and not problem.is_multiregion
     if cold_steps is None:
         cold_steps = ctx.resolved_steps(policy)
     if warm_steps is None:
@@ -1205,33 +1619,67 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     first_steps = cold_steps if cold else warm_steps
     first_shift, first_reset = (0, False) if cold else (ctx.shift or 1,
                                                         True)
-    pj = _jit_view(problem)
     stack = jnp.asarray(mci_stack)
-    if isinstance(policy, CR1):
-        state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
-            jnp.zeros(problem.usage.shape))
-        run = _day_cr1_donated if ctx.donate else _day_cr1
-        committed, D, pens, state = run(
-            pj, policy.lam, stack, state0, warm_steps=warm_steps,
-            first_steps=first_steps, first_shift=first_shift,
-            first_reset=first_reset, use_kernel=use_kernel,
-            moment_dtype=ctx.moment_dtype)
-        mult = 1
-    elif isinstance(policy, CR2):
-        state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
-            jnp.zeros(problem.usage.shape), n_eq=problem.W, mu0=CR2_MU0)
-        run = _day_cr2_donated if ctx.donate else _day_cr2
-        committed, D, pens, state = run(
-            pj, policy.cap_frac, stack, state0, warm_steps=warm_steps,
-            first_steps=first_steps, first_shift=first_shift,
-            first_reset=first_reset, outer=policy.outer,
-            use_kernel=use_kernel, moment_dtype=ctx.moment_dtype)
-        mult = policy.outer
-    else:
+    if not isinstance(policy, (CR1, CR2)):
         raise NotImplementedError(
             f"solve_day supports CR1/CR2 (pure scannable engine "
             f"backends); {policy.name} needs host-side control flow — "
             f"use the per-tick solve()/step() loop")
+    if ctx.mesh is not None:
+        pp, W = pad_fleet(problem, fleet_device_count(ctx.mesh))
+        norms_stack = _day_norm_stacks(problem, mci_stack, policy)
+        state0 = _pad_state(ctx.warm, pp.W) if ctx.warm is not None else (
+            EngineState.cold(jnp.zeros(pp.usage.shape))
+            if isinstance(policy, CR1) else
+            EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
+                             mu0=CR2_MU0))
+        if isinstance(policy, CR1):
+            run = _day_cr1_sharded_donated if ctx.donate \
+                else _day_cr1_sharded
+            committed, D, pens, state = run(
+                pp, policy.lam, stack, norms_stack, state0, mesh=ctx.mesh,
+                warm_steps=warm_steps, first_steps=first_steps,
+                first_shift=first_shift, first_reset=first_reset,
+                use_kernel=use_kernel, moment_dtype=ctx.moment_dtype)
+            mult = 1
+        else:
+            run = _day_cr2_sharded_donated if ctx.donate \
+                else _day_cr2_sharded
+            committed, D, pens, state = run(
+                pp, policy.cap_frac, stack, norms_stack, state0,
+                mesh=ctx.mesh, warm_steps=warm_steps,
+                first_steps=first_steps, first_shift=first_shift,
+                first_reset=first_reset, outer=policy.outer,
+                use_kernel=use_kernel, moment_dtype=ctx.moment_dtype)
+            mult = policy.outer
+        committed = np.asarray(committed)[:, :W]
+        D, pens = np.asarray(D)[:W], np.asarray(pens)[:W]
+    else:
+        pj = _jit_view(problem)
+        W = problem.W
+        if isinstance(policy, CR1):
+            state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
+                jnp.zeros(problem.usage.shape))
+            run = _day_cr1_donated if ctx.donate else _day_cr1
+            committed, D, pens, state = run(
+                pj, policy.lam, stack, state0, warm_steps=warm_steps,
+                first_steps=first_steps, first_shift=first_shift,
+                first_reset=first_reset, use_kernel=use_kernel,
+                moment_dtype=ctx.moment_dtype)
+            mult = 1
+        else:
+            state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
+                jnp.zeros(problem.usage.shape), n_eq=problem.W,
+                mu0=CR2_MU0)
+            run = _day_cr2_donated if ctx.donate else _day_cr2
+            committed, D, pens, state = run(
+                pj, policy.cap_frac, stack, state0, warm_steps=warm_steps,
+                first_steps=first_steps, first_shift=first_shift,
+                first_reset=first_reset, outer=policy.outer,
+                use_kernel=use_kernel, moment_dtype=ctx.moment_dtype)
+            mult = policy.outer
+        committed = np.asarray(committed)
+        D, pens = np.asarray(D), np.asarray(pens)
     iters = (first_steps * mult,) + (warm_steps * mult,) * (n - 1)
     # Reporting view: the final tick's rolled window.
     p_last = dataclasses.replace(

@@ -123,6 +123,58 @@ def projection(year: int, state: str = "CA", hours: int = 48,
     return CarbonSignal(mci=mci, label=f"cambium-{year}-{state}-synthetic")
 
 
+#: Standard-time UTC offsets for the Cambium states: a UTC-clocked fleet
+#: coordinator sees each region's solar trough `-offset` hours after the
+#: local-time trace places it.
+STATE_UTC_OFFSETS = {"CA": -8, "OR": -8, "WA": -8, "NV": -8,
+                     "AZ": -7, "NM": -7, "UT": -7, "CO": -7,
+                     "TX": -6, "MN": -6, "IA": -6, "IL": -6,
+                     "NY": -5, "FL": -5, "NC": -5, "GA": -5,
+                     "OH": -5, "PA": -5, "VA": -5, "MA": -5}
+
+
+def regional_traces(states: Sequence[str], year: int = 2050,
+                    hours: int = 48, seed: int = 0,
+                    utc_offsets=None,
+                    ) -> tuple[np.ndarray, tuple[str, ...]]:
+    """(R, T) per-region MCI stack for a multi-region `FleetProblem`.
+
+    One Cambium-style `projection` trace per state, stacked in order —
+    the `mci` input of `fleet_solver.regional_fleet`. Depth decorrelation
+    across regions comes free: each state's solar penetration and noise
+    stream differ, so troughs land at different depths (CA near zero by
+    2050, NY much flatter). *Timing* decorrelation comes from
+    `utc_offsets`: projection traces are local-time, but a fleet
+    coordinator schedules on one UTC clock, so pass `"auto"` (the
+    `STATE_UTC_OFFSETS` table) or one offset per state to roll each
+    trace onto UTC — CA's trough then lags NY's by three hours, which is
+    what lets per-region pricing and migration beat any single shared
+    signal. `None` (default) keeps the local-time alignment. Returns
+    (mcis, labels).
+    """
+    if not states:
+        raise ValueError("states must name at least one region")
+    sigs = [projection(year, state=s, hours=hours, seed=seed)
+            for s in states]
+    mcis = np.stack([s.mci for s in sigs])
+    if utc_offsets is not None:
+        if isinstance(utc_offsets, str):
+            if utc_offsets != "auto":
+                raise ValueError(
+                    f"utc_offsets must be 'auto', a sequence of "
+                    f"{len(states)} ints, or None; got {utc_offsets!r}")
+            utc_offsets = [STATE_UTC_OFFSETS.get(s, 0) for s in states]
+        if len(utc_offsets) != len(states):
+            raise ValueError(
+                f"need one UTC offset per state ({len(states)}); got "
+                f"{len(utc_offsets)}")
+        # local hour h lands at UTC hour h - offset (offsets are negative
+        # west of Greenwich), so roll each trace right by -offset
+        mcis = np.stack([np.roll(m, -int(off))
+                         for m, off in zip(mcis, utc_offsets)])
+    return mcis, tuple(s.label for s in sigs)
+
+
 # ---------------------------------------------------------------------------
 # Grid-event hooks (scenario-ensemble building blocks, `repro.core.scenario`)
 #
@@ -197,7 +249,10 @@ class ForecastStream:
     actual: np.ndarray                 # (n_hours,) realized MCI
     horizon: int = 48                  # forecast window length T
     revision_sigma: float = 0.03       # per-sqrt-hour multiplicative error
-    seed: int = 0
+    # Tuple seeds namespace one revision model across several streams
+    # (`regional` issues (seed, r) per region); a plain int is the
+    # single-stream case and keeps its exact historical noise draws.
+    seed: int | tuple[int, ...] = 0
     replay: np.ndarray | None = None   # (n_ticks, horizon) snapshots
 
     def __post_init__(self):
@@ -228,7 +283,9 @@ class ForecastStream:
         if self.replay is not None:
             return np.asarray(self.replay[tick], dtype=float).copy()
         window = np.asarray(self.actual[tick:tick + self.horizon], float)
-        rng = np.random.default_rng((self.seed, tick))
+        key = (self.seed,) if isinstance(self.seed, int) \
+            else tuple(self.seed)
+        rng = np.random.default_rng(key + (tick,))
         # sqrt-lead error growth with a small nowcast floor: even the hour
         # being committed is a forecast, not a meter reading.
         lead = np.arange(self.horizon, dtype=float)
@@ -253,6 +310,24 @@ class ForecastStream:
         sig = caiso_2021(hours=n_ticks + horizon, seed=seed)
         return cls(actual=sig.mci, horizon=horizon,
                    revision_sigma=revision_sigma, seed=seed)
+
+    @classmethod
+    def regional(cls, actuals: np.ndarray, horizon: int = 48,
+                 revision_sigma: float = 0.03, seed: int = 0,
+                 ) -> tuple["ForecastStream", ...]:
+        """R streams over an (R, n_hours) actual stack, sharing ONE
+        revision model: every stream carries the same sigma/horizon and a
+        `(seed, r)` tuple seed off one base seed, instead of R
+        copy-pasted configs whose int seeds can collide between regions.
+        The input of a multi-region `RollingHorizonSolver`."""
+        actuals = np.asarray(actuals, float)
+        if actuals.ndim != 2:
+            raise ValueError(f"actuals must be (R, n_hours); got "
+                             f"{actuals.shape}")
+        return tuple(
+            cls(actual=actuals[r], horizon=horizon,
+                revision_sigma=revision_sigma, seed=(seed, r))
+            for r in range(actuals.shape[0]))
 
 
 def carbon_footprint_delta(mci: np.ndarray, adjustments: np.ndarray) -> float:

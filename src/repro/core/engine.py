@@ -276,13 +276,19 @@ def al_minimize_batched(objective: Objective,
 def al_minimize_sharded(build_pieces: Callable[[Any], dict], data: Any, *,
                         mesh, data_specs: Any, init: EngineState,
                         cfg: EngineConfig = EngineConfig(),
-                        axis_name: str | None = None,
+                        axis_name: str | tuple[str, ...] | None = None,
                         ) -> tuple[Array, dict[str, Array]]:
     """Device-parallel `al_minimize`: shard the leading workload axis.
 
     Runs the identical AL loop on every device's row block of a fleet-scale
     problem, with `x`, per-workload multipliers, and Adam moments all
-    sharded over `axis_name` (default: the mesh's only axis).
+    sharded over `axis_name` (default: the mesh's only axis). A *tuple*
+    of axis names shards the leading axis over several mesh axes at once
+    — the 2-D (REGION_AXIS, FLEET_AXIS) fleet mesh from
+    `launch.mesh.make_fleet_mesh(regions=...)`, where a region-sorted W
+    axis folds over both. The row-separability contract is unchanged:
+    nothing here psums, so the device grid's shape is irrelevant to the
+    math.
 
     Args:
       build_pieces: called *inside* `shard_map` with the per-device block of

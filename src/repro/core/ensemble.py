@@ -59,7 +59,7 @@ from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, PAD_FILLS,
                                      pad_fleet, resolve_use_kernel)
 from repro.core.metrics import jain_index, max_min_ratio
 from repro.core.scenario import ScenarioStack, resolve_scenarios
-from repro.launch.mesh import fleet_axis
+from repro.launch.mesh import fleet_axes, fleet_device_count
 
 __all__ = ["EnsembleReport", "EnsembleResult", "compare_policies",
            "comparison_table", "evaluate_ensemble",
@@ -134,7 +134,7 @@ def _cr1_ens_sharded(p: FleetProblem, vals, keys, lam, norms,
     for all S scenarios in one call. Per-scenario global normalizers come
     from the TRUE fleets (computed outside, stacked, replicated)."""
     from jax.experimental.shard_map import shard_map
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
 
     def body(pb, vals_b, norms_b, states_b):
         def one(vals_s, norms_s, st):
@@ -164,7 +164,7 @@ def _cr2_ens_sharded(p: FleetProblem, vals, keys, refs, norms,
                      states: EngineState, mesh, steps: int, outer: int,
                      use_kernel: bool):
     from jax.experimental.shard_map import shard_map
-    axis = fleet_axis(mesh)
+    axis = fleet_axes(mesh)
 
     def body(pb, vals_b, refs_b, norms_b, states_b):
         def one(vals_s, refs_s, norms_s, st):
@@ -252,7 +252,7 @@ def _run_batched(policy, p: FleetProblem, stack: ScenarioStack, *,
         raise ValueError(
             "the sharded ensemble lane is cold-only (no warm/shift/"
             "reset_mu); run the streaming ensemble without a mesh")
-    pp, W = pad_fleet(p, mesh.shape[fleet_axis(mesh)])
+    pp, W = pad_fleet(p, fleet_device_count(mesh))
     vals_p = _pad_overlays(keys, vals, W, pp.W)
     if type(policy) is CR1:
         norms = [_cr1_norms(ps) for ps in stack.problems(p)]
@@ -423,7 +423,7 @@ def _stack_arrays(base: FleetProblem, stack: ScenarioStack):
     from the base where not overlaid."""
     S = stack.S
     mci = stack.mci if stack.mci is not None else np.broadcast_to(
-        np.asarray(base.mci, float), (S, base.T))
+        np.asarray(base.mci, float), (S,) + np.asarray(base.mci).shape)
     usage = stack.usage if stack.usage is not None else np.broadcast_to(
         np.asarray(base.usage, float), (S, base.W, base.T))
     ent = stack.entitlement if stack.entitlement is not None else \
@@ -476,12 +476,13 @@ def evaluate_ensemble(problem: FleetProblem, policy, scenarios, *,
     policy = resolve_policy(policy)
     stack = resolve_scenarios(scenarios, problem)
     can_batch = (_batched_capable(policy) and ctx.warm is None
-                 and not ctx.donate and not ctx.shift and not ctx.reset_mu)
+                 and not ctx.donate and not ctx.shift and not ctx.reset_mu
+                 and not problem.is_multiregion)
     if batched is True and not can_batch:
         raise ValueError(
             f"no batched ensemble lane for policy "
             f"{getattr(policy, 'name', policy)!r} under this context "
-            "(CR1/CR2, no warm/donate/shift/reset_mu)")
+            "(CR1/CR2, single-region, no warm/donate/shift/reset_mu)")
     if batched is False or not can_batch:
         probs = list(stack.problems(problem))
         results = [solve(ps, policy,
@@ -609,6 +610,11 @@ def run_streaming_ensemble(problem: FleetProblem, policy, streams, *,
     from repro.core.scenario import ForecastRegime
     from repro.core.streaming import RollingHorizonSolver
     policy = resolve_policy(policy)
+    if problem.is_multiregion:
+        raise NotImplementedError(
+            "run_streaming_ensemble is single-region (the scenario axis "
+            "batches one stream per lane); drive a multi-region fleet "
+            "with RollingHorizonSolver and one stream per region")
     if isinstance(streams, ForecastRegime):
         streams = streams.streams(problem, n_ticks=n_ticks or 1)
     streams = tuple(streams)

@@ -73,8 +73,64 @@ CR3_MU0 = 0.01
 
 
 @dataclasses.dataclass(frozen=True)
+class RegionTopology:
+    """Cross-region migration network for a multi-region fleet.
+
+    All matrices are indexed [from_region, to_region]. `bandwidth` caps
+    how much deferrable load (NP) can move over a link per hour — zero
+    (including the diagonal, which is ignored) disables the link, so
+    `bandwidth=0` everywhere reduces the fleet to independent per-region
+    solves. `cost` is the carbon toll per unit moved (kgCO2/MWh-NP
+    equivalent — network/overhead energy), subtracted from the migration
+    margin. `ceiling` is an optional per-region power cap (R,) or (R, T)
+    that bounds how much migrated load a region can absorb on top of its
+    own; None means uncapped.
+
+    Kept out of every jit trace (`_jit_view`/`pad_fleet` strip it):
+    migration planning is a host-side post-stage on gathered region
+    aggregates (`repro.core.migration`), not part of the sharded hot
+    loop.
+    """
+    cost: np.ndarray                    # (R, R)
+    bandwidth: np.ndarray               # (R, R)
+    ceiling: np.ndarray | None = None   # (R,) or (R, T)
+    labels: tuple[str, ...] | None = None
+
+    @property
+    def R(self) -> int:
+        return np.asarray(self.cost).shape[0]
+
+    def validate(self, R: int, T: int) -> None:
+        cost = np.asarray(self.cost)
+        bw = np.asarray(self.bandwidth)
+        if cost.shape != (R, R) or bw.shape != (R, R):
+            raise ValueError(
+                f"RegionTopology cost/bandwidth must be ({R}, {R}); got "
+                f"{cost.shape} / {bw.shape}")
+        if self.ceiling is not None:
+            ceil = np.asarray(self.ceiling)
+            if ceil.shape not in ((R,), (R, T)):
+                raise ValueError(
+                    f"RegionTopology ceiling must be ({R},) or ({R}, {T}); "
+                    f"got {ceil.shape}")
+        if self.labels is not None and len(self.labels) != R:
+            raise ValueError(
+                f"RegionTopology labels must have {R} entries; got "
+                f"{len(self.labels)}")
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetProblem:
-    """Stacked-workload DR instance (a JAX pytree; jit over it directly)."""
+    """Stacked-workload DR instance (a JAX pytree; jit over it directly).
+
+    Single-region fleets have `mci: (T,)` and `region is None`.
+    Multi-region fleets stack per-region signals as `mci: (R, T)` and
+    assign every workload a region via `region: (W,) int`; an optional
+    `topology` adds the cross-region migration network. R=1 is the
+    degenerate case and is canonicalized back to the single-region form
+    at the `api.solve`/`sweep`/`solve_day` entry points, so it is
+    bitwise-identical to a plain (T,) problem.
+    """
     usage: np.ndarray          # (W, T)
     entitlement: np.ndarray    # (W,)
     k: np.ndarray              # (W,)
@@ -83,7 +139,7 @@ class FleetProblem:
     x2_kind: np.ndarray        # (W,) 0=num_jobs_delayed, 1=waiting_sq
     jobs: np.ndarray           # (W, T)
     is_batch: np.ndarray       # (W,) bool
-    mci: np.ndarray            # (T,)
+    mci: np.ndarray            # (T,) or (R, T) per-region
     day_hours: int = 24
     max_curtail_frac: float = 0.5
     names: tuple[str, ...] | None = None
@@ -92,6 +148,10 @@ class FleetProblem:
     # actually shed by throttling (FleetCoordinator realizability). Not a
     # penalty-model property, so `to_problem` drops it.
     upper: np.ndarray | None = None
+    # Multi-region fields: per-workload region ids (W,) int in [0, R) and
+    # the optional migration network. None for single-region fleets.
+    region: np.ndarray | None = None
+    topology: RegionTopology | None = None
 
     @property
     def W(self) -> int:
@@ -100,6 +160,17 @@ class FleetProblem:
     @property
     def T(self) -> int:
         return self.usage.shape[1]
+
+    @property
+    def R(self) -> int:
+        """Number of regions (1 for single-region problems)."""
+        mci = np.asarray(self.mci) if isinstance(self.mci, np.ndarray) \
+            else self.mci
+        return 1 if mci.ndim == 1 else mci.shape[0]
+
+    @property
+    def is_multiregion(self) -> bool:
+        return np.ndim(self.mci) == 2
 
     @classmethod
     def from_problem(cls, p) -> "FleetProblem":
@@ -122,6 +193,10 @@ class FleetProblem:
     def to_problem(self, **overrides):
         """Rebuild the per-workload `DRProblem` (SLSQP reference) view."""
         from repro.core.policies import DRProblem
+        if self.is_multiregion:
+            raise ValueError(
+                "to_problem() needs a single-region fleet (mci (T,)); the "
+                "per-workload SLSQP reference has no region concept")
         names = self.names or tuple(f"w{i}" for i in range(self.W))
         models = []
         for i in range(self.W):
@@ -155,7 +230,8 @@ class FleetProblem:
 jax.tree_util.register_dataclass(
     FleetProblem,
     data_fields=["usage", "entitlement", "k", "rts_coeffs", "betas",
-                 "x2_kind", "jobs", "is_batch", "mci", "upper"],
+                 "x2_kind", "jobs", "is_batch", "mci", "upper", "region",
+                 "topology"],
     meta_fields=["day_hours", "max_curtail_frac", "names"])
 
 
@@ -207,6 +283,98 @@ def synthetic_fleet(num: int, hours: int = 48, seed: int = 0,
             entitlement=base.entitlement * scale,
             jobs=None if base.jobs is None else base.jobs * scale))
     return from_models(models, caiso_2021(hours).mci)
+
+
+# ---------------------------------------------------------------------------
+# Multi-region construction and canonicalization
+# ---------------------------------------------------------------------------
+def regional_fleet(fleets: Sequence[FleetProblem], mcis: np.ndarray,
+                   topology: RegionTopology | None = None) -> FleetProblem:
+    """Concatenate R single-region fleets into one (region × workload)
+    fleet.
+
+    `fleets[r]` supplies region r's workloads (its own `mci` is ignored)
+    and `mcis` is the (R, T) per-region signal stack, e.g. from
+    `carbon.regional_traces`. Workloads are kept region-sorted, so a 2-D
+    (REGION_AXIS, FLEET_AXIS) mesh lands each region's rows on one
+    region slice.
+    """
+    mcis = np.asarray(mcis, float)
+    R = len(fleets)
+    if mcis.ndim != 2 or mcis.shape[0] != R:
+        raise ValueError(
+            f"mcis must be ({R}, T) — one trace per fleet; got {mcis.shape}")
+    T = mcis.shape[1]
+    if any(f.T != T for f in fleets):
+        raise ValueError("every regional fleet must share the trace length")
+    if any(f.is_multiregion for f in fleets):
+        raise ValueError("regional_fleet composes single-region fleets")
+    if topology is not None:
+        topology.validate(R, T)
+
+    def cat(field):
+        parts = [getattr(f, field) for f in fleets]
+        if any(a is None for a in parts):
+            if all(a is None for a in parts):
+                return None
+            parts = [np.asarray(a, float) if a is not None
+                     else _inf_upper(f.usage.shape)
+                     for f, a in zip(fleets, parts)]
+        return np.concatenate([np.asarray(a) for a in parts])
+
+    names = None
+    if all(f.names is not None for f in fleets):
+        labels = topology.labels if topology is not None \
+            and topology.labels is not None else tuple(range(R))
+        names = tuple(f"{labels[r]}/{n}"
+                      for r, f in enumerate(fleets) for n in f.names)
+    region = np.concatenate(
+        [np.full(f.W, r, np.int32) for r, f in enumerate(fleets)])
+    return FleetProblem(
+        usage=cat("usage"), entitlement=cat("entitlement"), k=cat("k"),
+        rts_coeffs=cat("rts_coeffs"), betas=cat("betas"),
+        x2_kind=cat("x2_kind"), jobs=cat("jobs"), is_batch=cat("is_batch"),
+        mci=mcis, day_hours=fleets[0].day_hours,
+        max_curtail_frac=fleets[0].max_curtail_frac, names=names,
+        upper=cat("upper"), region=region, topology=topology)
+
+
+def synthetic_regional_fleet(num: int, states: Sequence[str],
+                             hours: int = 48, seed: int = 0,
+                             year: int = 2050,
+                             topology: RegionTopology | None = None,
+                             utc_offsets=None) -> FleetProblem:
+    """`synthetic_fleet` across R Cambium state mixes: ~num/R workloads
+    per region, each region priced on its own `carbon.projection` trace
+    (`utc_offsets` passes through to `carbon.regional_traces` — `"auto"`
+    rolls each trace onto the coordinator's UTC clock). Default topology:
+    uniform bandwidth at 5% of fleet entitlement with a small uniform
+    migration toll."""
+    from repro.core.carbon import regional_traces
+    R = len(states)
+    mcis, _ = regional_traces(states, year=year, hours=hours, seed=seed,
+                              utc_offsets=utc_offsets)
+    per = [num // R + (1 if r < num % R else 0) for r in range(R)]
+    fleets = [synthetic_fleet(per[r], hours=hours, seed=seed + r)
+              for r in range(R)]
+    if topology is None:
+        ent = float(sum(np.asarray(f.entitlement).sum() for f in fleets))
+        bw = np.full((R, R), 0.05 * ent / max(R - 1, 1))
+        np.fill_diagonal(bw, 0.0)
+        topology = RegionTopology(
+            cost=np.full((R, R), 2.0), bandwidth=bw, labels=tuple(states))
+    return regional_fleet(fleets, mcis, topology=topology)
+
+
+def _single_region_view(p: FleetProblem) -> FleetProblem:
+    """Canonicalize the degenerate R=1 multi-region problem to the plain
+    single-region form (mci (T,), no region/topology) so it takes the
+    exact pre-refactor code path — bitwise-identical results. No-op for
+    everything else."""
+    if np.ndim(p.mci) == 2 and np.asarray(p.mci).shape[0] == 1:
+        return dataclasses.replace(p, mci=np.asarray(p.mci)[0],
+                                   region=None, topology=None)
+    return p
 
 
 # ---------------------------------------------------------------------------
@@ -266,8 +434,10 @@ def _jit_view(p: FleetProblem) -> FleetProblem:
     """Strip reporting-only static metadata (`names`) before jit calls —
     names live in the pytree treedef, so leaving them in would recompile
     the policy backends for every same-shaped fleet with different job
-    names."""
-    return dataclasses.replace(p, names=None)
+    names. The migration `topology` is stripped too: it is host-side
+    numpy consumed by the `repro.core.migration` post-stage, never by
+    the jitted solvers."""
+    return dataclasses.replace(p, names=None, topology=None)
 
 
 #: Read-only +inf `upper` templates by shape — `pad_fleet` runs on every
@@ -293,7 +463,7 @@ def _inf_upper(shape: tuple[int, int]) -> np.ndarray:
 PAD_FILLS: dict[str, float] = {
     "usage": 0.01, "entitlement": 1.0, "k": 0.0, "rts_coeffs": 0.0,
     "betas": 0.0, "x2_kind": 0.0, "jobs": 1.0, "is_batch": False,
-    "upper": 0.0,
+    "upper": 0.0, "region": 0,
 }
 
 
@@ -317,7 +487,8 @@ def pad_fleet(p: FleetProblem, multiple: int) -> tuple[FleetProblem, int]:
     upper = np.asarray(p.upper, float) if p.upper is not None \
         else _inf_upper(p.usage.shape)
     if pad == 0:
-        return dataclasses.replace(p, upper=upper, names=None), p.W
+        return dataclasses.replace(p, upper=upper, names=None,
+                                   topology=None), p.W
 
     def rows(field, a=None):
         a = np.asarray(getattr(p, field) if a is None else a)
@@ -330,7 +501,8 @@ def pad_fleet(p: FleetProblem, multiple: int) -> tuple[FleetProblem, int]:
         k=rows("k"), rts_coeffs=rows("rts_coeffs"), betas=rows("betas"),
         x2_kind=rows("x2_kind"), jobs=rows("jobs"),
         is_batch=rows("is_batch"), upper=rows("upper", upper),
-        names=None), p.W
+        region=None if p.region is None else rows("region"),
+        names=None, topology=None), p.W
 
 
 def _pad_state(state: EngineState, W_pad: int) -> EngineState:
@@ -351,13 +523,16 @@ def _pad_state(state: EngineState, W_pad: int) -> EngineState:
                        lam_in=pad(state.lam_in), mu=state.mu)
 
 
-def _fleet_specs(p: FleetProblem, axis: str) -> FleetProblem:
+def _fleet_specs(p: FleetProblem, axis) -> FleetProblem:
     """shard_map PartitionSpecs for a (padded) FleetProblem: every
-    per-workload field sharded on its leading W axis, the MCI replicated."""
+    per-workload field sharded on its leading W axis, the MCI replicated.
+    `axis` may be one mesh axis name or a tuple of them (2-D fleet mesh:
+    W shards over both)."""
     row = P(axis)
     return dataclasses.replace(
         p, usage=row, entitlement=row, k=row, rts_coeffs=row, betas=row,
-        x2_kind=row, jobs=row, is_batch=row, mci=P(), upper=row)
+        x2_kind=row, jobs=row, is_batch=row, mci=P(), upper=row,
+        region=None if p.region is None else row)
 
 
 def _enter_tick(state: EngineState, shift: int, reset_mu: bool,
@@ -437,8 +612,13 @@ def _report(p: FleetProblem, D: np.ndarray, pens: np.ndarray,
             iters: int, state: EngineState | None = None,
             extras: dict | None = None) -> FleetSolveResult:
     mci = np.asarray(p.mci)
-    carbon_base = float((np.asarray(p.usage).sum(0) * mci).sum())
-    car = float((D @ mci).sum())
+    if mci.ndim == 2:
+        wmci = mci[np.asarray(p.region)]
+        carbon_base = float((np.asarray(p.usage) * wmci).sum())
+        car = float((D * wmci).sum())
+    else:
+        carbon_base = float((np.asarray(p.usage).sum(0) * mci).sum())
+        car = float((D @ mci).sum())
     n_days = max(1, p.T // p.day_hours)
     span = n_days * p.day_hours
     sums = D[:, :span].reshape(p.W, n_days, p.day_hours).sum(-1)

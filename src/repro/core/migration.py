@@ -1,0 +1,190 @@
+"""Cross-region migration of deferrable load (spatial demand response).
+
+The multi-region engine prices each region's curtailment on its own MCI
+trace; this module adds the *spatial* lever on top: move deferrable
+(batch) load that was curtailed in a dirty-grid region and run it in a
+cleaner region the same hour, subject to the `RegionTopology` migration
+network (per-link bandwidth caps, per-unit migration toll, per-region
+power ceilings).
+
+Runs as a host-side post-stage on gathered region aggregates — NOT
+inside the sharded hot loop. The per-workload solve is row-separable
+over W (the sharding contract in `core/engine.py` forbids psums inside
+the differentiated objective), so the coupled cross-region terms
+operate on (R, T) reductions of the committed plan instead: `movable`
+(curtailed batch load per region-hour), `headroom` (region ceiling
+minus post-DR draw). With R in the tens and T in the hundreds that is
+a tiny problem — the same augmented-Lagrangian engine solves it in one
+unsharded call, followed by a deterministic feasibility repair so the
+reported plan satisfies every cap exactly (the AL solution is only
+eps-feasible).
+
+`api.solve`/`sweep` apply this automatically whenever the problem has a
+topology with any positive bandwidth; the carbon saved (net of the
+migration toll) is credited into `carbon_reduction_pct` and the full
+`MigrationPlan` rides `result.extras["migration"]`. With bandwidth 0
+the plan is identically zero and the multi-region solve decomposes
+into independent per-region solves (regression-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, al_minimize
+
+__all__ = ["MigrationPlan", "fleet_migration", "plan_migration"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """Feasible cross-region migration schedule and its carbon accounting.
+
+    `y[r, s, t]` is deferrable load (NP) moved from region r to region s
+    in hour t. `carbon_saved` is the gross MCI differential captured,
+    `migration_cost` the toll paid (both kgCO2-equivalent); the net
+    credit is `net_saved`.
+    """
+    y: np.ndarray              # (R, R, T) feasible migration flows
+    carbon_saved: float        # sum y * (mci_from - mci_to)
+    migration_cost: float      # sum y * cost[from, to]
+    moved_total: float         # sum y
+
+    @property
+    def net_saved(self) -> float:
+        return self.carbon_saved - self.migration_cost
+
+    def by_region(self) -> np.ndarray:
+        """(R,) net outflow per region (moved out minus moved in)."""
+        return self.y.sum(axis=(1, 2)) - self.y.sum(axis=(0, 2))
+
+
+def _zero_plan(R: int, T: int) -> MigrationPlan:
+    return MigrationPlan(y=np.zeros((R, R, T)), carbon_saved=0.0,
+                         migration_cost=0.0, moved_total=0.0)
+
+
+def _repair(y: np.ndarray, margin: np.ndarray, cap: np.ndarray,
+            movable: np.ndarray, headroom: np.ndarray) -> np.ndarray:
+    """Deterministic projection of an eps-feasible AL iterate onto the
+    exact constraint set. Order matters: dropping unprofitable links and
+    clipping to caps can only shrink flows, outflow scaling preserves
+    link caps, and inflow scaling (again only shrinking) preserves both
+    — so the output satisfies every constraint simultaneously."""
+    y = np.where(margin > 0.0, np.clip(y, 0.0, cap), 0.0)
+    out = y.sum(axis=1)                                   # (R, T)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        f = np.where(out > movable, movable / np.maximum(out, 1e-300), 1.0)
+    y = y * np.minimum(f, 1.0)[:, None, :]
+    inn = y.sum(axis=0)                                   # (R, T)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        g = np.where(inn > headroom,
+                     np.maximum(headroom, 0.0) / np.maximum(inn, 1e-300),
+                     1.0)
+    return y * np.minimum(g, 1.0)[None, :, :]
+
+
+def plan_migration(mci: np.ndarray, movable: np.ndarray,
+                   headroom: np.ndarray, topology,
+                   *, inner_steps: int = 250,
+                   outer_steps: int = 4) -> MigrationPlan:
+    """Solve the (R, R, T) migration transport problem.
+
+    maximize   sum_{r,s,t} y[r,s,t] * (mci[r,t] - mci[s,t] - cost[r,s])
+    subject to 0 <= y[r,s,t] <= bandwidth[r,s]          (link caps)
+               sum_s y[r,s,t] <= movable[r,t]           (supply)
+               sum_r y[r,s,t] <= headroom[s,t]          (absorption)
+
+    via the shared AL + projected-Adam engine (box caps in the
+    projection, supply/absorption as inequality residuals), then a
+    deterministic repair pass for exact feasibility. Zero-bandwidth or
+    nowhere-profitable topologies short-circuit to the zero plan.
+    """
+    mci = np.asarray(mci, float)
+    R, T = mci.shape
+    cost = np.asarray(topology.cost, float)
+    bw = np.asarray(topology.bandwidth, float).copy()
+    np.fill_diagonal(bw, 0.0)
+    movable = np.maximum(np.asarray(movable, float), 0.0)
+    headroom = np.asarray(headroom, float)
+
+    margin = mci[:, None, :] - mci[None, :, :] - cost[:, :, None]  # (R,R,T)
+    cap = np.broadcast_to(bw[:, :, None], (R, R, T))
+    profitable = (margin > 0.0) & (cap > 0.0)
+    if not profitable.any() or movable.max() <= 0.0:
+        return _zero_plan(R, T)
+
+    # Uncapped regions absorb at most everything movable that hour.
+    total_movable = movable.sum(axis=0)                   # (T,)
+    head_eff = np.where(np.isfinite(headroom),
+                        np.maximum(headroom, 0.0),
+                        total_movable[None, :] * np.ones((R, 1)))
+
+    scale = float(max(movable.max(), 1.0))
+    mscale = float(max(np.abs(margin[profitable]).max(), 1e-6))
+    margin_j = jnp.asarray(margin / mscale)
+    cap_j = jnp.asarray(np.where(np.isfinite(cap), cap, scale))
+    movable_j = jnp.asarray(movable)
+    head_j = jnp.asarray(head_eff)
+
+    def objective(y, _):
+        return -(y * margin_j).sum()
+
+    def project(y):
+        return jnp.clip(y, 0.0, cap_j)
+
+    def ineq(y, _):
+        supply = (movable_j - y.sum(axis=1)) / scale
+        absorb = (head_j - y.sum(axis=0)) / scale
+        return jnp.concatenate([supply.ravel(), absorb.ravel()])
+
+    cfg = EngineConfig(inner_steps=inner_steps, outer_steps=outer_steps,
+                       lr=0.05, mu0=10.0, mu_growth=3.0)
+    y0 = jnp.zeros((R, R, T))
+    y, _ = al_minimize(objective, project, y0, ineq_residual=ineq,
+                       step_scale=0.1 * scale, cfg=cfg)
+    y = _repair(np.asarray(y, float), margin, cap, movable, head_eff)
+
+    grad = mci[:, None, :] - mci[None, :, :]
+    return MigrationPlan(
+        y=y, carbon_saved=float((y * grad).sum()),
+        migration_cost=float((y * cost[:, :, None]).sum()),
+        moved_total=float(y.sum()))
+
+
+def fleet_migration(p, D: np.ndarray, **plan_kwargs) -> MigrationPlan:
+    """Migration post-stage for a solved multi-region `FleetProblem`.
+
+    Region aggregates from the committed plan `D`: `movable[r, t]` is
+    the residual *batch* load (deferrable by construction — RTS loss
+    models are latency-coupled and stay put), `headroom[r, t]` the
+    region ceiling minus the fleet's post-DR draw. The plan moves load
+    without changing any workload's curtailment D, so total curtailment
+    — and every penalty — is untouched; only where the load burns
+    carbon changes.
+    """
+    if not p.is_multiregion or p.topology is None:
+        return _zero_plan(p.R, p.T)
+    region = np.asarray(p.region)
+    R, T = p.R, p.T
+    residual = np.asarray(p.usage, float) - np.asarray(D, float)  # (W, T)
+    is_batch = np.asarray(p.is_batch, bool)
+
+    movable = np.zeros((R, T))
+    np.add.at(movable, region[is_batch],
+              np.maximum(residual[is_batch], 0.0))
+    load = np.zeros((R, T))
+    np.add.at(load, region, residual)
+
+    ceiling = p.topology.ceiling
+    if ceiling is None:
+        headroom = np.full((R, T), np.inf)
+    else:
+        ceil = np.asarray(ceiling, float)
+        if ceil.ndim == 1:
+            ceil = np.broadcast_to(ceil[:, None], (R, T))
+        headroom = ceil - load
+    return plan_migration(np.asarray(p.mci, float), movable, headroom,
+                          p.topology, **plan_kwargs)

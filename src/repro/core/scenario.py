@@ -36,9 +36,11 @@ MCI generators: `DuckPerturb` (shape/peak/trough jitter),
 `RenewableDrought`, `EveningRampSpike`, `ZeroMciWindow`, `CambiumMix`
 (2024/2050 `carbon.projection` mixes), `ForecastRegime` (per-scenario
 `ForecastStream` sigma/seed — also the streaming ensemble's stream
-factory). Fleet generators: `FleetJitter` (usage/entitlement scale),
-`FlexMixShift` (per-scenario sheddable fraction via the `upper`
-operational cap + batch/online usage mix shift).
+factory), `RegionalDivergence` (per-region grid jitter over a
+multi-region base — (S, R, T) overlays). Fleet generators:
+`FleetJitter` (usage/entitlement scale), `FlexMixShift` (per-scenario
+sheddable fraction via the `upper` operational cap + batch/online
+usage mix shift).
 """
 from __future__ import annotations
 
@@ -53,9 +55,9 @@ from repro.core.fleet_solver import FleetProblem
 
 __all__ = [
     "SCENARIO_REGISTRY", "CambiumMix", "DuckPerturb", "EveningRampSpike",
-    "FleetJitter", "FlexMixShift", "ForecastRegime", "RenewableDrought",
-    "ScenarioGenerator", "ScenarioStack", "ZeroMciWindow",
-    "resolve_scenarios",
+    "FleetJitter", "FlexMixShift", "ForecastRegime", "RegionalDivergence",
+    "RenewableDrought", "ScenarioGenerator", "ScenarioStack",
+    "ZeroMciWindow", "resolve_scenarios",
 ]
 
 #: FleetProblem data fields a scenario may overlay, with the leading-S
@@ -71,7 +73,7 @@ class ScenarioStack:
     problem's field is shared across scenarios. `labels` names each
     scenario for reports."""
 
-    mci: np.ndarray | None = None          # (S, T)
+    mci: np.ndarray | None = None          # (S, T) — (S, R, T) multi-region
     usage: np.ndarray | None = None        # (S, W, T)
     entitlement: np.ndarray | None = None  # (S, W)
     jobs: np.ndarray | None = None         # (S, W, T)
@@ -103,7 +105,8 @@ class ScenarioStack:
         return self._overlays()
 
     def validate(self, base: FleetProblem) -> None:
-        shapes = {"mci": (self.S, base.T), "usage": (self.S, base.W, base.T),
+        shapes = {"mci": (self.S,) + np.asarray(base.mci).shape,
+                  "usage": (self.S, base.W, base.T),
                   "entitlement": (self.S, base.W),
                   "jobs": (self.S, base.W, base.T),
                   "upper": (self.S, base.W, base.T)}
@@ -408,6 +411,53 @@ class ForecastRegime(_GeneratorBase):
         labels = tuple(f"forecast{i}[sigma={st.revision_sigma:.3f}]"
                        for i, st in enumerate(streams))
         return ScenarioStack(mci=mcis, labels=labels)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RegionalDivergence(_GeneratorBase):
+    """Cross-region grid divergence over a multi-region base: each
+    scenario jitters every region's MCI trace independently — a
+    per-region level scale plus a per-region midday trough fill — so
+    the ensemble spans futures where the regional carbon spread (the
+    signal the migration lever arbitrages) widens, narrows, or flips.
+    Requires a multi-region base (`mci` of shape (R, T)); overlays are
+    (S, R, T)."""
+
+    n_scenarios: int = 16
+    seed: int = 0
+    level_sigma: float = 0.10    # per-region multiplicative level jitter
+    trough_sigma: float = 0.25   # per-region trough-fill severity scale
+
+    name: ClassVar[str] = "regional_divergence"
+
+    def generate(self, base: FleetProblem) -> ScenarioStack:
+        if not base.is_multiregion:
+            raise ValueError(
+                "RegionalDivergence needs a multi-region base problem "
+                "(mci of shape (R, T)); build one with "
+                "fleet_solver.regional_fleet / synthetic_regional_fleet")
+        mci = np.asarray(base.mci, float)
+        R = mci.shape[0]
+        n_days = max(1, base.T // base.day_hours)
+        mcis, labels = [], []
+        for s in range(self.n_scenarios):
+            rows = []
+            for reg in range(R):
+                r = _rng(self.seed, s, reg + 1)
+                level = float(np.exp(
+                    self.level_sigma * r.standard_normal()))
+                sev = float(np.clip(
+                    self.trough_sigma * abs(r.standard_normal()), 0.0, 0.95))
+                row = mci[reg] * level
+                if sev > 0.0:
+                    row = carbon.apply_drought(
+                        row, 0, n_days=n_days, severity=sev,
+                        day_hours=base.day_hours)
+                rows.append(row)
+            mcis.append(np.stack(rows))
+            labels.append(f"regional_div{s}")
+        return ScenarioStack(mci=np.stack(mcis), labels=tuple(labels))
 
 
 # ---------------------------------------------------------------------------

@@ -43,7 +43,7 @@ residuals wash out as the window slides.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -63,19 +63,26 @@ class TickResult:
     long-lived controller holds O(W) per tick, not O(W·T)."""
     tick: int
     committed: np.ndarray        # (W,) NP adjustments enforced this hour
-    forecast_mci: float          # hour-0 forecast the plan was solved with
-    realized_mci: float          # actual MCI once the hour elapsed
+    forecast_mci: float | np.ndarray   # hour-0 forecast ((R,) multi-region)
+    realized_mci: float | np.ndarray   # actual MCI once the hour elapsed
     inner_steps: int             # engine iterations spent on this re-solve
     plan: FleetSolveResult | None
+    committed_by_region: np.ndarray | None = None  # (R,) multi-region only
 
     @property
     def forecast_carbon(self) -> float:
         """kg CO2 the plan *expected* to eliminate this hour."""
+        if np.ndim(self.forecast_mci):
+            return float((self.committed_by_region
+                          * np.asarray(self.forecast_mci)).sum())
         return float(self.committed.sum() * self.forecast_mci)
 
     @property
     def realized_carbon(self) -> float:
         """kg CO2 actually eliminated this hour."""
+        if np.ndim(self.realized_mci):
+            return float((self.committed_by_region
+                          * np.asarray(self.realized_mci)).sum())
         return float(self.committed.sum() * self.realized_mci)
 
 
@@ -106,9 +113,17 @@ class RollingHorizonSolver:
 
     Args:
       problem: fleet template; `usage`/`jobs` are treated as periodic
-        traces that slide with the window (`np.roll` along time).
+        traces that slide with the window (`np.roll` along time). A
+        multi-region problem (`problem.is_multiregion`) is supported:
+        pass one `ForecastStream` per region (see `stream`).
       stream: revised-forecast source; `stream.horizon` must equal
-        `problem.T`.
+        `problem.T`. For a multi-region problem pass a sequence of
+        `problem.R` streams (one per region, e.g. from
+        `ForecastStream.regional`); each tick then installs the
+        stacked `(R, T)` forecast. The per-tick migration post-stage
+        is *not* applied inside the loop (the committed hours are the
+        streaming deliverable; run `fleet_migration` on the committed
+        matrix offline to add the spatial lever).
       policy: a `DRPolicy` object (`CR1(lam=...)`, `CR2(...)`,
         `CR3(...)`, ...) or a `POLICY_REGISTRY` name. Unknown names raise
         `ValueError` (naming the registered choices) here at
@@ -151,7 +166,8 @@ class RollingHorizonSolver:
     (`plan.extras["rho"]`).
     """
 
-    def __init__(self, problem: FleetProblem, stream: ForecastStream, *,
+    def __init__(self, problem: FleetProblem,
+                 stream: ForecastStream | Sequence[ForecastStream], *,
                  policy: str | DRPolicy = "cr1", lam: float = 1.45,
                  cap_frac: float = 0.78, rho: float = 0.02,
                  tax_frac: float = 0.2, cold_steps: int = 600,
@@ -161,11 +177,20 @@ class RollingHorizonSolver:
                  adaptive_warm: bool = False,
                  warm_steps_min: int | None = None,
                  revision_ref: float = 0.05):
-        if stream.horizon != problem.T:
+        streams = (tuple(stream) if isinstance(stream, (list, tuple))
+                   else (stream,))
+        want = problem.R if problem.is_multiregion else 1
+        if len(streams) != want:
             raise ValueError(
-                f"stream horizon {stream.horizon} != problem.T {problem.T}")
+                f"need {want} forecast stream(s) for this problem "
+                f"(R={problem.R}), got {len(streams)}")
+        for s in streams:
+            if s.horizon != problem.T:
+                raise ValueError(
+                    f"stream horizon {s.horizon} != problem.T {problem.T}")
         self.problem = problem
-        self.stream = stream
+        self.streams = streams
+        self.stream = streams[0]
         # Registry names become policy objects configured with the legacy
         # knobs; unknown names fail HERE with the registered choices (an
         # opaque mid-run failure at the first step() otherwise).
@@ -194,12 +219,36 @@ class RollingHorizonSolver:
         self._history: list[TickResult] = []
 
     # -- per-tick plumbing --------------------------------------------------
+    @property
+    def _n_ticks(self) -> int:
+        return min(s.n_ticks for s in self.streams)
+
+    def _forecast(self, tick: int) -> np.ndarray:
+        """This tick's revised horizon: `(T,)`, or `(R, T)` stacked over
+        the per-region streams for a multi-region problem."""
+        if not self.problem.is_multiregion:
+            return self.streams[0].forecast(tick)
+        return np.stack([s.forecast(tick) for s in self.streams])
+
+    def _realized(self, tick: int) -> float | np.ndarray:
+        if not self.problem.is_multiregion:
+            return self.streams[0].realized(tick)
+        return np.array([s.realized(tick) for s in self.streams])
+
+    def _by_region(self, committed: np.ndarray) -> np.ndarray | None:
+        if not self.problem.is_multiregion:
+            return None
+        return np.bincount(np.asarray(self.problem.region),
+                           weights=committed, minlength=self.problem.R)
+
     def _window_problem(self, tick: int, mci: np.ndarray) -> FleetProblem:
         """Slide usage/jobs (and any operational cap) to hours
-        [tick, tick+T) and install `mci`."""
+        [tick, tick+T) and install `mci`. The migration topology is
+        stripped: only hour 0 of each plan is committed, so the per-tick
+        spatial post-stage would price hours that never run."""
         p = self.problem
         return dataclasses.replace(
-            p, mci=np.asarray(mci),
+            p, mci=np.asarray(mci), topology=None,
             usage=np.roll(p.usage, -tick, axis=1),
             jobs=np.roll(p.jobs, -tick, axis=1),
             upper=None if p.upper is None
@@ -222,9 +271,9 @@ class RollingHorizonSolver:
         previous one)."""
         if not self.adaptive_warm or self._prev_forecast is None:
             return self.warm_steps
-        prev = self._prev_forecast[1:]
-        rel = float(np.linalg.norm(mci_hat[:-1] - prev)
-                    / max(np.linalg.norm(prev), 1e-12))
+        prev = self._prev_forecast[..., 1:]
+        rel = float(np.linalg.norm((mci_hat[..., :-1] - prev).ravel())
+                    / max(np.linalg.norm(prev.ravel()), 1e-12))
         frac = min(1.0, rel / self.revision_ref)
         # Quantize to 4 budget levels: the step count is a static jit
         # argument, so a continuum of budgets would compile a fresh trace
@@ -236,7 +285,7 @@ class RollingHorizonSolver:
     def step(self) -> TickResult:
         """Ingest the next forecast revision, re-solve, commit hour 0."""
         tick = self._tick
-        mci_hat = self.stream.forecast(tick)
+        mci_hat = self._forecast(tick)
         p_t = self._window_problem(tick, mci_hat)
         warm = self._state
         # Warm ticks shift the plan one hour and restart the mu schedule at
@@ -252,11 +301,14 @@ class RollingHorizonSolver:
         self._state = plan.state
         self._prev_forecast = mci_hat
         self._tick = tick + 1
+        committed = np.asarray(plan.D[:, 0])
         out = TickResult(
-            tick=tick, committed=np.asarray(plan.D[:, 0]),
-            forecast_mci=float(mci_hat[0]),
-            realized_mci=self.stream.realized(tick),
-            inner_steps=plan.iters, plan=plan)
+            tick=tick, committed=committed,
+            forecast_mci=(float(mci_hat[0]) if mci_hat.ndim == 1
+                          else mci_hat[:, 0].copy()),
+            realized_mci=self._realized(tick),
+            inner_steps=plan.iters, plan=plan,
+            committed_by_region=self._by_region(committed))
         if self._history:   # bound memory: full plans live on the
             self._history[-1] = dataclasses.replace(   # latest tick only
                 self._history[-1], plan=None)
@@ -266,8 +318,8 @@ class RollingHorizonSolver:
     def run(self, n_ticks: int | None = None,
             on_tick: Callable[[TickResult], None] | None = None,
             ) -> StreamingReport:
-        """Run `n_ticks` hours (default: all the stream supports)."""
-        n = self.stream.n_ticks - self._tick if n_ticks is None else n_ticks
+        """Run `n_ticks` hours (default: all the stream(s) support)."""
+        n = self._n_ticks - self._tick if n_ticks is None else n_ticks
         for _ in range(n):
             out = self.step()
             if on_tick is not None:
@@ -283,20 +335,18 @@ class RollingHorizonSolver:
         day is one donated-buffer XLA call instead of 24. Matches the
         per-tick `run()` loop to <0.01 pp realized carbon (CR1/CR2
         only; CR3/B1/B3 need host-side per-tick control flow and raise
-        `NotImplementedError`, as does `mesh=`). Warm-continues from
-        and updates the solver state, so `run_scanned(24)` per day and
-        mixed `step()`/`run_scanned()` schedules both work.
+        `NotImplementedError`). `mesh=` is honoured: the whole day scan
+        runs inside the fleet shard_map (multi-region problems under a
+        mesh are still a ROADMAP follow-up and raise in `solve_day`).
+        Warm-continues from and updates the solver state, so
+        `run_scanned(24)` per day and mixed `step()`/`run_scanned()`
+        schedules both work.
 
         `adaptive_warm` is incompatible: the per-tick budget is a
         static jit argument chosen from the revision magnitude at run
         time, which a fixed scan cannot express — use flat
         `warm_steps` here.
         """
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "run_scanned under a device mesh is a ROADMAP follow-up "
-                "(the day scan must nest inside the fleet shard_map); "
-                "use run() or drop mesh=")
         if self.adaptive_warm:
             raise ValueError(
                 "run_scanned needs a flat warm budget: adaptive_warm "
@@ -304,14 +354,14 @@ class RollingHorizonSolver:
                 "revision at run time, which one fixed scan trace cannot "
                 "express — construct with adaptive_warm=False or use run()")
         t0 = self._tick
-        n = self.stream.n_ticks - t0 if n_ticks is None else n_ticks
+        n = self._n_ticks - t0 if n_ticks is None else n_ticks
         if n <= 0:
             raise ValueError(f"n_ticks must be >= 1, got {n}")
         from repro.core.api import solve_day
-        mci_stack = np.stack([self.stream.forecast(t0 + i)
-                              for i in range(n)])
+        mci_stack = np.stack([self._forecast(t0 + i) for i in range(n)])
         p_win = self._window_problem(t0, mci_stack[0])
-        ctx = SolveContext(donate=self.donate, warm=self._state,
+        ctx = SolveContext(mesh=self.mesh, donate=self.donate,
+                           warm=self._state,
                            use_kernel=self.use_kernel, shift=1,
                            reset_mu=self._state is not None)
         day = solve_day(p_win, self.policy, mci_stack, ctx=ctx,
@@ -322,10 +372,14 @@ class RollingHorizonSolver:
         self._tick = t0 + n
         outs = [TickResult(
             tick=t0 + i, committed=day.committed[i],
-            forecast_mci=float(mci_stack[i][0]),
-            realized_mci=self.stream.realized(t0 + i),
+            forecast_mci=(float(mci_stack[i][0])
+                          if mci_stack[i].ndim == 1
+                          else mci_stack[i][:, 0].copy()),
+            realized_mci=self._realized(t0 + i),
             inner_steps=day.inner_steps[i],
-            plan=day.last if i == n - 1 else None) for i in range(n)]
+            plan=day.last if i == n - 1 else None,
+            committed_by_region=self._by_region(day.committed[i]))
+            for i in range(n)]
         if self._history:   # same memory bound as step()
             self._history[-1] = dataclasses.replace(
                 self._history[-1], plan=None)
@@ -338,10 +392,19 @@ class RollingHorizonSolver:
             raise RuntimeError("no ticks committed yet — call step()/run()")
         committed = np.stack([t.committed for t in ticks], axis=1)
         base_usage = np.asarray(self.problem.usage)
-        baseline = sum(
-            t.realized_mci * float(base_usage[:, t.tick % base_usage.shape[1]]
-                                   .sum())
-            for t in ticks)
+        Tn = base_usage.shape[1]
+        if self.problem.is_multiregion:
+            region = np.asarray(self.problem.region)
+            baseline = sum(
+                float((np.asarray(t.realized_mci)
+                       * np.bincount(region,
+                                     weights=base_usage[:, t.tick % Tn],
+                                     minlength=self.problem.R)).sum())
+                for t in ticks)
+        else:
+            baseline = sum(
+                t.realized_mci * float(base_usage[:, t.tick % Tn].sum())
+                for t in ticks)
         return StreamingReport(
             ticks=ticks, committed=committed,
             realized_carbon=sum(t.realized_carbon for t in ticks),

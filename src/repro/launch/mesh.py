@@ -10,16 +10,28 @@ Production target: TPU v5e pods, 256 chips each.
 
 Fleet-DR sharding: the (W, T) fleet solves in `repro.core.fleet_solver`
 are row-separable over workloads, so they shard W over a 1-D mesh
-(`make_fleet_mesh`, axis `FLEET_AXIS`). On CPU CI that mesh comes from
+(`make_fleet_mesh`, axis `FLEET_AXIS`). Multi-region fleets
+(`FleetProblem` with an (R, T) `mci`) can instead use a 2-D
+(REGION_AXIS, FLEET_AXIS) mesh — `make_fleet_mesh(regions=R)` — where
+the W axis shards over *both* axes: a region-sorted fleet then lands
+each region's row block on one REGION_AXIS slice, so region-local
+reductions never cross the region axis (cross-region migration is a
+host-side post-stage on gathered aggregates, see
+`repro.core.migration`). On CPU CI these meshes come from
 `XLA_FLAGS=--xla_force_host_platform_device_count=N` virtual devices.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import numpy as np
 
 #: Mesh axis name the fleet DR engine shards workloads over.
 FLEET_AXIS = "fleet"
+
+#: Mesh axis name for the region dimension of a 2-D fleet mesh.
+REGION_AXIS = "region"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -35,16 +47,28 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_fleet_mesh(n_devices: int | None = None):
-    """1-D mesh over `n_devices` (default: all) for W-axis fleet sharding.
+def make_fleet_mesh(n_devices: int | None = None, *, regions: int | None = None):
+    """Mesh over `n_devices` (default: all) for W-axis fleet sharding.
 
     Used by `repro.core.api.solve(..., ctx=SolveContext(mesh=...))`:
     workloads, per-workload multipliers, and Adam moments shard over
     `FLEET_AXIS`; the MCI trace and solver scalars stay replicated.
+
+    With `regions=R` the same devices form a 2-D
+    `(REGION_AXIS, FLEET_AXIS)` mesh of shape (R, n // R) for
+    multi-region fleets: a region-sorted fleet's W axis shards over
+    both axes, so each region's row block lands on one REGION_AXIS
+    slice. `regions=None` (the default) keeps today's 1-D layout.
     """
     devs = jax.devices()
     n = len(devs) if n_devices is None else n_devices
-    return jax.sharding.Mesh(np.asarray(devs[:n]), (FLEET_AXIS,))
+    if regions is None:
+        return jax.sharding.Mesh(np.asarray(devs[:n]), (FLEET_AXIS,))
+    if regions < 1 or n % regions:
+        raise ValueError(
+            f"regions={regions} must divide the device count {n}")
+    grid = np.asarray(devs[:n]).reshape(regions, n // regions)
+    return jax.sharding.Mesh(grid, (REGION_AXIS, FLEET_AXIS))
 
 
 def fleet_axis(mesh) -> str:
@@ -57,6 +81,29 @@ def fleet_axis(mesh) -> str:
     raise ValueError(
         f"fleet sharding needs a {FLEET_AXIS!r} axis or a 1-D mesh; got "
         f"axes {mesh.axis_names}")
+
+
+def fleet_axes(mesh):
+    """Axis name(s) the fleet solvers shard W over.
+
+    Returns the plain string from `fleet_axis` for 1-D meshes (so
+    existing `PartitionSpec`s — and their compiled-cache keys — are
+    byte-identical to the pre-2-D-mesh ones) and the
+    `(REGION_AXIS, FLEET_AXIS)` tuple for 2-D fleet meshes, where the
+    W dimension shards over both axes.
+    """
+    names = mesh.axis_names
+    if REGION_AXIS in names and FLEET_AXIS in names:
+        return (REGION_AXIS, FLEET_AXIS)
+    return fleet_axis(mesh)
+
+
+def fleet_device_count(mesh) -> int:
+    """Number of devices the W axis shards over (pad multiple)."""
+    axes = fleet_axes(mesh)
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -199,6 +199,52 @@ def test_configured_policy_knob_mapping():
         configured_policy("cr9")
 
 
+def test_sweep_warm_stacked_states_refine(fp):
+    """Warm refinement sweeps (ISSUE 7 satellite): a stacked warm
+    `EngineState` (one lane per policy, e.g. the previous sweep's states
+    via `stack_states`) rides the vmapped sweep — each lane warm-starts
+    from its own state and matches the per-lane warm `solve()`."""
+    from repro.core.api import stack_states
+    grid = [1.0, 1.45, 2.0]
+    pols = [CR1(lam=lam) for lam in grid]
+    first = sweep(fp, pols, ctx=SolveContext(steps=80))
+    warm = stack_states([r.state for r in first])
+    got = sweep(fp, pols, ctx=SolveContext(steps=40, warm=warm))
+    for lam, r0, r in zip(grid, first, got):
+        ref = solve(fp, CR1(lam=lam),
+                    ctx=SolveContext(steps=40, warm=r0.state))
+        np.testing.assert_allclose(r.D, ref.D, atol=1e-5)
+        assert abs(r.carbon_reduction_pct
+                   - ref.carbon_reduction_pct) < 1e-3
+    caps = [0.74, 0.8]
+    pols2 = [CR2(cap_frac=c, outer=2) for c in caps]
+    first2 = sweep(fp, pols2, ctx=SolveContext(steps=60))
+    got2 = sweep(fp, pols2, ctx=SolveContext(
+        steps=30, warm=stack_states([r.state for r in first2])))
+    for c, r0, r in zip(caps, first2, got2):
+        ref = solve(fp, CR2(cap_frac=c, outer=2),
+                    ctx=SolveContext(steps=30, warm=r0.state))
+        np.testing.assert_allclose(r.D, ref.D, atol=1e-4)
+
+
+def test_sweep_warm_cold_stack_is_bitwise_cold(fp):
+    """A stacked COLD state through the warm lane is bitwise the cold
+    sweep — the `init=` thread adds no numeric drift."""
+    import jax.numpy as jnp
+
+    from repro.core.api import stack_states
+    from repro.core.engine import EngineState
+    from repro.core.fleet_solver import CR1_MU0
+    pols = [CR1(lam=lam) for lam in (1.0, 1.5)]
+    cold = sweep(fp, pols, ctx=SolveContext(steps=60))
+    states = stack_states([
+        EngineState.cold(jnp.zeros(fp.usage.shape), mu0=CR1_MU0)
+        for _ in pols])
+    warm = sweep(fp, pols, ctx=SolveContext(steps=60, warm=states))
+    for a, b in zip(cold, warm):
+        np.testing.assert_array_equal(a.D, b.D)
+
+
 def test_sweep_empty_and_nonuniform(fp):
     assert sweep(fp, []) == []
     # non-uniform static knob (CR2.outer) -> loop fallback, same results

@@ -252,6 +252,99 @@ print("OK")
 """)
 
 
+def test_sharded_2d_mesh_multiregion_parity():
+    """Acceptance (ISSUE 7): a 2-D (REGION_AXIS, FLEET_AXIS) mesh from
+    `make_fleet_mesh(regions=2)` — the W axis sharded over BOTH axes —
+    matches the single-device solve to <0.01 pp for a single-region
+    fleet and for a multi-region R=2 fleet under all three policies,
+    and the host-side migration post-stage rides the sharded solve."""
+    run_in_subprocess("""
+import dataclasses
+import numpy as np
+from repro.core.api import CR1, CR2, CR3, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet, synthetic_regional_fleet
+from repro.launch.mesh import (FLEET_AXIS, REGION_AXIS, fleet_axes,
+                               fleet_device_count, make_fleet_mesh)
+
+mesh = make_fleet_mesh(regions=2)
+assert mesh.axis_names == (REGION_AXIS, FLEET_AXIS)
+assert fleet_axes(mesh) == (REGION_AXIS, FLEET_AXIS)
+assert fleet_device_count(mesh) == 8
+try:
+    make_fleet_mesh(regions=3)
+except ValueError as e:
+    assert "divide" in str(e)
+else:
+    raise AssertionError("regions=3 must reject 8 devices")
+
+# single-region fleet on the 2-D mesh: W=13 pads to 16 over 2x4 devices
+p = synthetic_fleet(13)
+a = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=300))
+b = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=300, mesh=mesh))
+gap = abs((1.45 * a.total_penalty_pct - a.carbon_reduction_pct)
+          - (1.45 * b.total_penalty_pct - b.carbon_reduction_pct))
+assert gap < 0.01, f"single-region 2-D gap {gap}"
+assert b.D.shape == (13, 48)
+
+# multi-region R=2 fleet (no topology: keep the comparison pure solve)
+pr = dataclasses.replace(
+    synthetic_regional_fleet(13, ["CA", "TX"], hours=48, seed=0,
+                             utc_offsets="auto"),
+    topology=None)
+for pol, steps in ((CR1(lam=1.45), 300), (CR2(cap_frac=0.8, outer=2), 200),
+                   (CR3(outer=2, clearing_iters=2), 200)):
+    a = solve(pr, pol, ctx=SolveContext(steps=steps))
+    b = solve(pr, pol, ctx=SolveContext(steps=steps, mesh=mesh))
+    gc = abs(a.carbon_reduction_pct - b.carbon_reduction_pct)
+    gp = abs(a.total_penalty_pct - b.total_penalty_pct)
+    assert gc < 0.01, f"{pol.name} 2-D carbon gap {gc}"
+    assert gp < 0.01, f"{pol.name} 2-D penalty gap {gp}"
+    assert b.D.shape == (13, 48)
+    # the same multi-region problem also accepts the 1-D fleet mesh
+    c = solve(pr, pol, ctx=SolveContext(steps=steps, mesh=make_fleet_mesh()))
+    assert abs(a.carbon_reduction_pct - c.carbon_reduction_pct) < 0.01
+
+# migration post-stage (host-side) rides the sharded solve: same credit
+# as off-mesh up to the D parity tolerance
+pm = synthetic_regional_fleet(13, ["CA", "TX"], hours=48, seed=0,
+                              utc_offsets="auto")
+rm1 = solve(pm, CR1(lam=1.45), ctx=SolveContext(steps=300))
+rm8 = solve(pm, CR1(lam=1.45), ctx=SolveContext(steps=300, mesh=mesh))
+assert rm8.extras["migration"].net_saved > 0.0
+assert abs(rm1.extras["migration"].net_saved
+           - rm8.extras["migration"].net_saved) \
+    < 0.05 * rm1.extras["migration"].net_saved + 1e-6
+print("OK")
+""")
+
+
+def test_sharded_scanned_day_runs_on_mesh():
+    """The whole-day `run_scanned` scan now accepts `mesh=` (the PR-6
+    guard is lifted): the day scan inside the fleet shard_map commits
+    the same plans as the unsharded per-tick loop."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1
+from repro.core.carbon import ForecastStream
+from repro.core.fleet_solver import synthetic_fleet
+from repro.core.streaming import RollingHorizonSolver
+from repro.launch.mesh import make_fleet_mesh
+
+p = synthetic_fleet(13)
+mk = lambda: ForecastStream.caiso(n_ticks=4, horizon=p.T, seed=5)
+plain = RollingHorizonSolver(p, mk(), policy=CR1(lam=1.45),
+                             cold_steps=300, warm_steps=100).run(4)
+mesh = make_fleet_mesh()
+scan = RollingHorizonSolver(p, mk(), policy=CR1(lam=1.45),
+                            cold_steps=300, warm_steps=100,
+                            mesh=mesh).run_scanned(4)
+assert np.abs(plain.committed - scan.committed).max() < 1e-3
+assert abs(plain.realized_reduction_pct
+           - scan.realized_reduction_pct) < 0.01
+print("OK")
+""")
+
+
 def test_sharded_sweep_parity():
     """Acceptance: `sweep(p, grid, ctx=SolveContext(mesh=...))` — the
     hyper axis vmapped INSIDE the W-axis shard_map — matches per-policy

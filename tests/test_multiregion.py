@@ -1,0 +1,207 @@
+"""Multi-region fleet engine: (region × workload) data model, per-region
+MCI pricing, cross-region load migration, and R=1 degeneracy.
+
+Acceptance (ISSUE 7): an R=3 fleet tracking three Cambium state mixes
+beats the best single-signal solve on fleet-wide carbon at equal total
+curtailment; R=1 is bitwise-identical to the single-region engine; a
+zero-bandwidth topology decomposes into independent per-region solves.
+The 2-D mesh parity lanes live in tests/test_fleet_sharding.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.api import CR1, CR2, CR3, SolveContext, solve, sweep
+from repro.core.carbon import regional_traces
+from repro.core.fleet_solver import (RegionTopology, _single_region_view,
+                                     regional_fleet, synthetic_fleet,
+                                     synthetic_regional_fleet)
+from repro.core.migration import MigrationPlan, fleet_migration
+
+
+# ---------------------------------------------------------------------------
+# Data model
+# ---------------------------------------------------------------------------
+def test_region_topology_validates_shapes():
+    with pytest.raises(ValueError, match="cost/bandwidth"):
+        RegionTopology(cost=np.zeros((2, 2)),
+                       bandwidth=np.zeros((3, 3))).validate(2, 24)
+    with pytest.raises(ValueError, match="ceiling"):
+        RegionTopology(cost=np.zeros((2, 2)), bandwidth=np.zeros((2, 2)),
+                       ceiling=np.zeros(3)).validate(2, 24)
+    RegionTopology(cost=np.zeros((2, 2)), bandwidth=np.zeros((2, 2)),
+                   ceiling=np.zeros((2, 24))).validate(2, 24)
+
+
+def test_regional_fleet_composes_and_validates():
+    mcis, labels = regional_traces(["CA", "TX"], 2050, hours=48)
+    assert mcis.shape == (2, 48) and len(labels) == 2
+    fleets = [synthetic_fleet(3, seed=0), synthetic_fleet(4, seed=1)]
+    p = regional_fleet(fleets, mcis)
+    assert p.is_multiregion and p.R == 2 and p.W == 7
+    np.testing.assert_array_equal(np.asarray(p.region),
+                                  [0, 0, 0, 1, 1, 1, 1])
+    with pytest.raises(ValueError, match="one trace per fleet"):
+        regional_fleet(fleets, mcis[0])
+    with pytest.raises(ValueError, match="single-region"):
+        regional_fleet([p], mcis[:1])
+
+
+def test_single_region_view_canonicalizes_degenerate_r1():
+    fp = synthetic_fleet(4, seed=2)
+    pr = regional_fleet([fp], np.asarray(fp.mci)[None])
+    assert pr.is_multiregion and pr.R == 1
+    view = _single_region_view(pr)
+    assert not view.is_multiregion
+    assert view.region is None and view.topology is None
+    np.testing.assert_array_equal(np.asarray(view.mci),
+                                  np.asarray(pr.mci)[0])
+
+
+# ---------------------------------------------------------------------------
+# R=1 bitwise parity with the single-region engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [
+    CR1(lam=1.45), CR2(cap_frac=0.8, outer=2),
+    CR3(outer=2, clearing_iters=2)])
+def test_r1_regional_solve_is_bitwise_single_region(policy):
+    """The degenerate R=1 fleet takes the exact pre-refactor code path:
+    D, reported metrics, and engine state are byte-for-byte equal."""
+    fp = synthetic_fleet(5, seed=3)
+    pr = regional_fleet([fp], np.asarray(fp.mci)[None])
+    ctx = SolveContext(steps=100)
+    a = solve(fp, policy, ctx=ctx)
+    b = solve(pr, policy, ctx=ctx)
+    np.testing.assert_array_equal(a.D, b.D)
+    assert a.carbon_reduction_pct == b.carbon_reduction_pct
+    assert a.total_penalty_pct == b.total_penalty_pct
+    np.testing.assert_array_equal(np.asarray(a.state.x),
+                                  np.asarray(b.state.x))
+
+
+def test_r1_regional_sweep_is_bitwise_single_region():
+    fp = synthetic_fleet(5, seed=3)
+    pr = regional_fleet([fp], np.asarray(fp.mci)[None])
+    pols = [CR1(lam=lam) for lam in (1.0, 1.45)]
+    ctx = SolveContext(steps=80)
+    for a, b in zip(sweep(fp, pols, ctx=ctx), sweep(pr, pols, ctx=ctx)):
+        np.testing.assert_array_equal(a.D, b.D)
+
+
+# ---------------------------------------------------------------------------
+# bandwidth=0: the joint solve decomposes into per-region solves
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [
+    CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)])
+def test_zero_bandwidth_decomposes_into_per_region_solves(policy):
+    """Per-region normalization makes the joint multi-region problem
+    row-separable across regions: with no migration the R=2 solve must
+    reproduce the two independent single-region solves."""
+    mcis, _ = regional_traces(["CA", "TX"], 2050, hours=48)
+    fleets = [synthetic_fleet(5, seed=3), synthetic_fleet(6, seed=7)]
+    joint = regional_fleet(fleets, mcis)       # no topology: no migration
+    assert joint.topology is None
+    ctx = SolveContext(steps=300)
+    res = solve(joint, policy, ctx=ctx)
+    assert "migration" not in res.extras
+    region = np.asarray(joint.region)
+    for r, f in enumerate(fleets):
+        indep = solve(dataclasses.replace(f, mci=mcis[r]), policy, ctx=ctx)
+        np.testing.assert_allclose(np.asarray(res.D)[region == r],
+                                   np.asarray(indep.D), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Migration: feasibility, accounting, and the solve() credit
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_migration_plan_is_feasible_and_credited():
+    """`solve()` on a topology with positive bandwidth leaves D untouched
+    (equal total curtailment) and credits the net migration saving; the
+    plan respects every link cap, supply, and headroom exactly."""
+    p = synthetic_regional_fleet(9, ["CA", "TX", "NY"], hours=24, seed=0)
+    ctx = SolveContext(steps=300)
+    res = solve(p, CR1(lam=1.45), ctx=ctx)
+    off = solve(dataclasses.replace(p, topology=None), CR1(lam=1.45),
+                ctx=ctx)
+    np.testing.assert_array_equal(res.D, off.D)
+    plan = res.extras["migration"]
+    assert isinstance(plan, MigrationPlan)
+    assert plan.net_saved > 0.0
+    wmci = np.asarray(p.mci)[np.asarray(p.region)]
+    base = float((np.asarray(p.usage) * wmci).sum())
+    assert res.carbon_reduction_pct == pytest.approx(
+        off.carbon_reduction_pct + 100.0 * plan.net_saved / base)
+    # exact feasibility after the repair pass
+    y = plan.y
+    bw = np.asarray(p.topology.bandwidth)
+    assert (y >= 0.0).all()
+    assert (y <= bw[:, :, None] + 1e-9).all()
+    assert np.abs(np.trace(y.sum(axis=2))) == 0.0    # no self-flows
+    residual = np.asarray(p.usage) - np.asarray(res.D)
+    is_batch = np.asarray(p.is_batch, bool)
+    movable = np.zeros((p.R, p.T))
+    np.add.at(movable, np.asarray(p.region)[is_batch],
+              np.maximum(residual[is_batch], 0.0))
+    assert (y.sum(axis=1) <= movable + 1e-6).all()   # supply caps
+    # the same plan comes from the public helper
+    again = fleet_migration(p, np.asarray(res.D))
+    np.testing.assert_allclose(again.y, y, atol=1e-12)
+
+
+def test_zero_bandwidth_topology_yields_zero_plan():
+    p = synthetic_regional_fleet(
+        6, ["CA", "TX"], hours=24, seed=1,
+        topology=RegionTopology(cost=np.full((2, 2), 2.0),
+                                bandwidth=np.zeros((2, 2))))
+    res = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=150))
+    assert "migration" not in res.extras
+    plan = fleet_migration(p, np.asarray(res.D))
+    assert plan.moved_total == 0.0 and plan.net_saved == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: R=3 fleet beats the best single-signal solve
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_r3_regional_beats_best_single_signal_solve():
+    """Headline: pricing each region on its own Cambium trace (plus
+    migration) eliminates more fleet-wide carbon than pricing the whole
+    fleet on ANY single region's trace, at equal total curtailment.
+
+    `utc_offsets="auto"` rolls each state trace onto the shared UTC
+    clock the fleet actually runs on — the duck-curve troughs land at
+    different hours per region, which is exactly the timing diversity a
+    single shared signal cannot express.  Comparison is at equal total
+    curtailment: a feasible plan scaled down uniformly stays feasible
+    (the box shrinks toward 0 and batch day-sums stay zero), so each
+    single-signal solve is down-scaled to the multi solve's curtailment
+    and its realized reduction scales with it.
+    """
+    base_p = synthetic_regional_fleet(9, ["CA", "TX", "NY"], hours=48,
+                                      seed=0, utc_offsets="auto")
+    ent = float(np.asarray(base_p.entitlement).sum())
+    bw = np.full((3, 3), 0.15 * ent / 2)
+    np.fill_diagonal(bw, 0.0)
+    p = dataclasses.replace(
+        base_p, topology=RegionTopology(cost=np.full((3, 3), 1.0),
+                                        bandwidth=bw))
+    wmci = np.asarray(p.mci)[np.asarray(p.region)]
+    base = float((np.asarray(p.usage) * wmci).sum())
+    ctx = SolveContext(steps=400)
+    multi = solve(p, CR1(lam=1.45), ctx=ctx)
+    multi_curtail = float(np.asarray(multi.D).sum())
+    assert 100.0 * multi.extras["migration"].net_saved / base > 1.0
+    best = -np.inf
+    for r in range(p.R):
+        single = dataclasses.replace(p, mci=np.asarray(p.mci)[r],
+                                     region=None, topology=None)
+        rs = solve(single, CR1(lam=1.45), ctx=ctx)
+        realized = 100.0 * float((np.asarray(rs.D) * wmci).sum()) / base
+        curtail = float(np.asarray(rs.D).sum())
+        # every single signal curtails at least as much as the multi
+        # solve here, so scaling down to multi_curtail is feasible
+        assert curtail >= multi_curtail
+        best = max(best, realized * multi_curtail / curtail)
+    assert multi.carbon_reduction_pct > best + 0.5

@@ -9,7 +9,7 @@ import pytest
 from repro.core.api import CR1, CR2, SolveContext, solve
 from repro.core.carbon import ForecastStream, caiso_2021
 from repro.core.engine import EngineConfig, EngineState, al_minimize
-from repro.core.fleet_solver import synthetic_fleet
+from repro.core.fleet_solver import synthetic_fleet, synthetic_regional_fleet
 from repro.core.streaming import RollingHorizonSolver
 
 
@@ -378,10 +378,15 @@ def test_run_scanned_guards():
     with pytest.raises(NotImplementedError, match="CR1/CR2"):
         RollingHorizonSolver(p, mk(), policy="cr3", cold_steps=20,
                              warm_steps=5).run_scanned(2)
-    with pytest.raises(NotImplementedError, match="mesh"):
-        RollingHorizonSolver(p, mk(), mesh=object()).run_scanned(2)
     with pytest.raises(ValueError, match="n_ticks"):
         RollingHorizonSolver(p, mk()).run_scanned(0)
+    # a mesh is fine for single-region days now (the scan nests inside the
+    # shard_map); multi-region + mesh stays a solve_day follow-up
+    pr = synthetic_regional_fleet(4, ["CA", "TX"], hours=p.T, seed=0)
+    streams = [ForecastStream(actual=np.tile(m, 2), horizon=p.T, seed=i)
+               for i, m in enumerate(np.asarray(pr.mci))]
+    with pytest.raises(NotImplementedError, match="mesh"):
+        RollingHorizonSolver(pr, streams, mesh=object()).run_scanned(2)
 
 
 def test_solve_day_validates_inputs():
@@ -392,8 +397,11 @@ def test_solve_day_validates_inputs():
         solve_day(object(), "cr1", stack)
     with pytest.raises(ValueError, match="mci_stack"):
         solve_day(p, "cr1", stack[:, :10])
+    # single-region + mesh is supported now; multi-region + mesh is not
+    pr = synthetic_regional_fleet(4, ["CA", "TX"], hours=p.T, seed=0)
+    rstack = np.stack([np.asarray(pr.mci)] * 2)
     with pytest.raises(NotImplementedError, match="mesh"):
-        solve_day(p, "cr1", stack, ctx=SolveContext(mesh=object()))
+        solve_day(pr, "cr1", rstack, ctx=SolveContext(mesh=object()))
     with pytest.raises(NotImplementedError, match="host-side"):
         solve_day(p, "b1", stack)
     day = solve_day(p, CR1(lam=1.45), stack, cold_steps=40)
@@ -405,6 +413,35 @@ def test_solve_day_validates_inputs():
                      ctx=SolveContext(warm=day.last.state), cold_steps=40)
     assert day2.inner_steps == (10, 10)
     assert np.isfinite(day2.committed).all()
+
+
+@pytest.mark.slow
+def test_rolling_horizon_multiregion_run_and_scan():
+    """Multi-region streaming: one ForecastStream per region, per-region
+    committed accounting, and run_scanned parity with the step() loop."""
+    p = synthetic_regional_fleet(8, ["CA", "TX"], hours=24, seed=5)
+
+    def mk():
+        return [ForecastStream(actual=np.tile(m, 2), horizon=p.T,
+                               revision_sigma=0.03, seed=i)
+                for i, m in enumerate(np.asarray(p.mci))]
+
+    kw = dict(policy="cr1", cold_steps=120, warm_steps=40)
+    loop = RollingHorizonSolver(p, mk(), **kw).run(3)
+    tk = loop.ticks[0]
+    assert tk.committed_by_region is not None
+    assert tk.committed_by_region.shape == (2,)
+    assert np.asarray(tk.realized_mci).shape == (2,)
+    assert tk.committed_by_region.sum() == pytest.approx(
+        tk.committed.sum())
+    assert 0 < loop.realized_reduction_pct < 100
+    scan = RollingHorizonSolver(p, mk(), **kw).run_scanned(3)
+    assert abs(scan.realized_reduction_pct
+               - loop.realized_reduction_pct) < 0.01
+    np.testing.assert_allclose(scan.committed, loop.committed, atol=5e-3)
+    # one stream per region is enforced
+    with pytest.raises(ValueError, match="forecast stream"):
+        RollingHorizonSolver(p, mk()[:1])
 
 
 @pytest.mark.slow
