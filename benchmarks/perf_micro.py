@@ -411,7 +411,10 @@ def fleet_region_scale() -> list[str]:
     path (which canonicalizes onto the single-region engine, so its row
     doubles as the refactor's zero-overhead check), plus the host-side
     migration post-stage (`fleet_migration`) timed separately — it runs
-    once per committed plan, not per solver step."""
+    once per committed plan, not per solver step. R>1 rows also time the
+    coupled in-loop migration solve (`SolveContext(coupled_migration=
+    True)`) against the post-stage pipeline end to end: the carbon delta
+    it buys and what the joint (D, y) refine costs in wall-clock."""
     from repro.core.api import CR1, SolveContext, solve
     from repro.core.carbon import regional_traces
     from repro.core.fleet_solver import (RegionTopology, regional_fleet,
@@ -447,4 +450,21 @@ def fleet_region_scale() -> list[str]:
                 derived += (f" mig_ms={us_mig / 1e3:.0f}"
                             f" mig_net={plan.net_saved:.0f}")
             rows.append(row(f"fleet_region_R{R}_W{W}", us, derived))
+            if R > 1:
+                post = solve(pt, cr1, ctx=ctx)          # compile + result
+                us_post = timeit(lambda: solve(pt, cr1, ctx=ctx),
+                                 repeats=1, warmup=0)
+                cctx = dataclasses.replace(ctx, coupled_migration=True)
+                coup = solve(pt, cr1, ctx=cctx)         # compile + result
+                us_coup = timeit(lambda: solve(pt, cr1, ctx=cctx),
+                                 repeats=1, warmup=0)
+                delta = (coup.carbon_reduction_pct
+                         - post.carbon_reduction_pct)
+                rows.append(row(
+                    f"fleet_region_coupled_R{R}_W{W}", us_coup,
+                    f"R={R} W={p.W} post_ms={us_post / 1e3:.0f}"
+                    f" post={post.carbon_reduction_pct:.2f}%"
+                    f" coupled={coup.carbon_reduction_pct:.2f}%"
+                    f" delta={delta:+.3f}pp"
+                    f" used={bool(coup.extras.get('coupled_migration'))}"))
     return rows

@@ -20,7 +20,7 @@ import traceback
 
 #: value with an optional unit suffix the benchmarks emit (%, x, pp, ms,
 #: us, s, ...): group 1 is the numeric part.
-_NUM = re.compile(r"^(-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)([a-zA-Z%/]{0,3})$")
+_NUM = re.compile(r"^([+-]?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)([a-zA-Z%/]{0,3})$")
 
 
 def _parse_rows(rows) -> list[dict]:

@@ -10,7 +10,9 @@ not have:
      marginal carbon, not a fleet-wide proxy; and
   2. cross-region load migration — deferrable batch slack moves toward
      the momentarily-cleaner region through a `RegionTopology`
-     (bandwidth-capped, tolled), credited as a host-side post-stage.
+     (bandwidth-capped, tolled), either as a host-side post-stage on the
+     frozen plan or — `SolveContext(coupled_migration=True)` — refined
+     jointly with curtailment inside the AL solve (compared below).
 
 The comparison is at equal total curtailment: each single-signal plan
 is scaled down to the multi-region plan's curtailment (a uniformly
@@ -73,6 +75,21 @@ def main() -> None:
         out = plan.by_region()[r]
         arrow = "exports" if out > 0 else "imports"
         print(f"  {s}: {arrow} {abs(out):.1f} NP of batch slack")
+
+    # In-loop vs post-stage migration: the post-stage above migrates a
+    # FROZEN plan; coupled_migration=True gives the AL solve the
+    # interconnect flow variables too, so curtailment can shift toward
+    # hours where a profitable (spread > toll) link has spare bandwidth.
+    # The coupled candidate is only kept when it beats the post-stage at
+    # equal total curtailment — it can match but never lose.
+    coup = solve(p, pol,
+                 ctx=dataclasses.replace(ctx, coupled_migration=True))
+    kept = ("in-loop candidate kept"
+            if coup.extras.get("coupled_migration")
+            else "post-stage kept (coupled did not beat it)")
+    print(f"\nin-loop (coupled) migration: "
+          f"↓{coup.carbon_reduction_pct:.2f}% vs post-stage "
+          f"↓{multi.carbon_reduction_pct:.2f}% — {kept}")
 
     # What any ONE signal would have done, scaled to the same total
     # curtailment so the comparison is apples-to-apples.

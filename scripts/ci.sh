@@ -159,6 +159,48 @@ for pol in (CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)):
 print("multi-region smoke OK")
 PY
 
+  echo "== multi-region day-scan smoke (R=2 on 2 virtual devices) =="
+  # The ISSUE-8 regional-reductions layer end-to-end on a tiny mesh: the
+  # whole-day scan with per-region norms riding the shard_map matches the
+  # unsharded per-tick loop, and one coupled-migration solve never loses
+  # to the post-stage at equal total curtailment.
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import dataclasses
+import numpy as np
+from repro.core.api import CR1, SolveContext, solve
+from repro.core.fleet_solver import synthetic_regional_fleet
+from repro.core.scenario import ForecastRegime
+from repro.core.streaming import RollingHorizonSolver
+from repro.launch.mesh import make_fleet_mesh
+
+pr = dataclasses.replace(
+    synthetic_regional_fleet(8, ["CA", "TX"], hours=48, seed=0,
+                             utc_offsets="auto"),
+    topology=None)
+mk = lambda: ForecastRegime(n_scenarios=1, seed=5,
+                            sigma=(0.03, 0.03)).streams(pr, n_ticks=3)[0]
+kw = dict(policy=CR1(lam=1.45), cold_steps=150, warm_steps=50)
+loop = RollingHorizonSolver(pr, mk(), **kw).run(3)
+mesh = make_fleet_mesh()
+assert len(mesh.devices.ravel()) == 2
+scan = RollingHorizonSolver(pr, mk(), **kw, mesh=mesh).run_scanned(3)
+gap = abs(loop.realized_reduction_pct - scan.realized_reduction_pct)
+assert gap < 0.01, f"multi-region scanned-day parity gap {gap}pp"
+
+p = synthetic_regional_fleet(12, ["CA", "TX"], hours=48, seed=0,
+                             utc_offsets="auto")
+post = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=150))
+coup = solve(p, CR1(lam=1.45),
+             ctx=SolveContext(steps=150, coupled_migration=True))
+assert coup.carbon_reduction_pct >= post.carbon_reduction_pct
+tot_p, tot_c = (float(np.asarray(r.D).sum()) for r in (post, coup))
+assert abs(tot_c - tot_p) <= 2e-3 * max(abs(tot_p), 1.0)
+print(f"multi-region day-scan smoke OK (gap {gap:.1e}pp, coupled "
+      f"{coup.carbon_reduction_pct:.2f}% vs post "
+      f"{post.carbon_reduction_pct:.2f}%)")
+PY
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

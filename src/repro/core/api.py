@@ -76,6 +76,14 @@ from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
                                      _report, _single_region_view,
                                      cr2_reference_fleet, fleet_penalties,
                                      pad_fleet, resolve_use_kernel)
+from repro.core.regional import (CR1_NORM_FILLS, CR2_NORM_FILLS,
+                                 cr1_norms as _cr1_norms,
+                                 cr2_norms as _cr2_norms,
+                                 cr3_reg_scale as _cr3_reg_scale,
+                                 norm_specs as _norm_specs,
+                                 pad_row_norms as _pad_row_norms,
+                                 region_sum as _rsum,
+                                 region_totals as _region_totals)
 from repro.launch.mesh import fleet_axes, fleet_device_count
 
 Array = jax.Array
@@ -116,6 +124,17 @@ class SolveContext:
         ("float32" or "bfloat16") — threaded to `EngineConfig` on the
         CR1/CR2 solo and sharded paths and `solve_day`; x always keeps a
         float32 master copy. Sweeps/ensembles stay float32.
+      coupled_migration: move cross-region migration INTO the solve.
+        After the base (per-region) solve, curtailment and interconnect
+        flows refine *jointly* under the same AL engine — per-link
+        bandwidth caps in the projection, tolls in the objective, supply
+        and ceiling limits as coupled inequality residuals — then the
+        flows pass `core.migration`'s exact-feasibility repair. The
+        host-side post-stage stays the validation reference: the coupled
+        plan is kept only at equal total curtailment and when it beats
+        the post-stage on fleet-wide carbon, so enabling this never
+        loses carbon. CR1/CR2 multi-region only; everything else falls
+        back to the post-stage.
     """
     mesh: Any = None
     donate: bool = False
@@ -125,6 +144,7 @@ class SolveContext:
     use_kernel: bool | None = None
     steps: int | None = None
     moment_dtype: str = "float32"
+    coupled_migration: bool = False
 
     def resolved_steps(self, policy: "DRPolicy") -> int:
         return self.steps if self.steps is not None else policy.default_steps
@@ -213,7 +233,11 @@ def solve(problem: FleetProblem, policy, *,
             f"solve() takes a FleetProblem (convert a DRProblem with "
             f"FleetProblem.from_problem); got {type(problem).__name__}")
     problem = _single_region_view(problem)
-    res = resolve_policy(policy).solve(problem, ctx or SolveContext())
+    ctx = ctx or SolveContext()
+    policy = resolve_policy(policy)
+    res = policy.solve(problem, ctx)
+    if ctx.coupled_migration:
+        return _coupled_migrate(problem, policy, res, ctx)
     return _maybe_migrate(problem, res)
 
 
@@ -265,13 +289,34 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
             res = [pl.solve(problem, ctx) for pl in pols]
     else:
         res = fam._sweep_family(problem, pols, ctx)
+    if ctx.coupled_migration:
+        return [_coupled_migrate(problem, pl, r, ctx)
+                for pl, r in zip(pols, res)]
     return [_maybe_migrate(problem, r) for r in res]
 
 
 def stack_states(states: Sequence[EngineState]) -> EngineState:
     """Stack per-lane `EngineState`s (e.g. `[r.state for r in sweep(...)]`)
     along a new leading axis — the warm-start shape `sweep()` expects for
-    a warm refinement sweep (`ctx.warm=stack_states(...)`)."""
+    a warm refinement sweep (`ctx.warm=stack_states(...)`).
+
+    Leaf shapes must agree across lanes; multi-region and mesh-padded
+    states keep the same (W, T) leaf layout as single-region ones, but a
+    mesh-padded state (W rounded up to the device grid) cannot stack
+    with an unpadded one — re-solve on the same mesh, or slice back to
+    the true fleet, before stacking. Mismatches raise here with the
+    offending lane instead of deep inside `jnp.stack`."""
+    states = list(states)
+    if not states:
+        raise ValueError("stack_states needs at least one EngineState")
+    ref = [jnp.shape(leaf) for leaf in jax.tree_util.tree_leaves(states[0])]
+    for i, st in enumerate(states[1:], 1):
+        shapes = [jnp.shape(leaf) for leaf in jax.tree_util.tree_leaves(st)]
+        if shapes != ref:
+            raise ValueError(
+                f"stack_states: state {i} has leaf shapes {shapes}, but "
+                f"state 0 has {ref} — all lanes must come from solves of "
+                "the same (identically padded) fleet")
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
@@ -300,6 +345,172 @@ def _maybe_migrate(p: FleetProblem, res: FleetSolveResult):
         carbon_reduction_pct=res.carbon_reduction_pct
         + 100.0 * plan.net_saved / carbon_base,
         extras={**res.extras, "migration": plan})
+
+
+def _coupled_impl(p: FleetProblem, D0, hyper, refs, fr, to, bw, cost,
+                  ceil, *, mode: str, steps: int, outer: int,
+                  use_kernel: bool, has_ceiling: bool):
+    """Joint (curtailment, interconnect-flow) refinement — the coupled
+    in-loop migration solve. The primal is `z = concat([D (W, T),
+    y (L, T)])` over the L positive-bandwidth links; one `al_minimize`
+    call minimizes the policy objective on D minus the normalized
+    toll-adjusted flow value, with link caps in the projection, per-
+    region supply (movable batch curtailment >= outflow) and ceiling
+    (headroom >= inflow) limits as coupled inequality residuals, and a
+    total-curtailment pin back to the base plan `D0` as an equality
+    residual (CR2 keeps its per-row fairness equalities alongside).
+
+    The coupling terms segment-sum across rows, so this solve is NOT
+    row-separable — it runs as one unsharded call (like the post-stage,
+    the coupled refine operates at (R, T)/(L, T) aggregate scale on top
+    of the fleet solve; the fused `al_step` kernel only accelerates the
+    row-separable base solve that precedes it). Returns (D, y, pens)
+    eps-feasible; the caller repairs y exactly via `migration._repair`.
+    """
+    f32 = jnp.float32
+    W, T = p.usage.shape
+    L = bw.shape[0]
+    mci = jnp.asarray(p.mci, f32)
+    R = mci.shape[0]
+    region = jnp.asarray(p.region)
+    usage = jnp.asarray(p.usage, f32)
+    isb = jnp.asarray(p.is_batch)[:, None]
+    D0 = jnp.asarray(D0, f32)
+    margin = mci[fr] - mci[to] - cost[:, None]            # (L, T)
+    flow_norm = 100.0 / (usage * mci[region]).sum()
+    if mode == "cr1":
+        obj_D, project_D, step_D = _cr1_pieces(p, use_kernel)
+        eq_D = None
+    else:
+        obj_D, eq_D, project_D, step_D = _cr2_pieces(p, refs, use_kernel)
+
+    movable0 = jax.ops.segment_sum(
+        jnp.where(isb, jnp.maximum(usage - D0, 0.0), 0.0), region,
+        num_segments=R)
+    sscale = jnp.maximum(movable0.max(), 1.0)
+    curt_scale = jnp.maximum(jnp.abs(D0).sum(), 1.0)
+    D0_sum = D0.sum()
+    bwcol = bw[:, None]
+
+    def objective(z, hyp):
+        D, y = z[:W], z[W:]
+        return obj_D(D, hyp) - flow_norm * (y * margin).sum()
+
+    def project(z):
+        return jnp.concatenate(
+            [project_D(z[:W]), jnp.clip(z[W:], 0.0, bwcol)])
+
+    def eq(z, hyp):
+        curt = ((z[:W].sum() - D0_sum) / curt_scale)[None]
+        if eq_D is None:
+            return curt
+        return jnp.concatenate([eq_D(z[:W], hyp), curt])
+
+    def ineq(z, hyp):
+        D, y = z[:W], z[W:]
+        movable = jax.ops.segment_sum(
+            jnp.where(isb, jnp.maximum(usage - D, 0.0), 0.0), region,
+            num_segments=R)
+        outflow = jax.ops.segment_sum(y, fr, num_segments=R)
+        res = ((movable - outflow) / sscale).ravel()
+        if has_ceiling:
+            load = jax.ops.segment_sum(usage - D, region, num_segments=R)
+            inflow = jax.ops.segment_sum(y, to, num_segments=R)
+            res = jnp.concatenate(
+                [res, ((ceil - load - inflow) / sscale).ravel()])
+        return res
+
+    step = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(step_D, f32), (W, 1)),
+         jnp.full((L, 1), 0.1 * sscale, f32)])
+    cfg = EngineConfig(inner_steps=steps, outer_steps=outer, mu0=10.0,
+                       mu_growth=3.0)
+    z0 = jnp.concatenate([D0, jnp.zeros((L, T), f32)])
+    z, _ = al_minimize(objective, project, z0, hyper=hyper,
+                       eq_residual=eq, ineq_residual=ineq,
+                       step_scale=step, cfg=cfg)
+    D = z[:W]
+    return D, z[W:], fleet_penalties(p, D, use_kernel)
+
+
+_COUPLED_STATIC = ("mode", "steps", "outer", "use_kernel", "has_ceiling")
+_coupled_run = jax.jit(_coupled_impl, static_argnames=_COUPLED_STATIC)
+
+
+def _coupled_migrate(p: FleetProblem, policy, res: FleetSolveResult,
+                     ctx: SolveContext) -> FleetSolveResult:
+    """In-loop coupled migration (see `SolveContext.coupled_migration`):
+    jointly refine (D, flows) from the base solve's plan, repair the
+    flows to exact feasibility, and keep the refined plan only when it
+    preserves total curtailment (1e-3 relative) AND beats the host-side
+    post-stage on fleet-wide carbon — otherwise the post-stage result is
+    returned, so coupled never loses to the validation reference."""
+    from repro.core.migration import (MigrationPlan, _repair,
+                                      positive_links, region_aggregates)
+    if (p.topology is None or not p.is_multiregion
+            or type(policy) not in (CR1, CR2)):
+        return _maybe_migrate(p, res)
+    fr, to, bw, cost = positive_links(p.topology)
+    if fr.size == 0:
+        return _maybe_migrate(p, res)
+    post = _maybe_migrate(p, res)
+    use_kernel = resolve_use_kernel(ctx.use_kernel)
+    steps = ctx.resolved_steps(policy)
+    R, T = p.R, p.T
+    mci = np.asarray(p.mci, float)
+    ceiling = p.topology.ceiling
+    has_ceiling = ceiling is not None
+    if has_ceiling:
+        ceil = np.asarray(ceiling, float)
+        if ceil.ndim == 1:
+            ceil = np.broadcast_to(ceil[:, None], (R, T))
+    else:
+        ceil = np.zeros((R, T))
+    if type(policy) is CR1:
+        hyper, refs, mode, outer = policy.lam, None, "cr1", 4
+    else:
+        refs = jnp.asarray(cr2_reference_fleet(p, policy.cap_frac))
+        hyper, mode, outer = None, "cr2", max(4, policy.outer)
+    D0 = np.asarray(res.D, float)
+    D_f, y_l, pens = _coupled_run(
+        _jit_view(p), jnp.asarray(D0, jnp.float32), hyper, refs,
+        jnp.asarray(fr), jnp.asarray(to), jnp.asarray(bw, jnp.float32),
+        jnp.asarray(cost, jnp.float32), jnp.asarray(ceil, jnp.float32),
+        mode=mode, steps=steps, outer=outer, use_kernel=use_kernel,
+        has_ceiling=has_ceiling)
+    D_f = np.asarray(D_f, float)
+    tot0 = float(D0.sum())
+    if abs(float(D_f.sum()) - tot0) > 1e-3 * max(abs(tot0), 1.0):
+        return post
+    # Exact-feasibility repair against the refined plan's aggregates —
+    # the same projection the post-stage validates with.
+    cost_f = np.asarray(p.topology.cost, float)
+    bw_f = np.asarray(p.topology.bandwidth, float).copy()
+    np.fill_diagonal(bw_f, 0.0)
+    cap = np.broadcast_to(bw_f[:, :, None], (R, R, T))
+    grad = mci[:, None, :] - mci[None, :, :]
+    margin = grad - cost_f[:, :, None]
+    movable, headroom = region_aggregates(p, D_f)
+    y = np.zeros((R, R, T))
+    y[fr, to] = np.asarray(y_l, float)
+    y = _repair(y, margin, cap, movable, headroom)
+    plan = MigrationPlan(
+        y=y, carbon_saved=float((y * grad).sum()),
+        migration_cost=float((y * cost_f[:, :, None]).sum()),
+        moved_total=float(y.sum()))
+    wmci = mci[np.asarray(p.region)]
+    carbon_base = float((np.asarray(p.usage) * wmci).sum())
+    cand = _report(p, D_f, np.asarray(pens),
+                   iters=res.iters + steps * outer, state=res.state)
+    cand = dataclasses.replace(
+        cand,
+        carbon_reduction_pct=cand.carbon_reduction_pct
+        + 100.0 * plan.net_saved / carbon_base,
+        extras={**res.extras, "migration": plan,
+                "coupled_migration": True})
+    if cand.carbon_reduction_pct <= post.carbon_reduction_pct:
+        return post
+    return cand
 
 
 def ensemble(problem: FleetProblem, policy, scenarios, *,
@@ -331,14 +542,39 @@ def _al_fused_inner(p: FleetProblem, mode: str, cfg: EngineConfig, *,
     One kernel invocation runs k fused projected-Adam steps with x and
     the Adam moments VMEM-resident, instead of ~10 HBM round-trips per
     step. Works under vmap (sweep/ensemble lanes) and inside shard_map
-    bodies (pass the local row block as `p`)."""
+    bodies (pass the local row block as `p`).
+
+    Multi-region fleets hand the kernel per-ROW norms (from
+    `regional.cr1_norms`/`cr2_norms`) by *folding* instead of changing
+    the kernel's scalar slots: the carbon term becomes a (W, T) cvec
+    over each row's region trace; CR1's per-row penalty weight
+    `lam·pen_w` folds into col-6 `k` (gradient is linear in k) with
+    `coef0 = 1`; CR2's per-row residual scale folds `1/scale_w` into
+    both `k` and `refs` (h and coef·dpen are algebraically unchanged)
+    with `scale = 1`; the per-row step scale rides rowp col 11. The
+    kernel itself stays region-blind, and the single-region path packs
+    the exact same arrays as before (bitwise-identical)."""
     from repro.kernels.al_step.ops import make_fused_inner, pack_rows
     lo, hi = _bounds(p)
     f32 = jnp.float32
+    mci = jnp.asarray(p.mci, f32)
+    k = jnp.asarray(p.k, f32)
+    if mci.ndim == 2:
+        cvec = -jnp.asarray(car_norm, f32)[:, None] \
+            * mci[jnp.asarray(p.region)]
+        if mode == "cr1":
+            k = k * jnp.asarray(coef0, f32)
+            coef0 = 1.0
+        else:
+            inv_w = 1.0 / jnp.asarray(scale, f32)
+            k = k * inv_w
+            refs = jnp.asarray(refs, f32) * inv_w
+            scale = 1.0
+    else:
+        cvec = (-car_norm * mci)[None, :]
     row_base = pack_rows(jnp.asarray(p.rts_coeffs), jnp.asarray(p.betas),
-                         jnp.asarray(p.k), jnp.asarray(p.x2_kind),
+                         k, jnp.asarray(p.x2_kind),
                          jnp.asarray(p.is_batch), refs=refs)
-    cvec = (-car_norm * jnp.asarray(p.mci, f32))[None, :]
     return make_fused_inner(
         jnp.asarray(p.usage, f32), jnp.asarray(p.jobs, f32),
         lo.astype(f32), hi.astype(f32), row_base, cvec, mode=mode, cfg=cfg,
@@ -349,70 +585,6 @@ def _al_fused_inner(p: FleetProblem, mode: str, cfg: EngineConfig, *,
 # ---------------------------------------------------------------------------
 # CR1 — Efficient DR (unconstrained trade-off objective)
 # ---------------------------------------------------------------------------
-def _region_rows(p: FleetProblem):
-    """Per-row region scatter helpers for a multi-region problem:
-    `(region, wmci, counts_w)` with `wmci[w] = mci[region[w]]` (W, T) and
-    `counts_w[w]` the row count of w's region. Segment sums over the
-    region ids turn per-region reductions into per-row normalizer
-    vectors — the multi-region twin of the fleet-global scalars, still
-    row-separable so the sharding contract holds (pad rows carry
-    region 0 but their norms are overridden by `_pad_row_norms`)."""
-    region = jnp.asarray(p.region)
-    R = jnp.asarray(p.mci).shape[0]
-    counts = jax.ops.segment_sum(jnp.ones(p.W), region, num_segments=R)
-    return region, jnp.asarray(p.mci)[region], counts[region]
-
-
-def _rsum(x, region, R):
-    """Per-row view of a per-region sum: segment-sum then gather back."""
-    return jax.ops.segment_sum(x, region, num_segments=R)[region]
-
-
-def _cr1_norms(p: FleetProblem):
-    """Fleet-global CR1 reductions (normalizers + shared step scale) —
-    computed from the TRUE fleet before any device padding, then passed
-    into the sharded solve as replicated scalars.
-
-    Multi-region problems get the per-REGION twin: each region is
-    normalized on its own entitlement/carbon/step reductions (scattered
-    back to per-row vectors), so with zero migration bandwidth the joint
-    solve decomposes exactly into R independent single-region solves."""
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    if mci.ndim == 2:
-        region, wmci, counts_w = _region_rows(p)
-        R = mci.shape[0]
-        pen_w = 100.0 / _rsum(jnp.asarray(p.entitlement), region, R)
-        car_w = 100.0 / _rsum((jnp.asarray(p.usage) * wmci).sum(1),
-                              region, R)
-        rowmeans = jnp.maximum(hi - lo, 1e-6).mean(axis=1)
-        step_w = (_rsum(rowmeans, region, R) / counts_w)[:, None]
-        return pen_w, car_w, step_w
-    return (100.0 / jnp.asarray(p.entitlement).sum(),
-            100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
-            jnp.maximum(hi - lo, 1e-6).mean())
-
-
-def _pad_row_norms(norms, W_pad: int, fills):
-    """Pad per-row multi-region norm vectors to the device-padded W.
-    Fill values keep pad rows inert (0 for weights so they contribute
-    nothing, 1 for step/scale divisors so nothing blows up)."""
-    out = []
-    for a, f in zip(norms, fills):
-        a = jnp.asarray(a)
-        pad = W_pad - a.shape[0]
-        out.append(a if pad == 0 else jnp.concatenate(
-            [a, jnp.full((pad,) + a.shape[1:], f, a.dtype)]))
-    return tuple(out)
-
-
-def _norm_specs(p: FleetProblem, axis, n: int = 3):
-    """shard_map specs for a norms tuple: replicated scalars for the
-    single-region path, row-sharded vectors for multi-region."""
-    one = P() if np.ndim(p.mci) == 1 else P(axis)
-    return (one,) * n
-
-
 def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
@@ -563,8 +735,7 @@ class CR1:
 
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
-        use_kernel = resolve_use_kernel(ctx.use_kernel) \
-            and not p.is_multiregion
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.resolved_steps(self)
         warm = ctx.warm
         if ctx.mesh is None:
@@ -580,7 +751,7 @@ class CR1:
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr1_norms(p)
         if p.is_multiregion:
-            norms = _pad_row_norms(norms, pp.W, (0.0, 0.0, 1.0))
+            norms = _pad_row_norms(norms, pp.W, CR1_NORM_FILLS)
         warm = _pad_state(warm, pp.W) if warm is not None \
             else EngineState.cold(jnp.zeros(pp.usage.shape))
         run = _cr1_run_sharded_donated if ctx.donate else _cr1_run_sharded
@@ -599,8 +770,7 @@ class CR1:
     @classmethod
     def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR1"],
                       ctx: SolveContext) -> list[FleetSolveResult]:
-        use_kernel = resolve_use_kernel(ctx.use_kernel) \
-            and not p.is_multiregion
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.steps if ctx.steps is not None else cls.default_steps
         lams = jnp.asarray([pl.lam for pl in policies], jnp.float32)
         N = len(policies)
@@ -616,7 +786,7 @@ class CR1:
             pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
             norms = _cr1_norms(p)
             if p.is_multiregion:
-                norms = _pad_row_norms(norms, pp.W, (0.0, 0.0, 1.0))
+                norms = _pad_row_norms(norms, pp.W, CR1_NORM_FILLS)
             Ds, pens = _cr1_sweep_sharded(pp, lams, norms,
                                           mesh=ctx.mesh, steps=steps,
                                           use_kernel=use_kernel)
@@ -632,26 +802,6 @@ class CR1:
 # ---------------------------------------------------------------------------
 # CR2 — Fair-Centralized DR (per-workload penalty-equality targets)
 # ---------------------------------------------------------------------------
-def _cr2_norms(p: FleetProblem, refs):
-    """Fleet-global CR2 reductions (carbon normalizer, equality-residual
-    scale, shared step scale) from the TRUE fleet before padding. Per-
-    region twin for multi-region problems, as in `_cr1_norms`."""
-    lo, hi = _bounds(p)
-    mci = jnp.asarray(p.mci)
-    if mci.ndim == 2:
-        region, wmci, counts_w = _region_rows(p)
-        R = mci.shape[0]
-        car_w = 100.0 / _rsum((jnp.asarray(p.usage) * wmci).sum(1),
-                              region, R)
-        scale_w = jnp.maximum(_rsum(refs, region, R) / counts_w, 1e-3)
-        rowmeans = jnp.maximum(hi - lo, 1e-6).mean(axis=1)
-        step_w = (_rsum(rowmeans, region, R) / counts_w)[:, None]
-        return car_w, scale_w, step_w
-    return (100.0 / (jnp.asarray(p.usage).sum(0) * mci).sum(),
-            jnp.maximum(refs.mean(), 1e-3),
-            jnp.maximum(hi - lo, 1e-6).mean())
-
-
 def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
     lo, hi = _bounds(p)
     mci = jnp.asarray(p.mci)
@@ -807,8 +957,7 @@ class CR2:
 
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
-        use_kernel = resolve_use_kernel(ctx.use_kernel) \
-            and not p.is_multiregion
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.resolved_steps(self)
         warm = ctx.warm
         refs = jnp.asarray(cr2_reference_fleet(p, self.cap_frac))
@@ -826,7 +975,7 @@ class CR2:
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr2_norms(p, refs)
         if p.is_multiregion:
-            norms = _pad_row_norms(norms, pp.W, (0.0, 1.0, 1.0))
+            norms = _pad_row_norms(norms, pp.W, CR2_NORM_FILLS)
         refs_p = jnp.concatenate([refs, jnp.zeros(pp.W - W, refs.dtype)])
         warm = _pad_state(warm, pp.W) if warm is not None \
             else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
@@ -849,8 +998,7 @@ class CR2:
     @classmethod
     def _sweep_family(cls, p: FleetProblem, policies: Sequence["CR2"],
                       ctx: SolveContext) -> list[FleetSolveResult]:
-        use_kernel = resolve_use_kernel(ctx.use_kernel) \
-            and not p.is_multiregion
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.steps if ctx.steps is not None else cls.default_steps
         outer = policies[0].outer
         N = len(policies)
@@ -871,7 +1019,7 @@ class CR2:
             # refs (pad residuals are identically zero).
             norms = [_cr2_norms(p, r) for r in refs]
             if p.is_multiregion:
-                norms = [_pad_row_norms(n, pp.W, (0.0, 1.0, 1.0))
+                norms = [_pad_row_norms(n, pp.W, CR2_NORM_FILLS)
                          for n in norms]
             norms_stack = tuple(jnp.stack([n[i] for n in norms])
                                 for i in range(3))
@@ -1150,17 +1298,15 @@ class CR3:
         trajectory is exactly what its standalone single-region solve
         would produce (the zero-bandwidth decomposition tests rely on
         this)."""
-        use_kernel = False   # kernel packing is single-region only
+        use_kernel = resolve_use_kernel(ctx.use_kernel)
         steps = ctx.resolved_steps(self)
         mci = np.asarray(p.mci)
         region = np.asarray(p.region)
         R = p.R
         wmci = mci[region]
-        counts = np.bincount(region, minlength=R)
-        collected = self.tax_frac * np.bincount(
-            region, weights=np.asarray(p.entitlement, float), minlength=R)
+        collected = self.tax_frac * _region_totals(region, p.entitlement, R)
         rho_cur = np.full(R, float(self.rho))
-        reg_scale = jnp.asarray((1e-3 / (counts * p.T))[region][:, None])
+        reg_scale = _cr3_reg_scale(p)
         if ctx.mesh is None:
             pj, W = _jit_view(p), p.W
             state = ctx.warm if ctx.warm is not None else EngineState.cold(
@@ -1185,8 +1331,7 @@ class CR3:
                         shift=shift_, reset_mu=reset_, **kw)
 
         def paid_of(D):
-            return rho_cur * np.bincount(
-                region, weights=(D * wmci).sum(1), minlength=R)
+            return rho_cur * _region_totals(region, (D * wmci).sum(1), R)
 
         D, pens, state = best_response(state, ctx.shift, ctx.reset_mu)
         D, pens = np.asarray(D)[:W], np.asarray(pens)[:W]
@@ -1474,8 +1619,8 @@ def _day_cr1_impl_sharded(p: FleetProblem, lam, mci_stack, norms_stack,
                               mu=P())
     return shard_map(
         body, mesh=mesh,
-        in_specs=(_fleet_specs(p, axis), P(), P(), (P(), P(), P()),
-                  state_specs),
+        in_specs=(_fleet_specs(p, axis), P(), P(),
+                  _norm_specs(p, axis, stacked=True), state_specs),
         out_specs=(P(None, axis), P(axis), P(axis), state_specs),
         check_rep=False)(p, lam, mci_stack, norms_stack, state0)
 
@@ -1519,8 +1664,8 @@ def _day_cr2_impl_sharded(p: FleetProblem, cap_frac, mci_stack,
                               mu=P())
     return shard_map(
         body, mesh=mesh,
-        in_specs=(_fleet_specs(p, axis), P(), P(), (P(), P(), P()),
-                  state_specs),
+        in_specs=(_fleet_specs(p, axis), P(), P(),
+                  _norm_specs(p, axis, stacked=True), state_specs),
         out_specs=(P(None, axis), P(axis), P(axis), state_specs),
         check_rep=False)(p, cap_frac, mci_stack, norms_stack, state0)
 
@@ -1534,11 +1679,18 @@ _day_cr2_sharded_donated = jax.jit(_day_cr2_impl_sharded,
                                    donate_argnums=(4,))
 
 
-def _day_norm_stacks(problem: FleetProblem, mci_stack, policy):
-    """Per-tick fleet-global norms for the sharded day scan, computed
-    from the TRUE (unpadded) fleet exactly as the solo path computes
-    them inside each tick: the tick-t window is the day rolled -t."""
+def _day_norm_stacks(problem: FleetProblem, mci_stack, policy,
+                     W_pad: int | None = None):
+    """Per-tick norms for the sharded day scan, computed from the TRUE
+    (unpadded) fleet exactly as the solo path computes them inside each
+    tick: the tick-t window is the day rolled -t. Single-region fleets
+    stack fleet-global scalars (replicated under the mesh); multi-region
+    fleets stack the per-row vectors from `regional.cr1_norms`/
+    `cr2_norms`, padded to the device-padded `W_pad` with inert fills so
+    the tick axis leads and the row axis shards (`norm_specs(...,
+    stacked=True)`)."""
     n = mci_stack.shape[0]
+    fills = CR1_NORM_FILLS if isinstance(policy, CR1) else CR2_NORM_FILLS
     rolled = problem
     norms = []
     for t in range(n):
@@ -1551,10 +1703,13 @@ def _day_norm_stacks(problem: FleetProblem, mci_stack, policy):
                 else np.roll(np.asarray(rolled.upper), -1, axis=1))
         p_t = dataclasses.replace(rolled, mci=mci_stack[t])
         if isinstance(policy, CR1):
-            norms.append(_cr1_norms(p_t))
+            nm = _cr1_norms(p_t)
         else:
             refs = jnp.asarray(cr2_reference_fleet(p_t, policy.cap_frac))
-            norms.append(_cr2_norms(p_t, refs))
+            nm = _cr2_norms(p_t, refs)
+        if problem.is_multiregion and W_pad is not None:
+            nm = _pad_row_norms(nm, W_pad, fills)
+        norms.append(nm)
     return tuple(jnp.stack([nm[i] for nm in norms]) for i in range(3))
 
 
@@ -1576,12 +1731,12 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     engine calls. CR3 clears its fiscal balance in a host-side loop and
     B1/B3 are closed-form per-tick evaluations; both keep the per-tick
     path. With `ctx.mesh` the whole day scan nests INSIDE the W-axis
-    shard_map (per-tick fleet-global norms ride in replicated, computed
-    host-side from the true fleet), so a sharded day is still one
-    dispatch. Multi-region problems run the off-mesh scan (row i of
-    `mci_stack` is then an (R, T) forecast stack); multi-region + mesh
-    is a follow-up. Migration is not applied per tick — run the
-    committed plan through `solve()` for migration credit.
+    shard_map (per-tick norms ride in from the true fleet — replicated
+    scalars for single-region, row-sharded `regional` vectors for
+    multi-region), so a sharded day is still one dispatch under both
+    1-D and 2-D fleet meshes. Multi-region rows of `mci_stack` are
+    (R, T) forecast stacks. Migration is not applied per tick — run
+    the committed plan through `solve()` for migration credit.
 
     Returns `DayResult`; `result.last.state` warm-starts the next day
     (pass it via `ctx.warm` — the first tick then runs `warm_steps` with
@@ -1603,14 +1758,8 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
         raise ValueError(
             f"mci_stack must be (n_ticks,) + {want} (one forecast per "
             f"tick); got shape {mci_stack.shape}")
-    if ctx.mesh is not None and problem.is_multiregion:
-        raise NotImplementedError(
-            "multi-region solve_day under a device mesh is a ROADMAP "
-            "follow-up (per-region norms must ride the scan sharded); "
-            "drop ctx.mesh or use the per-tick step() loop")
     n = mci_stack.shape[0]
-    use_kernel = resolve_use_kernel(ctx.use_kernel) \
-        and not problem.is_multiregion
+    use_kernel = resolve_use_kernel(ctx.use_kernel)
     if cold_steps is None:
         cold_steps = ctx.resolved_steps(policy)
     if warm_steps is None:
@@ -1627,7 +1776,8 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
             f"use the per-tick solve()/step() loop")
     if ctx.mesh is not None:
         pp, W = pad_fleet(problem, fleet_device_count(ctx.mesh))
-        norms_stack = _day_norm_stacks(problem, mci_stack, policy)
+        norms_stack = _day_norm_stacks(problem, mci_stack, policy,
+                                       W_pad=pp.W)
         state0 = _pad_state(ctx.warm, pp.W) if ctx.warm is not None else (
             EngineState.cold(jnp.zeros(pp.usage.shape))
             if isinstance(policy, CR1) else

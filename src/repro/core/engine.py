@@ -34,7 +34,14 @@ local row equals the local gradient, no collective appears in the hot
 loop at all. The genuinely global reductions — objective normalizers,
 shared step scales, CR3's Eq.-6 fiscal-clearing sums (taxes vs rebates) —
 are computed once *outside* the sharded region (or on the gathered
-solution) and enter as replicated scalars. Do NOT `psum` inside the
+solution) and enter as replicated scalars; for multi-region fleets the
+per-region variants of those reductions (segment-summed norms, padding
+fills, and the row-sharded specs that carry them into sharded bodies)
+live in `repro.core.regional`. The one solve that steps outside this
+contract is coupled cross-region migration
+(`api.SolveContext(coupled_migration=True)`): its joint (D, y) objective
+couples every region's rows through the interconnect flows, so it is
+not row-separable and always runs unsharded. Do NOT `psum` inside the
 differentiated objective: under `shard_map`, `jax.grad` of a psum'd
 scalar multiplies cotangents by the device count (psum's transpose is a
 psum), silently scaling every gradient by `n_devices`.

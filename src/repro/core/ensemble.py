@@ -49,15 +49,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.api import (CR1, CR2, SolveContext, _cr1_impl, _cr1_norms,
-                            _cr1_pieces, _cr2_cfg, _cr2_impl, _cr2_norms,
-                            _cr2_pieces, resolve_policy, solve)
+from repro.core.api import (CR1, CR2, SolveContext, _cr1_impl, _cr1_pieces,
+                            _cr2_cfg, _cr2_impl, _cr2_pieces,
+                            resolve_policy, solve)
 from repro.core.engine import EngineConfig, EngineState, al_minimize
 from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, PAD_FILLS,
                                      FleetProblem, _fleet_specs, _jit_view,
                                      cr2_reference_fleet, fleet_penalties,
                                      pad_fleet, resolve_use_kernel)
 from repro.core.metrics import jain_index, max_min_ratio
+from repro.core.regional import (CR1_NORM_FILLS, CR2_NORM_FILLS, cr1_norms,
+                                 cr2_norms, norm_specs, pad_row_norms,
+                                 region_totals)
 from repro.core.scenario import ScenarioStack, resolve_scenarios
 from repro.launch.mesh import fleet_axes, fleet_device_count
 
@@ -153,7 +156,7 @@ def _cr1_ens_sharded(p: FleetProblem, vals, keys, lam, norms,
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), _overlay_specs(keys, axis),
-                  (P(), P(), P()), specs),
+                  norm_specs(p, axis, stacked=True), specs),
         out_specs=(P(None, axis), P(None, axis), specs),
     )(p, vals, norms, states)
 
@@ -183,7 +186,7 @@ def _cr2_ens_sharded(p: FleetProblem, vals, keys, refs, norms,
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), _overlay_specs(keys, axis),
-                  P(None, axis), (P(), P(), P()), specs),
+                  P(None, axis), norm_specs(p, axis, stacked=True), specs),
         out_specs=(P(None, axis), P(None, axis), specs),
     )(p, vals, refs, norms, states)
 
@@ -255,7 +258,9 @@ def _run_batched(policy, p: FleetProblem, stack: ScenarioStack, *,
     pp, W = pad_fleet(p, fleet_device_count(mesh))
     vals_p = _pad_overlays(keys, vals, W, pp.W)
     if type(policy) is CR1:
-        norms = [_cr1_norms(ps) for ps in stack.problems(p)]
+        norms = [cr1_norms(ps) for ps in stack.problems(p)]
+        if p.is_multiregion:
+            norms = [pad_row_norms(n, pp.W, CR1_NORM_FILLS) for n in norms]
         norms_stack = tuple(jnp.stack([n[i] for n in norms])
                             for i in range(3))
         states = _cold_states(S, pp.usage.shape, mu0=CR1_MU0)
@@ -264,8 +269,10 @@ def _run_batched(policy, p: FleetProblem, stack: ScenarioStack, *,
             steps=steps, use_kernel=use_kernel)
     else:
         refs = _cr2_refs(policy, p, stack)
-        norms = [_cr2_norms(ps, r)
+        norms = [cr2_norms(ps, r)
                  for ps, r in zip(stack.problems(p), refs)]
+        if p.is_multiregion:
+            norms = [pad_row_norms(n, pp.W, CR2_NORM_FILLS) for n in norms]
         norms_stack = tuple(jnp.stack([n[i] for n in norms])
                             for i in range(3))
         refs_p = jnp.stack([
@@ -437,8 +444,13 @@ def _result_from_stacks(base: FleetProblem, stack: ScenarioStack, policy,
                         ) -> EnsembleResult:
     """Vectorized `fleet_solver._report` over the scenario axis."""
     mci, usage, ent = _stack_arrays(base, stack)
-    carbon_base = (usage.sum(axis=1) * mci).sum(axis=1)          # (S,)
-    car = np.einsum("swt,st->s", D, mci)
+    if mci.ndim == 3:                # multi-region: (S, R, T) MCI stacks
+        wmci = mci[:, np.asarray(base.region), :]                # (S, W, T)
+        carbon_base = (usage * wmci).sum(axis=(1, 2))            # (S,)
+        car = (D * wmci).sum(axis=(1, 2))
+    else:
+        carbon_base = (usage.sum(axis=1) * mci).sum(axis=1)      # (S,)
+        car = np.einsum("swt,st->s", D, mci)
     n_days = max(1, base.T // base.day_hours)
     span = n_days * base.day_hours
     sums = D[:, :, :span].reshape(D.shape[0], base.W, n_days,
@@ -476,13 +488,12 @@ def evaluate_ensemble(problem: FleetProblem, policy, scenarios, *,
     policy = resolve_policy(policy)
     stack = resolve_scenarios(scenarios, problem)
     can_batch = (_batched_capable(policy) and ctx.warm is None
-                 and not ctx.donate and not ctx.shift and not ctx.reset_mu
-                 and not problem.is_multiregion)
+                 and not ctx.donate and not ctx.shift and not ctx.reset_mu)
     if batched is True and not can_batch:
         raise ValueError(
             f"no batched ensemble lane for policy "
             f"{getattr(policy, 'name', policy)!r} under this context "
-            "(CR1/CR2, single-region, no warm/donate/shift/reset_mu)")
+            "(CR1/CR2, no warm/donate/shift/reset_mu)")
     if batched is False or not can_batch:
         probs = list(stack.problems(problem))
         results = [solve(ps, policy,
@@ -511,8 +522,31 @@ def evaluate_ensemble(problem: FleetProblem, policy, scenarios, *,
     use_kernel = resolve_use_kernel(ctx.use_kernel)
     D, pens, _ = _run_batched(policy, problem, stack, steps=steps,
                               use_kernel=use_kernel, mesh=ctx.mesh)
-    return _result_from_stacks(problem, stack, policy, D, pens,
-                               batched=True)
+    res = _result_from_stacks(problem, stack, policy, D, pens,
+                              batched=True)
+    return _apply_migration_credit(problem, stack, res)
+
+
+def _apply_migration_credit(base: FleetProblem, stack: ScenarioStack,
+                            res: EnsembleResult) -> EnsembleResult:
+    """Per-scenario migration post-stage for the batched lane — exactly
+    what `api.solve`'s `_maybe_migrate` applies in the loop lane, so the
+    two lanes stay in parity on multi-region problems with a usable
+    topology."""
+    if (base.topology is None or not base.is_multiregion
+            or not np.any(np.asarray(base.topology.bandwidth) > 0.0)):
+        return res
+    from repro.core.migration import fleet_migration
+    car = res.carbon_reduction_pct.copy()
+    extras = []
+    for s, ps in enumerate(stack.problems(base)):
+        plan = fleet_migration(ps, np.asarray(res.D[s]))
+        wmci = np.asarray(ps.mci)[np.asarray(ps.region)]
+        carbon_base = float((np.asarray(ps.usage) * wmci).sum())
+        car[s] += 100.0 * plan.net_saved / carbon_base
+        extras.append({"migration": plan})
+    return dataclasses.replace(res, carbon_reduction_pct=car,
+                               extras=tuple(extras))
 
 
 def compare_policies(problem: FleetProblem, policies: Sequence, scenarios,
@@ -600,45 +634,63 @@ def run_streaming_ensemble(problem: FleetProblem, policy, streams, *,
 
     `streams` is a sequence of `ForecastStream`s (every horizon must equal
     `problem.T`) or a `scenario.ForecastRegime` (its `streams()` factory
-    is called with `n_ticks`). Per tick, the S revised forecasts stack
-    into one scenario axis and the whole ensemble re-solves as one
-    batched XLA call, each lane warm-started from its own previous
-    `EngineState` (shift + mu reset inside the call) — the
-    `RollingHorizonSolver` loop, vmapped over scenarios. Policies
-    without a batched lane fall back to S sequential
-    `RollingHorizonSolver` runs."""
+    is called with `n_ticks`). Multi-region problems take one stream
+    *per region* per scenario — a sequence of R-tuples (exactly what
+    `ForecastRegime.streams` yields for a multi-region base) — and the
+    scenario axis batches whole (R, T) forecast stacks, so regional
+    regimes like `RegionalDivergence` run through the one-dispatch
+    batched lane. Per tick, the S revised forecasts stack into one
+    scenario axis and the whole ensemble re-solves as one batched XLA
+    call, each lane warm-started from its own previous `EngineState`
+    (shift + mu reset inside the call) — the `RollingHorizonSolver`
+    loop, vmapped over scenarios. Policies without a batched lane fall
+    back to S sequential `RollingHorizonSolver` runs. As in
+    `RollingHorizonSolver`, only hour 0 of each plan commits, so no
+    migration post-stage applies to streaming ticks."""
     from repro.core.scenario import ForecastRegime
     from repro.core.streaming import RollingHorizonSolver
     policy = resolve_policy(policy)
-    if problem.is_multiregion:
-        raise NotImplementedError(
-            "run_streaming_ensemble is single-region (the scenario axis "
-            "batches one stream per lane); drive a multi-region fleet "
-            "with RollingHorizonSolver and one stream per region")
+    multi = problem.is_multiregion
+    R = problem.R if multi else 1
     if isinstance(streams, ForecastRegime):
         streams = streams.streams(problem, n_ticks=n_ticks or 1)
-    streams = tuple(streams)
-    if not streams:
-        raise ValueError("run_streaming_ensemble needs >= 1 stream")
-    for st in streams:
-        if st.horizon != problem.T:
+    groups = []
+    for item in streams:
+        g = tuple(item) if isinstance(item, (tuple, list)) else (item,)
+        if len(g) != R:
             raise ValueError(
-                f"stream horizon {st.horizon} != problem.T {problem.T}")
-    max_ticks = min(st.n_ticks for st in streams)
+                f"need {R} stream(s) per scenario (one per region), "
+                f"got {len(g)}")
+        groups.append(g)
+    groups = tuple(groups)
+    if not groups:
+        raise ValueError("run_streaming_ensemble needs >= 1 stream")
+    for g in groups:
+        for st in g:
+            if st.horizon != problem.T:
+                raise ValueError(
+                    f"stream horizon {st.horizon} != problem.T {problem.T}")
+    max_ticks = min(st.n_ticks for g in groups for st in g)
     n = max_ticks if n_ticks is None else n_ticks
     if not 0 < n <= max_ticks:
         raise ValueError(f"n_ticks {n} outside (0, {max_ticks}]")
-    S = len(streams)
+    S = len(groups)
     labels = tuple(
-        f"stream[sigma={st.revision_sigma:.3f},seed={st.seed}]"
-        for st in streams)
+        f"stream[sigma={g[0].revision_sigma:.3f},seed={g[0].seed}]"
+        for g in groups)
     base_usage = np.asarray(problem.usage, float)
+    if multi:
+        region = np.asarray(problem.region)
+        onehot = np.zeros((problem.W, R))
+        onehot[np.arange(problem.W), region] = 1.0
+        usage_by_region = region_totals(region, base_usage, R)  # (R, T)
 
     if not _batched_capable(policy):
         reports = [RollingHorizonSolver(
-            problem, st, policy=policy, cold_steps=cold_steps,
-            warm_steps=warm_steps, use_kernel=use_kernel).run(n)
-            for st in streams]
+            problem, g if multi else g[0], policy=policy,
+            cold_steps=cold_steps, warm_steps=warm_steps,
+            use_kernel=use_kernel).run(n)
+            for g in groups]
         return StreamingEnsembleReport(
             labels=labels,
             committed=np.stack([r.committed for r in reports]),
@@ -659,7 +711,10 @@ def run_streaming_ensemble(problem: FleetProblem, policy, streams, *,
     states: EngineState | None = None
     total_steps = 0
     for t in range(n):
-        mcis = np.stack([st.forecast(t) for st in streams])
+        if multi:
+            mcis = np.stack([[st.forecast(t) for st in g] for g in groups])
+        else:
+            mcis = np.stack([g[0].forecast(t) for g in groups])
         p_t = dataclasses.replace(
             problem, mci=np.asarray(problem.mci),
             usage=np.roll(problem.usage, -t, axis=1),
@@ -673,10 +728,19 @@ def run_streaming_ensemble(problem: FleetProblem, policy, streams, *,
             shift=0 if t == 0 else 1, reset_mu=t > 0)
         committed[:, :, t] = D[:, :, 0]
         total_steps += steps * (policy.outer if type(policy) is CR2 else 1)
-        real_t = np.asarray([st.realized(t) for st in streams])
-        realized += committed[:, :, t].sum(axis=1) * real_t
-        forecast += committed[:, :, t].sum(axis=1) * mcis[:, 0]
-        baseline += real_t * base_usage[:, t % base_usage.shape[1]].sum()
+        if multi:
+            real_t = np.asarray(
+                [[st.realized(t) for st in g] for g in groups])  # (S, R)
+            by_reg = committed[:, :, t] @ onehot                 # (S, R)
+            realized += (by_reg * real_t).sum(axis=1)
+            forecast += (by_reg * mcis[:, :, 0]).sum(axis=1)
+            baseline += (usage_by_region[:, t % base_usage.shape[1]]
+                         * real_t).sum(axis=1)
+        else:
+            real_t = np.asarray([g[0].realized(t) for g in groups])
+            realized += committed[:, :, t].sum(axis=1) * real_t
+            forecast += committed[:, :, t].sum(axis=1) * mcis[:, 0]
+            baseline += real_t * base_usage[:, t % base_usage.shape[1]].sum()
     return StreamingEnsembleReport(
         labels=labels, committed=committed, realized_carbon=realized,
         forecast_carbon=forecast, realized_baseline=baseline,

@@ -25,6 +25,12 @@ migration toll) is credited into `carbon_reduction_pct` and the full
 `MigrationPlan` rides `result.extras["migration"]`. With bandwidth 0
 the plan is identically zero and the multi-region solve decomposes
 into independent per-region solves (regression-tested).
+
+`SolveContext(coupled_migration=True)` instead refines curtailment and
+interconnect flows *jointly* inside the AL solve (`api._coupled_migrate`);
+this module then serves as the validation reference and supplies the
+exact-feasibility `_repair` pass and the `region_aggregates`/
+`positive_links` reductions both stages share.
 """
 from __future__ import annotations
 
@@ -34,8 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import EngineConfig, al_minimize
+from repro.core.regional import region_totals
 
-__all__ = ["MigrationPlan", "fleet_migration", "plan_migration"]
+__all__ = ["MigrationPlan", "fleet_migration", "plan_migration",
+           "positive_links", "region_aggregates"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,37 +162,57 @@ def plan_migration(mci: np.ndarray, movable: np.ndarray,
         moved_total=float(y.sum()))
 
 
-def fleet_migration(p, D: np.ndarray, **plan_kwargs) -> MigrationPlan:
-    """Migration post-stage for a solved multi-region `FleetProblem`.
-
-    Region aggregates from the committed plan `D`: `movable[r, t]` is
-    the residual *batch* load (deferrable by construction — RTS loss
-    models are latency-coupled and stay put), `headroom[r, t]` the
-    region ceiling minus the fleet's post-DR draw. The plan moves load
-    without changing any workload's curtailment D, so total curtailment
-    — and every penalty — is untouched; only where the load burns
-    carbon changes.
-    """
-    if not p.is_multiregion or p.topology is None:
-        return _zero_plan(p.R, p.T)
+def region_aggregates(p, D: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(movable, headroom) region aggregates of a committed plan `D`,
+    both (R, T): `movable[r, t]` is the curtailed *batch* load available
+    to move (deferrable by construction — RTS loss models are
+    latency-coupled and stay put), `headroom[r, t]` the region ceiling
+    minus the fleet's post-DR draw (+inf when the topology carries no
+    ceiling). The one reduction both migration stages — the host-side
+    post-stage and the coupled in-loop refine's repair — price flows
+    against."""
     region = np.asarray(p.region)
     R, T = p.R, p.T
     residual = np.asarray(p.usage, float) - np.asarray(D, float)  # (W, T)
     is_batch = np.asarray(p.is_batch, bool)
-
-    movable = np.zeros((R, T))
-    np.add.at(movable, region[is_batch],
-              np.maximum(residual[is_batch], 0.0))
-    load = np.zeros((R, T))
-    np.add.at(load, region, residual)
-
-    ceiling = p.topology.ceiling
+    movable = region_totals(region[is_batch],
+                            np.maximum(residual[is_batch], 0.0), R)
+    ceiling = None if p.topology is None else p.topology.ceiling
     if ceiling is None:
         headroom = np.full((R, T), np.inf)
     else:
+        load = region_totals(region, residual, R)
         ceil = np.asarray(ceiling, float)
         if ceil.ndim == 1:
             ceil = np.broadcast_to(ceil[:, None], (R, T))
         headroom = ceil - load
+    return movable, headroom
+
+
+def positive_links(topology) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray]:
+    """Flatten a topology's usable directed links into `(fr, to, bw,
+    cost)` vectors over the off-diagonal entries with positive bandwidth
+    — the decision variables of the coupled in-loop migration solve
+    (zero-bandwidth links can never carry flow, so they are dropped
+    before the solve rather than constrained inside it)."""
+    bw = np.asarray(topology.bandwidth, float).copy()
+    np.fill_diagonal(bw, 0.0)
+    fr, to = np.nonzero(bw > 0.0)
+    cost = np.asarray(topology.cost, float)[fr, to]
+    return fr, to, bw[fr, to], cost
+
+
+def fleet_migration(p, D: np.ndarray, **plan_kwargs) -> MigrationPlan:
+    """Migration post-stage for a solved multi-region `FleetProblem`.
+
+    Region aggregates from the committed plan `D` via
+    `region_aggregates`. The plan moves load without changing any
+    workload's curtailment D, so total curtailment — and every penalty —
+    is untouched; only where the load burns carbon changes.
+    """
+    if not p.is_multiregion or p.topology is None:
+        return _zero_plan(p.R, p.T)
+    movable, headroom = region_aggregates(p, D)
     return plan_migration(np.asarray(p.mci, float), movable, headroom,
                           p.topology, **plan_kwargs)

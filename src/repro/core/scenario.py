@@ -391,11 +391,26 @@ class ForecastRegime(_GeneratorBase):
         r = _rng(self.seed, s)
         return float(r.uniform(*self.sigma)), int(r.integers(2 ** 31))
 
-    def streams(self, base: FleetProblem, n_ticks: int = 1,
-                ) -> tuple[ForecastStream, ...]:
+    def streams(self, base: FleetProblem, n_ticks: int = 1):
         """S independent streams over the base MCI (periodically extended
-        to cover `n_ticks` rolling solves of `base.T` hours each)."""
+        to cover `n_ticks` rolling solves of `base.T` hours each). A
+        multi-region base gets S *groups* of R streams — one stream per
+        region sharing the scenario's revision sigma (seeds offset per
+        region so regional errors stay independent), the shape
+        `ensemble.run_streaming_ensemble` and `RollingHorizonSolver`
+        expect."""
         actual = np.asarray(base.mci, float)
+        if actual.ndim == 2:       # multi-region: S groups of R streams
+            reps = -(-(n_ticks + base.T - 1) // actual.shape[1])
+            tiled = np.tile(actual, (1, max(reps, 1)))
+            out = []
+            for s in range(self.n_scenarios):
+                sig, sd = self._params(s)
+                out.append(tuple(
+                    ForecastStream(actual=tiled[r], horizon=base.T,
+                                   revision_sigma=sig, seed=sd + r)
+                    for r in range(tiled.shape[0])))
+            return tuple(out)
         reps = -(-(n_ticks + base.T - 1) // actual.shape[0])
         actual = np.tile(actual, max(reps, 1))
         out = []
@@ -407,9 +422,15 @@ class ForecastRegime(_GeneratorBase):
 
     def generate(self, base: FleetProblem) -> ScenarioStack:
         streams = self.streams(base)
-        mcis = np.stack([st.forecast(0) for st in streams])
-        labels = tuple(f"forecast{i}[sigma={st.revision_sigma:.3f}]"
-                       for i, st in enumerate(streams))
+        if base.is_multiregion:
+            mcis = np.stack([[st.forecast(0) for st in g]
+                             for g in streams])
+            labels = tuple(f"forecast{i}[sigma={g[0].revision_sigma:.3f}]"
+                           for i, g in enumerate(streams))
+        else:
+            mcis = np.stack([st.forecast(0) for st in streams])
+            labels = tuple(f"forecast{i}[sigma={st.revision_sigma:.3f}]"
+                           for i, st in enumerate(streams))
         return ScenarioStack(mci=mcis, labels=labels)
 
 

@@ -51,7 +51,9 @@ from repro.core.api import (DRPolicy, SolveContext, configured_policy,
                             solve)
 from repro.core.carbon import ForecastStream
 from repro.core.engine import EngineState
-from repro.core.fleet_solver import FleetProblem, FleetSolveResult
+from repro.core.fleet_solver import (FleetProblem, FleetSolveResult,
+                                     _single_region_view)
+from repro.core.regional import region_totals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +181,10 @@ class RollingHorizonSolver:
                  revision_ref: float = 0.05):
         streams = (tuple(stream) if isinstance(stream, (list, tuple))
                    else (stream,))
+        # Degenerate R=1 regional problems canonicalize up front so the
+        # whole streaming path (accounting included) is bitwise the
+        # single-region engine, matching `api.solve`'s contract.
+        problem = _single_region_view(problem)
         want = problem.R if problem.is_multiregion else 1
         if len(streams) != want:
             raise ValueError(
@@ -238,8 +244,8 @@ class RollingHorizonSolver:
     def _by_region(self, committed: np.ndarray) -> np.ndarray | None:
         if not self.problem.is_multiregion:
             return None
-        return np.bincount(np.asarray(self.problem.region),
-                           weights=committed, minlength=self.problem.R)
+        return region_totals(self.problem.region, committed,
+                             self.problem.R)
 
     def _window_problem(self, tick: int, mci: np.ndarray) -> FleetProblem:
         """Slide usage/jobs (and any operational cap) to hours
@@ -336,8 +342,8 @@ class RollingHorizonSolver:
         per-tick `run()` loop to <0.01 pp realized carbon (CR1/CR2
         only; CR3/B1/B3 need host-side per-tick control flow and raise
         `NotImplementedError`). `mesh=` is honoured: the whole day scan
-        runs inside the fleet shard_map (multi-region problems under a
-        mesh are still a ROADMAP follow-up and raise in `solve_day`).
+        runs inside the fleet shard_map, including multi-region fleets
+        (per-region norms ride the scan as row-sharded stacks).
         Warm-continues from and updates the solver state, so
         `run_scanned(24)` per day and mixed `step()`/`run_scanned()`
         schedules both work.
@@ -394,12 +400,12 @@ class RollingHorizonSolver:
         base_usage = np.asarray(self.problem.usage)
         Tn = base_usage.shape[1]
         if self.problem.is_multiregion:
-            region = np.asarray(self.problem.region)
+            region = self.problem.region
             baseline = sum(
                 float((np.asarray(t.realized_mci)
-                       * np.bincount(region,
-                                     weights=base_usage[:, t.tick % Tn],
-                                     minlength=self.problem.R)).sum())
+                       * region_totals(region,
+                                       base_usage[:, t.tick % Tn],
+                                       self.problem.R)).sum())
                 for t in ticks)
         else:
             baseline = sum(

@@ -56,7 +56,7 @@ def _al_step_kernel(x_ref, m_ref, v_ref, u_ref, j_ref, lo_ref, hi_ref,
     inv_u = 1.0 / u
     ju = j_ref[...].astype(f32) * inv_u
     isb = rowp[:, 8:9]
-    refs, lam_eq = rowp[:, 9:10], rowp[:, 10:11]
+    refs, lam_eq, stepw = rowp[:, 9:10], rowp[:, 10:11], rowp[:, 11:12]
     coef0, mu = scal[0, 0], scal[0, 1]
     inv_scale, lr_scale, t0 = scal[0, 2], scal[0, 3], scal[0, 4]
     lb1, lb2 = jnp.log(f32(beta1)), jnp.log(f32(beta2))
@@ -74,7 +74,7 @@ def _al_step_kernel(x_ref, m_ref, v_ref, u_ref, j_ref, lo_ref, hi_ref,
         v = beta2 * v + (1.0 - beta2) * g * g
         mhat = m / (1.0 - jnp.exp(t * lb1))
         vhat = v / (1.0 - jnp.exp(t * lb2))
-        x = _project(x - lr_scale * mhat / (jnp.sqrt(vhat) + eps),
+        x = _project(x - lr_scale * stepw * mhat / (jnp.sqrt(vhat) + eps),
                      lo, hi, isb, day_hours)
 
     xo_ref[...] = x
@@ -92,9 +92,12 @@ def al_step_pallas(x, m, v, usage, jobs, lo, hi, rowp, cvec, scal, *,
     Same signature/semantics as `ref.al_step_ref` plus tiling knobs.
     Padding: W to block_w — usage pads with ones (no 0/0), lo = hi = 0
     pins padded rows at zero, rowp pads with zeros (k = 0 ⇒ no penalty).
-    `block_w=None` picks min(128, W rounded up to 16) — the bf16 sublane
-    floor, so bf16 moment tiles stay legal. `interpret=None` resolves
-    backend-aware via `repro.kernels.dispatch.interpret_default`.
+    `cvec` may be (1, T) (fleet-global carbon term, replicated to every
+    tile) or (W, T) (per-row carbon weights, tiled like x and zero-padded
+    — padded rows are pinned anyway). `block_w=None` picks min(128, W
+    rounded up to 16) — the bf16 sublane floor, so bf16 moment tiles stay
+    legal. `interpret=None` resolves backend-aware via
+    `repro.kernels.dispatch.interpret_default`.
     """
     if interpret is None:
         from repro.kernels.dispatch import interpret_default
@@ -118,10 +121,15 @@ def al_step_pallas(x, m, v, usage, jobs, lo, hi, rowp, cvec, scal, *,
     def rep(cols):
         return pl.BlockSpec((1, cols), lambda i: (0, 0))
 
+    if cvec.shape[0] == 1:
+        cvec_spec = rep(T)
+    else:
+        cvec_spec, cvec = row(T), pad(cvec)
+
     out = pl.pallas_call(
         kern,
         grid=(nw,),
-        in_specs=[row(T)] * 7 + [row(rowp.shape[1]), rep(T), rep(8)],
+        in_specs=[row(T)] * 7 + [row(rowp.shape[1]), cvec_spec, rep(8)],
         out_specs=[row(T)] * 3,
         out_shape=[jax.ShapeDtypeStruct((W + pw, T), jnp.float32),
                    jax.ShapeDtypeStruct((W + pw, T), m.dtype),

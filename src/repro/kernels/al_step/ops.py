@@ -48,12 +48,16 @@ def make_fused_inner(usage, jobs, lo, hi, row_base, cvec, *, mode: str,
       usage/jobs/lo/hi: (W, T) fleet constants (bounds from
         `fleet_solver._bounds`).
       row_base: (W, 10) from `pack_rows` (CR2 passes `refs` there).
-      cvec: (1, T) carbon gradient term, i.e. `-car_norm * mci[None, :]`.
+      cvec: (1, T) carbon gradient term, i.e. `-car_norm * mci[None, :]`,
+        or (W, T) per-row carbon weights (multi-region fleets).
       mode: "cr1" (fixed penalty weight `coef0 = lam * pen_norm`) or
         "cr2" (equality-multiplier form; needs `scale`).
       cfg: `EngineConfig` — supplies inner_steps, lr, betas, eps and the
         moment storage dtype.
-      step_scale: the adapter's scalar step scale (multiplies cfg.lr).
+      step_scale: the adapter's step scale (multiplies cfg.lr). A scalar
+        folds into the packed `lr_scale` and rowp col 11 packs ones
+        (bitwise the scalar kernel: x·1.0 is exact); a (W, 1) per-row
+        vector rides in col 11 with `lr_scale = cfg.lr`.
       k_steps: fused steps per kernel invocation; `inner_steps` need not
         divide evenly — the remainder runs as one short call.
       use_ref: route through the jnp oracle instead of Pallas (parity
@@ -63,9 +67,15 @@ def make_fused_inner(usage, jobs, lo, hi, row_base, cvec, *, mode: str,
     steps from zero moments and returns the new x (f32).
     """
     W, T = usage.shape
+    f32 = jnp.float32
     mdt = jnp.dtype(cfg.moment_dtype)
     inv_scale = 0.0 if scale is None else 1.0 / scale
-    lr_scale = cfg.lr * step_scale
+    if jnp.ndim(step_scale) == 0:
+        lr_scale = cfg.lr * step_scale
+        step_col = jnp.ones((W, 1), f32)
+    else:
+        lr_scale = jnp.asarray(cfg.lr, f32)
+        step_col = jnp.asarray(step_scale, f32).reshape(W, 1)
     steps = int(cfg.inner_steps)
     k_steps = max(1, min(int(k_steps), steps))
     n_full, rem = divmod(steps, k_steps)
@@ -92,8 +102,7 @@ def make_fused_inner(usage, jobs, lo, hi, row_base, cvec, *, mode: str,
             lam_col = lam_eq.astype(jnp.float32).reshape(W, 1)
         else:
             lam_col = jnp.zeros((W, 1), jnp.float32)
-        rowp = jnp.concatenate(
-            [row_base, lam_col, jnp.zeros((W, 1), jnp.float32)], axis=1)
+        rowp = jnp.concatenate([row_base, lam_col, step_col], axis=1)
         m0 = jnp.zeros((W, T), mdt)
         v0 = jnp.zeros((W, T), mdt)
 

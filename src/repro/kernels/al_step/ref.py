@@ -33,7 +33,10 @@ Row-parameter packing (see `ops.pack_rows`) — `rowp` is (W, 12) f32:
   col 8     is_batch (>0.5: batch penalty + day-mean projection)
   col 9     refs (CR2 per-workload penalty reference; 0 for CR1)
   col 10    lam_eq (CR2 equality multiplier, refreshed per outer round)
-  col 11    padding
+  col 11    step multiplier (per-row learning-rate scale; all-ones when
+            the step scale is the fleet-global scalar folded into
+            `lr_scale` — x·1.0 is exact, so the scalar path is bitwise
+            the pre-col-11 kernel)
 
 Scalar packing — `scal` is (1, 8) f32:
 
@@ -43,6 +46,14 @@ where `coef0 = lam * pen_norm` (CR1 penalty weight; unused for CR2),
 `inv_scale = 1/scale` (CR2 residual normalizer; unused for CR1),
 `lr_scale = cfg.lr * step_scale`, and `t0` is the Adam step count already
 taken this outer round (bias correction resumes at t0 + 1).
+
+`cvec` is (1, T) — or (W, T) for per-row carbon weights (multi-region
+fleets, where each row prices carbon on its region's normalizer and
+trace). Multi-region per-ROW penalty weights reach the same scalar slots
+by folding: CR1 folds `lam·pen_w` into col-6 `k` (the gradient is linear
+in k) with `coef0 = 1`; CR2 folds `1/scale_w` into `k` and `refs` with
+`inv_scale = 1` (h and coef·dpen are unchanged algebraically — see
+`api._al_fused_inner`). The kernel itself stays region-blind.
 """
 from __future__ import annotations
 
@@ -133,8 +144,9 @@ def al_step_ref(x, m, v, usage, jobs, lo, hi, rowp, cvec, scal, *,
 
     x: (W, T) f32 primal iterate; m/v: (W, T) Adam moments (any float
     dtype — up-cast to f32 for arithmetic, stored back in their dtype);
-    cvec: (1, T) carbon gradient term (−car_norm·mci); rowp/scal: packed
-    parameters, see module docstring.
+    cvec: (1, T) carbon gradient term (−car_norm·mci), or (W, T) for
+    per-row carbon weights; rowp/scal: packed parameters, see module
+    docstring.
     """
     if mode not in ("cr1", "cr2"):
         raise ValueError(f"mode must be cr1|cr2, got {mode!r}")
@@ -146,7 +158,7 @@ def al_step_ref(x, m, v, usage, jobs, lo, hi, rowp, cvec, scal, *,
     inv_u = 1.0 / usage.astype(f32)
     ju = jobs.astype(f32) * inv_u
     isb = rowp[:, 8:9]
-    refs, lam_eq = rowp[:, 9:10], rowp[:, 10:11]
+    refs, lam_eq, stepw = rowp[:, 9:10], rowp[:, 10:11], rowp[:, 11:12]
     coef0, mu = scal[0, 0], scal[0, 1]
     inv_scale, lr_scale, t0 = scal[0, 2], scal[0, 3], scal[0, 4]
     lb1, lb2 = jnp.log(f32(beta1)), jnp.log(f32(beta2))
@@ -166,6 +178,6 @@ def al_step_ref(x, m, v, usage, jobs, lo, hi, rowp, cvec, scal, *,
         v = beta2 * v + (1.0 - beta2) * g * g
         mhat = m / (1.0 - jnp.exp(t * lb1))
         vhat = v / (1.0 - jnp.exp(t * lb2))
-        x = _project(x - lr_scale * mhat / (jnp.sqrt(vhat) + eps),
+        x = _project(x - lr_scale * stepw * mhat / (jnp.sqrt(vhat) + eps),
                      lo, hi, isb, day_hours)
     return x, m.astype(mdt), v.astype(mdt)

@@ -15,9 +15,14 @@ are row-separable over workloads, so they shard W over a 1-D mesh
 (REGION_AXIS, FLEET_AXIS) mesh — `make_fleet_mesh(regions=R)` — where
 the W axis shards over *both* axes: a region-sorted fleet then lands
 each region's row block on one REGION_AXIS slice, so region-local
-reductions never cross the region axis (cross-region migration is a
-host-side post-stage on gathered aggregates, see
-`repro.core.migration`). On CPU CI these meshes come from
+reductions never cross the region axis. Per-region normalizers enter
+sharded bodies as row-sharded vectors (`repro.core.regional.norm_specs`
+builds the PartitionSpecs, including the stacked day-scan/sweep
+variants); cross-region migration either runs as a host-side
+post-stage on gathered aggregates (`repro.core.migration`) or — with
+`SolveContext(coupled_migration=True)` — as an unsharded joint refine
+(its (D, y) objective is not row-separable, so it stays off-mesh; see
+`repro.core.api._coupled_migrate`). On CPU CI these meshes come from
 `XLA_FLAGS=--xla_force_host_platform_device_count=N` virtual devices.
 """
 from __future__ import annotations

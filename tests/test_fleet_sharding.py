@@ -378,3 +378,65 @@ for c, r8 in zip(caps, sharded):
     assert abs(r8.total_penalty_pct - r1.total_penalty_pct) < 0.01, c
 print("OK")
 """)
+
+
+def test_sharded_scanned_day_multiregion_parity():
+    """Acceptance (ISSUE 8): multi-region `run_scanned`/`solve_day` under
+    BOTH the 1-D fleet mesh and the 2-D (region, fleet) mesh — per-tick
+    per-region norms ride the scan as row-sharded stacks — match the
+    unsharded per-tick loop to <0.01 pp realized carbon."""
+    run_in_subprocess("""
+import dataclasses
+import numpy as np
+from repro.core.api import CR1, CR2
+from repro.core.fleet_solver import synthetic_regional_fleet
+from repro.core.scenario import ForecastRegime
+from repro.core.streaming import RollingHorizonSolver
+from repro.launch.mesh import make_fleet_mesh
+
+pr = dataclasses.replace(
+    synthetic_regional_fleet(13, ["CA", "TX"], hours=48, seed=0,
+                             utc_offsets="auto"),
+    topology=None)
+mk = lambda: ForecastRegime(n_scenarios=1, seed=5,
+                            sigma=(0.03, 0.03)).streams(pr, n_ticks=4)[0]
+for pol, cold, warm in ((CR1(lam=1.45), 300, 100),
+                        (CR2(cap_frac=0.8, outer=2), 150, 50)):
+    plain = RollingHorizonSolver(pr, mk(), policy=pol, cold_steps=cold,
+                                 warm_steps=warm).run(4)
+    for mesh in (make_fleet_mesh(), make_fleet_mesh(regions=2)):
+        scan = RollingHorizonSolver(pr, mk(), policy=pol, cold_steps=cold,
+                                    warm_steps=warm,
+                                    mesh=mesh).run_scanned(4)
+        gap = abs(plain.realized_reduction_pct
+                  - scan.realized_reduction_pct)
+        assert gap < 0.01, f"{pol.name} {mesh.axis_names} gap {gap}"
+        assert np.abs(plain.committed - scan.committed).max() < 1e-2
+print("OK")
+""")
+
+
+def test_sharded_scanned_day_r1_regional_bitwise():
+    """The degenerate R=1 regional fleet mesh-scans bitwise-identically
+    to the plain single-region fleet (the `_single_region_view`
+    canonicalization reaches the day scan too)."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1
+from repro.core.carbon import ForecastStream
+from repro.core.fleet_solver import regional_fleet, synthetic_fleet
+from repro.core.streaming import RollingHorizonSolver
+from repro.launch.mesh import make_fleet_mesh
+
+fp = synthetic_fleet(13)
+pr = regional_fleet([fp], np.asarray(fp.mci)[None])
+mk = lambda: ForecastStream.caiso(n_ticks=3, horizon=fp.T, seed=5)
+mesh = make_fleet_mesh()
+a = RollingHorizonSolver(fp, mk(), policy=CR1(lam=1.45), cold_steps=200,
+                         warm_steps=60, mesh=mesh).run_scanned(3)
+b = RollingHorizonSolver(pr, mk(), policy=CR1(lam=1.45), cold_steps=200,
+                         warm_steps=60, mesh=mesh).run_scanned(3)
+np.testing.assert_array_equal(a.committed, b.committed)
+assert a.realized_reduction_pct == b.realized_reduction_pct
+print("OK")
+""")

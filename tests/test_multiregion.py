@@ -205,3 +205,231 @@ def test_r3_regional_beats_best_single_signal_solve():
         assert curtail >= multi_curtail
         best = max(best, realized * multi_curtail / curtail)
     assert multi.carbon_reduction_pct > best + 0.5
+
+
+# ---------------------------------------------------------------------------
+# RegionReductions layer (ISSUE 8): one reduction vocabulary for every lane
+# ---------------------------------------------------------------------------
+def test_region_totals_matches_manual_scatter():
+    from repro.core.regional import region_totals
+    p = synthetic_regional_fleet(7, ["CA", "TX"], hours=24, seed=3)
+    region = np.asarray(p.region)
+    vals = np.asarray(p.usage)
+    ref = np.zeros((p.R, p.T))
+    np.add.at(ref, region, vals)
+    np.testing.assert_allclose(region_totals(region, vals, p.R), ref)
+    ref1 = np.bincount(region, weights=vals[:, 0], minlength=p.R)
+    np.testing.assert_allclose(region_totals(region, vals[:, 0], p.R), ref1)
+    # masked subsets stay index-aligned (the migration `movable` idiom)
+    m = np.asarray(p.is_batch, bool)
+    refm = np.zeros((p.R, p.T))
+    np.add.at(refm, region[m], vals[m])
+    np.testing.assert_allclose(region_totals(region[m], vals[m], p.R), refm)
+
+
+def test_regional_norms_decompose_per_region():
+    """Per-region CR1 norms scattered to rows equal each region's
+    standalone single-region scalars — the algebra behind the
+    bandwidth=0 decomposition."""
+    import dataclasses as dc
+
+    from repro.core.fleet_solver import _single_region_view
+    from repro.core.regional import cr1_norms, pad_row_norms, CR1_NORM_FILLS
+    p = synthetic_regional_fleet(8, ["CA", "TX"], hours=24, seed=4)
+    pen_w, car_w, step_w = (np.asarray(a) for a in cr1_norms(p))
+    region = np.asarray(p.region)
+    for r in range(p.R):
+        rows = region == r
+        sub = _single_region_view(dc.replace(
+            p, usage=np.asarray(p.usage)[rows],
+            entitlement=np.asarray(p.entitlement)[rows],
+            jobs=np.asarray(p.jobs)[rows],
+            upper=None if p.upper is None else np.asarray(p.upper)[rows],
+            rts_coeffs=np.asarray(p.rts_coeffs)[rows],
+            betas=np.asarray(p.betas)[rows], k=np.asarray(p.k)[rows],
+            x2_kind=np.asarray(p.x2_kind)[rows],
+            is_batch=np.asarray(p.is_batch)[rows],
+            mci=np.asarray(p.mci)[r][None], region=np.zeros(rows.sum(), int),
+            topology=None))
+        s_pen, s_car, s_step = (np.asarray(a) for a in cr1_norms(sub))
+        np.testing.assert_allclose(pen_w[rows], s_pen, rtol=1e-6)
+        np.testing.assert_allclose(car_w[rows], s_car, rtol=1e-6)
+        np.testing.assert_allclose(step_w[rows, 0], s_step, rtol=1e-6)
+    # pad rows are inert: zero weights, unit step divisor
+    padded = pad_row_norms((pen_w, car_w, step_w), p.W + 3, CR1_NORM_FILLS)
+    assert np.all(np.asarray(padded[0])[p.W:] == 0.0)
+    assert np.all(np.asarray(padded[1])[p.W:] == 0.0)
+    assert np.all(np.asarray(padded[2])[p.W:] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# stack_states: multi-region warm refinement sweeps (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+def test_stack_states_r2_cold_stack_roundtrip_and_warm_sweep():
+    """R=2 cold-stack regression: stacking per-lane states is a bitwise
+    round-trip, and the stacked warm refinement sweep matches per-policy
+    warm solves (CR1's vmap lane is bitwise vs solo on one device)."""
+    import jax
+
+    from repro.core.api import stack_states
+    p = dataclasses.replace(
+        synthetic_regional_fleet(10, ["CA", "TX"], hours=24, seed=1),
+        topology=None)
+    pols = [CR1(lam=1.0), CR1(lam=1.45)]
+    cold = sweep(p, pols, ctx=SolveContext(steps=100))
+    st = stack_states([r.state for r in cold])
+    for i, r in enumerate(cold):
+        for got, want in zip(jax.tree_util.tree_leaves(st),
+                             jax.tree_util.tree_leaves(r.state)):
+            np.testing.assert_array_equal(np.asarray(got)[i],
+                                          np.asarray(want))
+    warm = sweep(p, pols, ctx=SolveContext(steps=40, warm=st))
+    for pl, w, c in zip(pols, warm, cold):
+        solo = solve(p, pl, ctx=SolveContext(steps=40, warm=c.state))
+        np.testing.assert_array_equal(w.D, solo.D)
+        assert w.carbon_reduction_pct == solo.carbon_reduction_pct
+
+
+def test_stack_states_rejects_mismatched_lanes():
+    from repro.core.api import stack_states
+    p2 = dataclasses.replace(
+        synthetic_regional_fleet(10, ["CA", "TX"], hours=24, seed=1),
+        topology=None)
+    p1 = synthetic_fleet(4, seed=0, hours=24)
+    a = solve(p2, CR1(lam=1.45), ctx=SolveContext(steps=30))
+    b = solve(p1, CR1(lam=1.45), ctx=SolveContext(steps=30))
+    with pytest.raises(ValueError, match="stack_states"):
+        stack_states([a.state, b.state])
+    with pytest.raises(ValueError, match="at least one"):
+        stack_states([])
+
+
+# ---------------------------------------------------------------------------
+# Coupled in-loop migration (ISSUE 8 tentpole)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_coupled_migration_matches_or_beats_post_stage():
+    """Headline: `SolveContext(coupled_migration=True)` on the R=3
+    CA/TX/NY fleet never loses to the host-side post-stage on fleet-wide
+    carbon at equal total curtailment — and for CR1 at these settings the
+    coupled candidate actually wins and carries a feasible plan."""
+    from repro.core.migration import region_aggregates
+    p = synthetic_regional_fleet(60, ["CA", "TX", "NY"], hours=48, seed=7)
+    ctx = SolveContext(steps=300)
+    cctx = dataclasses.replace(ctx, coupled_migration=True)
+    for pol in (CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)):
+        post = solve(p, pol, ctx=ctx)
+        coup = solve(p, pol, ctx=cctx)
+        assert coup.carbon_reduction_pct >= post.carbon_reduction_pct
+        tot_post = float(np.asarray(post.D).sum())
+        tot_coup = float(np.asarray(coup.D).sum())
+        assert abs(tot_coup - tot_post) <= 2e-3 * max(abs(tot_post), 1.0)
+        if coup.extras.get("coupled_migration"):
+            plan = coup.extras["migration"]
+            y = plan.y
+            bw = np.asarray(p.topology.bandwidth)
+            assert (y >= 0.0).all()
+            assert (y <= bw[:, :, None]).all()
+            assert np.abs(np.trace(y.sum(axis=2))) == 0.0
+            movable, headroom = region_aggregates(p, np.asarray(coup.D))
+            assert (y.sum(axis=1) <= movable * (1 + 1e-9) + 1e-9).all()
+            assert (y.sum(axis=0) <= headroom + 1e-9).all()
+    # the CR1 coupled candidate wins outright at these settings
+    cr1 = solve(p, CR1(lam=1.45), ctx=cctx)
+    assert cr1.extras.get("coupled_migration") is True
+    assert cr1.carbon_reduction_pct > solve(
+        p, CR1(lam=1.45), ctx=ctx).carbon_reduction_pct
+
+
+def test_coupled_migration_zero_bandwidth_is_pure_solve():
+    """bandwidth=0 leaves no links for the coupled solve — it must fall
+    back to the plain (migration-free) result bitwise, preserving the
+    per-region decomposition."""
+    top = RegionTopology(cost=np.full((2, 2), 2.0),
+                         bandwidth=np.zeros((2, 2)))
+    p = synthetic_regional_fleet(6, ["CA", "TX"], hours=24, seed=1,
+                                 topology=top)
+    ctx = SolveContext(steps=120)
+    plain = solve(p, CR1(lam=1.45), ctx=ctx)
+    coup = solve(p, CR1(lam=1.45),
+                 ctx=dataclasses.replace(ctx, coupled_migration=True))
+    np.testing.assert_array_equal(plain.D, coup.D)
+    assert plain.carbon_reduction_pct == coup.carbon_reduction_pct
+    assert "migration" not in coup.extras
+
+
+# ---------------------------------------------------------------------------
+# Migration edge cases (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+def test_single_region_topology_is_exact_noop():
+    """A degenerate 1-region topology (even with positive self-bandwidth)
+    has no off-diagonal links: solve() with and without it — post-stage
+    or coupled — is bitwise the plain single-region solve."""
+    fp = synthetic_fleet(5, seed=3)
+    pr = regional_fleet([fp], np.asarray(fp.mci)[None])
+    top = RegionTopology(cost=np.zeros((1, 1)), bandwidth=np.ones((1, 1)))
+    pt = dataclasses.replace(pr, topology=top)
+    ctx = SolveContext(steps=120)
+    a = solve(pr, CR1(lam=1.45), ctx=ctx)
+    b = solve(pt, CR1(lam=1.45), ctx=ctx)
+    c = solve(pt, CR1(lam=1.45),
+              ctx=dataclasses.replace(ctx, coupled_migration=True))
+    np.testing.assert_array_equal(a.D, b.D)
+    np.testing.assert_array_equal(a.D, c.D)
+    assert a.carbon_reduction_pct == b.carbon_reduction_pct
+    assert a.carbon_reduction_pct == c.carbon_reduction_pct
+    assert "migration" not in b.extras and "migration" not in c.extras
+    assert fleet_migration(pt, np.asarray(b.D)).moved_total == 0.0
+
+
+def test_toll_dominated_links_are_never_used():
+    """Links whose toll meets or exceeds the maximum carbon spread can
+    never be profitable: the planner moves nothing through them, in the
+    post-stage and in the coupled solve alike."""
+    from repro.core.migration import plan_migration
+    base = synthetic_regional_fleet(6, ["CA", "TX"], hours=24, seed=1)
+    mci = np.asarray(base.mci, float)
+    spread = float(np.abs(mci[0] - mci[1]).max())
+    top = RegionTopology(cost=np.full((2, 2), spread),
+                         bandwidth=np.full((2, 2), 1e3))
+    p = dataclasses.replace(base, topology=top)
+    plan = plan_migration(mci, np.ones((2, base.T)),
+                          np.full((2, base.T), np.inf), top)
+    assert plan.moved_total == 0.0 and plan.net_saved == 0.0
+    res = solve(p, CR1(lam=1.45), ctx=SolveContext(steps=120))
+    off = solve(dataclasses.replace(p, topology=None), CR1(lam=1.45),
+                ctx=SolveContext(steps=120))
+    if "migration" in res.extras:
+        assert res.extras["migration"].moved_total == 0.0
+    assert res.carbon_reduction_pct == off.carbon_reduction_pct
+    coup = solve(p, CR1(lam=1.45),
+                 ctx=SolveContext(steps=120, coupled_migration=True))
+    if "migration" in coup.extras:
+        assert coup.extras["migration"].moved_total == 0.0
+    assert coup.carbon_reduction_pct >= res.carbon_reduction_pct
+
+
+def test_repair_respects_caps_under_adversarial_rounding():
+    """`_repair` projects an over-cap AL iterate (tiny epsilon overshoots
+    AND gross violations) onto the exact constraint set: link caps hold
+    exactly, supply/headroom to float rounding, unprofitable links drop
+    to zero."""
+    from repro.core.migration import _repair
+    rng = np.random.default_rng(0)
+    R, T = 3, 8
+    mci = rng.uniform(100.0, 500.0, (R, T))
+    cost = rng.uniform(0.0, 50.0, (R, R))
+    np.fill_diagonal(cost, 0.0)
+    margin = mci[:, None, :] - mci[None, :, :] - cost[:, :, None]
+    bw = rng.uniform(0.0, 2.0, (R, R))
+    np.fill_diagonal(bw, 0.0)
+    cap = np.broadcast_to(bw[:, :, None], (R, R, T)).copy()
+    movable = rng.uniform(0.0, 1.5, (R, T))
+    headroom = rng.uniform(0.0, 1.0, (R, T))
+    y = cap * (1.0 + 1e-7) + rng.uniform(0.0, 1.0, cap.shape)
+    out = _repair(y, margin, cap, movable, headroom)
+    assert (out >= 0.0).all()
+    assert (out <= cap).all()                       # link caps: exact
+    assert (out[margin <= 0.0] == 0.0).all()        # unprofitable: dropped
+    assert (out.sum(axis=1) <= movable * (1 + 1e-9) + 1e-12).all()
+    assert (out.sum(axis=0) <= headroom * (1 + 1e-9) + 1e-12).all()

@@ -380,13 +380,14 @@ def test_run_scanned_guards():
                              warm_steps=5).run_scanned(2)
     with pytest.raises(ValueError, match="n_ticks"):
         RollingHorizonSolver(p, mk()).run_scanned(0)
-    # a mesh is fine for single-region days now (the scan nests inside the
-    # shard_map); multi-region + mesh stays a solve_day follow-up
+    # multi-region scanned days run off-mesh too (mesh parity is covered
+    # in test_multiregion)
     pr = synthetic_regional_fleet(4, ["CA", "TX"], hours=p.T, seed=0)
     streams = [ForecastStream(actual=np.tile(m, 2), horizon=p.T, seed=i)
                for i, m in enumerate(np.asarray(pr.mci))]
-    with pytest.raises(NotImplementedError, match="mesh"):
-        RollingHorizonSolver(pr, streams, mesh=object()).run_scanned(2)
+    rep = RollingHorizonSolver(pr, streams, cold_steps=20,
+                               warm_steps=5).run_scanned(2)
+    assert len(rep.ticks) == 2
 
 
 def test_solve_day_validates_inputs():
@@ -397,11 +398,11 @@ def test_solve_day_validates_inputs():
         solve_day(object(), "cr1", stack)
     with pytest.raises(ValueError, match="mci_stack"):
         solve_day(p, "cr1", stack[:, :10])
-    # single-region + mesh is supported now; multi-region + mesh is not
+    # multi-region stacks must match the (R, T) forecast shape
     pr = synthetic_regional_fleet(4, ["CA", "TX"], hours=p.T, seed=0)
     rstack = np.stack([np.asarray(pr.mci)] * 2)
-    with pytest.raises(NotImplementedError, match="mesh"):
-        solve_day(pr, "cr1", rstack, ctx=SolveContext(mesh=object()))
+    with pytest.raises(ValueError, match="mci_stack"):
+        solve_day(pr, "cr1", rstack[:, :1, :10])
     with pytest.raises(NotImplementedError, match="host-side"):
         solve_day(p, "b1", stack)
     day = solve_day(p, CR1(lam=1.45), stack, cold_steps=40)
