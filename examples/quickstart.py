@@ -153,6 +153,29 @@ def main() -> None:
     print(f"  carbon ↓{rc.carbon_reduction_pct:.2f}% vs post-stage "
           f"↓{rr.carbon_reduction_pct:.2f}% ({kept} candidate kept)")
 
+    # Debugging & sanitizers (repro.analysis): when a solve misbehaves,
+    # (1) SolveContext(sanitize=True) reruns the SAME jitted CR1/CR2
+    # solve through a checkify twin — a NaN/inf in the gradient,
+    # iterate, or multipliers raises SanitizeError naming the first
+    # failing check instead of silently corrupting the plan and every
+    # warm re-solve after it (~1x overhead, bitwise parity when clean);
+    # (2) recompile_guard(0) asserts a region is compile-free, catching
+    # the drifting static argument that turns "one trace per tick" into
+    # "a compile per tick" (RollingHorizonSolver(guard_recompiles=True)
+    # wires it into streaming); (3) `python -m repro.analysis.lint`
+    # checks the tree's JAX invariants statically — see
+    # src/repro/analysis/README.md for the rulebook.
+    from repro.analysis import recompile_guard
+    rs = solve(problem, CR1(lam=1.45),
+               ctx=SolveContext(steps=300, sanitize=True))
+    # Warm re-solve of the opening solve: same static config, warm and
+    # cold share one trace, so the guarded block must stay compile-free.
+    with recompile_guard(0, label="warm quickstart re-solve"):
+        solve(problem, CR1(lam=1.45), ctx=SolveContext(warm=result.state))
+    print("\ndebug lane — SolveContext(sanitize=True) + recompile_guard:")
+    print(f"  sanitized solve clean (carbon ↓{rs.carbon_reduction_pct:.2f}%"
+          f", bitwise = unchecked lane), warm re-solve compile-free")
+
 
 if __name__ == "__main__":
     main()

@@ -16,6 +16,15 @@
 # sharding file is split out into its own invocation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== drlint (JAX invariants as an AST pass) =="
+# Millisecond static pass, so it runs first and fails fast: host leaks in
+# jit-reachable code, donation twins, check_rep justifications, tuple
+# seeding, np-on-traced, deprecated shims, ad-hoc PartitionSpecs. Exits
+# nonzero with path:line:col output on any unsuppressed violation.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.analysis.lint --fail-on-violation src/repro
+
 lane=(-m "not slow")
 if [[ "${1:-}" == "--full" ]]; then
   shift
@@ -36,6 +45,34 @@ if [[ $# -eq 0 ]]; then
   # fails this lane.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_api.py -W error::DeprecationWarning
+
+  echo "== sanitizer smoke (CR1 + CR2 under sanitize=True) =="
+  # The checkify debug lane end-to-end on both twinned policies: bitwise
+  # parity with the unchecked lane, and an injected NaN in the carbon
+  # trace must raise SanitizeError instead of silently shipping a NaN
+  # plan.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import dataclasses
+import numpy as np
+from repro.analysis import SanitizeError
+from repro.core.api import CR1, CR2, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet
+
+p = synthetic_fleet(8, seed=3)
+mci = np.asarray(p.mci, float).copy(); mci[5] = np.nan
+bad = dataclasses.replace(p, mci=mci)
+for pol in (CR1(lam=1.45), CR2(cap_frac=0.8, outer=2)):
+    plain = solve(p, pol, ctx=SolveContext(steps=80))
+    guard = solve(p, pol, ctx=SolveContext(steps=80, sanitize=True))
+    np.testing.assert_array_equal(plain.D, guard.D)
+    try:
+        solve(bad, pol, ctx=SolveContext(steps=80, sanitize=True))
+    except SanitizeError:
+        pass
+    else:
+        raise AssertionError(f"{pol.name}: NaN injection did not fire")
+print("sanitizer smoke OK")
+PY
 
   echo "== examples smoke (quickstart + 2 streaming ticks) =="
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

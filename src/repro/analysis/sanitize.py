@@ -1,0 +1,60 @@
+"""Runtime sanitizer plumbing: checkify non-finite guards for the engine.
+
+`SolveContext(sanitize=True)` routes CR1/CR2 solo solves through
+checkify-wrapped twins of the same jitted impls; the engine's AL inner
+loop then emits the finiteness checks defined here (gated on
+`EngineConfig.sanitize`, so the default lanes compile zero check code).
+A NaN or inf in the gradient, iterate, or multipliers surfaces as a
+`JaxRuntimeError` naming the first check that failed — instead of
+silently corrupting the plan and every warm re-solve chained after it.
+
+The split keeps the layering clean: this module knows checkify and
+nothing about the engine; `core.engine` emits checks through
+`check_all_finite`; `core.api` owns the `checked_jit` twins and the
+`err.throw()` at the call boundary.
+
+`checkify.check` is only legal under a `checkify.checkify` transform —
+which is why `EngineConfig.sanitize` must never be True outside the
+`checked_jit` lanes (api.py enforces this pairing).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+__all__ = ["SanitizeError", "check_all_finite", "checked_jit"]
+
+#: What a fired sanitizer check raises from `err.throw()`.
+SanitizeError = checkify.JaxRuntimeError
+
+
+def check_all_finite(tag: str, **named) -> None:
+    """Emit one checkify non-finite check per named array.
+
+    `tag` names the engine site (e.g. ``"al-inner"``); the array's
+    keyword name rides into the error message so a failure reads
+    ``al-inner: non-finite values in grad``. Call only from code that
+    executes under `checkify.checkify` (see module docstring).
+    """
+    for name, value in named.items():
+        checkify.check(
+            jnp.isfinite(jnp.asarray(value)).all(),
+            f"{tag}: non-finite values in {name} — the solve diverged or "
+            f"its inputs carry NaN/inf")
+
+
+def checked_jit(fn: Callable, *,
+                static_argnames: Sequence[str] = ()) -> Callable:
+    """`jax.jit(checkify.checkify(fn))` — the sanitizer twin of a lane.
+
+    Only user checks (`checkify.check`, i.e. `check_all_finite`) are
+    functionalized: the sanitizer asserts the invariants the engine
+    states explicitly, rather than paying for checkify's automatic
+    div/index instrumentation on every primitive. The wrapped function
+    returns ``(err, out)``; the caller must `err.throw()`.
+    """
+    return jax.jit(checkify.checkify(fn, errors=checkify.user_checks),
+                   static_argnames=tuple(static_argnames))

@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.sanitize import checked_jit
 from repro.core.engine import (EngineConfig, EngineState, al_minimize,
                                al_minimize_sharded)
 from repro.core.fleet_solver import (CR1_MU0, CR2_MU0, CR3_MU0,
@@ -135,6 +136,14 @@ class SolveContext:
         the post-stage on fleet-wide carbon, so enabling this never
         loses carbon. CR1/CR2 multi-region only; everything else falls
         back to the post-stage.
+      sanitize: route the solve through a `checkify`-wrapped twin of the
+        same jitted impl: the AL loop emits non-finite guards on the
+        gradient, iterate, and multipliers (`EngineConfig.sanitize`),
+        so a NaN/inf raises `repro.analysis.SanitizeError` naming the
+        first failing check instead of silently corrupting the plan
+        and every warm re-solve chained after it. Debug lane: CR1/CR2
+        solo solves only (mesh/donate/coupled_migration raise
+        `NotImplementedError`), <2x wall-clock of the unchecked lane.
     """
     mesh: Any = None
     donate: bool = False
@@ -145,6 +154,7 @@ class SolveContext:
     steps: int | None = None
     moment_dtype: str = "float32"
     coupled_migration: bool = False
+    sanitize: bool = False
 
     def resolved_steps(self, policy: "DRPolicy") -> int:
         return self.steps if self.steps is not None else policy.default_steps
@@ -219,6 +229,25 @@ def configured_policy(policy, *, lam: float = 1.45, cap_frac: float = 0.78,
     return by_name.get(policy, POLICY_REGISTRY[policy])()
 
 
+def _require_sanitizable(policy, ctx: SolveContext) -> None:
+    """`sanitize=True` covers the CR1/CR2 solo engine lanes — the paths
+    with checkify-wrapped jit twins. Everything else fails loudly here
+    rather than silently skipping the guards the caller asked for."""
+    name = getattr(policy, "name", type(policy).__name__)
+    if name not in ("cr1", "cr2"):
+        raise NotImplementedError(
+            f"SolveContext(sanitize=True) supports CR1/CR2 (the checkify-"
+            f"twinned engine lanes); policy {name!r} has no sanitized lane")
+    for field, flag in (("mesh", ctx.mesh is not None),
+                        ("donate", ctx.donate),
+                        ("coupled_migration", ctx.coupled_migration)):
+        if flag:
+            raise NotImplementedError(
+                f"SolveContext(sanitize=True) is a solo debug lane; "
+                f"combining it with {field} is not supported — drop "
+                f"{field} while sanitizing")
+
+
 def solve(problem: FleetProblem, policy, *,
           ctx: SolveContext | None = None) -> FleetSolveResult:
     """Solve `problem` under `policy` — the single fleet entry point.
@@ -235,6 +264,8 @@ def solve(problem: FleetProblem, policy, *,
     problem = _single_region_view(problem)
     ctx = ctx or SolveContext()
     policy = resolve_policy(policy)
+    if ctx.sanitize:
+        _require_sanitizable(policy, ctx)
     res = policy.solve(problem, ctx)
     if ctx.coupled_migration:
         return _coupled_migrate(problem, policy, res, ctx)
@@ -264,6 +295,12 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
 
     Results are returned in `policies` order."""
     ctx = ctx or SolveContext()
+    if ctx.sanitize:
+        raise NotImplementedError(
+            "SolveContext(sanitize=True) is a solo-solve debug lane — the "
+            "vmapped sweep lanes have no checkify twins (and a silent "
+            "fallback would skip the guards you asked for); sanitize "
+            "policies one at a time through solve()")
     problem = _single_region_view(problem)
     pols = [resolve_policy(pl) for pl in policies]
     if not pols:
@@ -526,6 +563,11 @@ def ensemble(problem: FleetProblem, policy, scenarios, *,
     `.report()` for the quantile/CVaR/fairness risk summary. Thin
     delegate to `repro.core.ensemble.evaluate_ensemble` (kept lazy —
     the ensemble layer imports this module)."""
+    if ctx is not None and ctx.sanitize:
+        raise NotImplementedError(
+            "SolveContext(sanitize=True) is a solo-solve debug lane — the "
+            "vmapped ensemble lanes have no checkify twins; sanitize "
+            "single scenarios through solve()")
     from repro.core.ensemble import evaluate_ensemble
     return evaluate_ensemble(problem, policy, scenarios, ctx=ctx,
                              batched=batched)
@@ -607,18 +649,20 @@ def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
     return objective, project, step_scale
 
 
-def _cr1_cfg(steps: int, moment_dtype: str = "float32") -> EngineConfig:
+def _cr1_cfg(steps: int, moment_dtype: str = "float32",
+             sanitize: bool = False) -> EngineConfig:
     return EngineConfig(inner_steps=steps, outer_steps=1,
-                        moment_dtype=moment_dtype)
+                        moment_dtype=moment_dtype, sanitize=sanitize)
 
 
 def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
               use_kernel: bool, shift: int = 0, reset_mu: bool = False,
-              moment_dtype: str = "float32", norms=None):
+              moment_dtype: str = "float32", sanitize: bool = False,
+              norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
     norms = _cr1_norms(p) if norms is None else norms
     objective, project, step_scale = _cr1_pieces(p, use_kernel, norms=norms)
-    cfg = _cr1_cfg(steps, moment_dtype)
+    cfg = _cr1_cfg(steps, moment_dtype, sanitize)
     fused = _al_fused_inner(p, "cr1", cfg, car_norm=norms[1],
                             step_scale=step_scale,
                             coef0=lam * norms[0]) if use_kernel else None
@@ -628,10 +672,14 @@ def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
     return D, fleet_penalties(p, D, use_kernel), aux["state"]
 
 
-_CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu", "moment_dtype")
+_CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu", "moment_dtype",
+               "sanitize")
 _cr1_run = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC)
 _cr1_run_donated = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC,
                            donate_argnums=(2,))
+# The sanitizer twin: same impl, checkify-functionalized user checks
+# (`EngineConfig.sanitize` emits them); returns (err, out).
+_cr1_run_checked = checked_jit(_cr1_impl, static_argnames=_CR1_STATIC)
 
 
 def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
@@ -713,6 +761,9 @@ def _cr1_sweep_sharded(p: FleetProblem, lams, norms, mesh, steps: int,
 
         return jax.vmap(solve_one)(lams_b)
 
+    # check_rep=False: `body` may dispatch the fused al_step pallas_call
+    # (use_kernel), which has no shard_map replication rule; every output
+    # is explicitly spec'd above.
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), P(), _norm_specs(p, axis)),
@@ -741,11 +792,19 @@ class CR1:
         if ctx.mesh is None:
             if warm is None:
                 warm = EngineState.cold(jnp.zeros(p.usage.shape))
-            run = _cr1_run_donated if ctx.donate else _cr1_run
-            D, pens, state = run(_jit_view(p), self.lam, warm, steps=steps,
-                                 use_kernel=use_kernel, shift=ctx.shift,
-                                 reset_mu=ctx.reset_mu,
-                                 moment_dtype=ctx.moment_dtype)
+            if ctx.sanitize:
+                err, (D, pens, state) = _cr1_run_checked(
+                    _jit_view(p), self.lam, warm, steps=steps,
+                    use_kernel=use_kernel, shift=ctx.shift,
+                    reset_mu=ctx.reset_mu, moment_dtype=ctx.moment_dtype,
+                    sanitize=True)
+                err.throw()
+            else:
+                run = _cr1_run_donated if ctx.donate else _cr1_run
+                D, pens, state = run(_jit_view(p), self.lam, warm,
+                                     steps=steps, use_kernel=use_kernel,
+                                     shift=ctx.shift, reset_mu=ctx.reset_mu,
+                                     moment_dtype=ctx.moment_dtype)
             return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
                            state=state)
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
@@ -823,21 +882,22 @@ def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
     return objective, eq, _projection(p, lo, hi), step_scale
 
 
-def _cr2_cfg(steps: int, outer: int,
-             moment_dtype: str = "float32") -> EngineConfig:
+def _cr2_cfg(steps: int, outer: int, moment_dtype: str = "float32",
+             sanitize: bool = False) -> EngineConfig:
     return EngineConfig(inner_steps=steps, outer_steps=outer, mu0=CR2_MU0,
-                        mu_growth=2.0, moment_dtype=moment_dtype)
+                        mu_growth=2.0, moment_dtype=moment_dtype,
+                        sanitize=sanitize)
 
 
 def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
               outer: int, use_kernel: bool, shift: int = 0,
               reset_mu: bool = False, moment_dtype: str = "float32",
-              norms=None):
+              sanitize: bool = False, norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
     norms = _cr2_norms(p, refs) if norms is None else norms
     objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel,
                                                      norms=norms)
-    cfg = _cr2_cfg(steps, outer, moment_dtype)
+    cfg = _cr2_cfg(steps, outer, moment_dtype, sanitize)
     fused = _al_fused_inner(p, "cr2", cfg, car_norm=norms[0],
                             step_scale=step_scale, scale=norms[1],
                             refs=refs) if use_kernel else None
@@ -848,10 +908,12 @@ def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
 
 
 _CR2_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu",
-               "moment_dtype")
+               "moment_dtype", "sanitize")
 _cr2_run = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC)
 _cr2_run_donated = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC,
                            donate_argnums=(2,))
+# The sanitizer twin (see `_cr1_run_checked`).
+_cr2_run_checked = checked_jit(_cr2_impl, static_argnames=_CR2_STATIC)
 
 
 def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
@@ -933,6 +995,9 @@ def _cr2_sweep_sharded(p: FleetProblem, refs_stack, norms_stack, mesh,
         return jax.vmap(solve_one)(refs_b, norms_b)
 
     nspec = P() if np.ndim(p.mci) == 1 else P(None, axis)
+    # check_rep=False: `body` may dispatch the fused al_step pallas_call
+    # (use_kernel), which has no shard_map replication rule; every output
+    # is explicitly spec'd above.
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), P(None, axis),
@@ -965,11 +1030,20 @@ class CR2:
             if warm is None:
                 warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
                                         mu0=CR2_MU0)
-            run = _cr2_run_donated if ctx.donate else _cr2_run
-            D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
-                                 outer=self.outer, use_kernel=use_kernel,
-                                 shift=ctx.shift, reset_mu=ctx.reset_mu,
-                                 moment_dtype=ctx.moment_dtype)
+            if ctx.sanitize:
+                err, (D, pens, state) = _cr2_run_checked(
+                    _jit_view(p), refs, warm, steps=steps,
+                    outer=self.outer, use_kernel=use_kernel,
+                    shift=ctx.shift, reset_mu=ctx.reset_mu,
+                    moment_dtype=ctx.moment_dtype, sanitize=True)
+                err.throw()
+            else:
+                run = _cr2_run_donated if ctx.donate else _cr2_run
+                D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
+                                     outer=self.outer,
+                                     use_kernel=use_kernel,
+                                     shift=ctx.shift, reset_mu=ctx.reset_mu,
+                                     moment_dtype=ctx.moment_dtype)
             return _report(p, np.asarray(D), np.asarray(pens),
                            iters=steps * self.outer, state=state)
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
@@ -1617,6 +1691,9 @@ def _day_cr1_impl_sharded(p: FleetProblem, lam, mci_stack, norms_stack,
 
     state_specs = EngineState(x=P(axis), lam_eq=P(axis), lam_in=P(axis),
                               mu=P())
+    # check_rep=False: the day scan's tick solves may dispatch the fused
+    # al_step pallas_call (use_kernel), which has no shard_map
+    # replication rule; every output is explicitly spec'd above.
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), P(), P(),
@@ -1662,6 +1739,9 @@ def _day_cr2_impl_sharded(p: FleetProblem, cap_frac, mci_stack,
 
     state_specs = EngineState(x=P(axis), lam_eq=P(axis), lam_in=P(axis),
                               mu=P())
+    # check_rep=False: the day scan's tick solves may dispatch the fused
+    # al_step pallas_call (use_kernel), which has no shard_map
+    # replication rule; every output is explicitly spec'd above.
     return shard_map(
         body, mesh=mesh,
         in_specs=(_fleet_specs(p, axis), P(), P(),
@@ -1744,6 +1824,11 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     """
     ctx = ctx or SolveContext()
     policy = resolve_policy(policy)
+    if ctx.sanitize:
+        raise NotImplementedError(
+            "SolveContext(sanitize=True) is a solo-solve debug lane — the "
+            "day scan has no checkify twin; sanitize per-tick solves "
+            "through solve()/RollingHorizonSolver.step()")
     if not isinstance(problem, FleetProblem):
         raise TypeError(
             f"solve_day() takes a FleetProblem; got "

@@ -92,6 +92,12 @@ class EngineConfig:
     # arithmetic step runs in f32 (moments are up-cast on load, down-cast
     # on store). "float32" is bit-identical to the historical behaviour.
     moment_dtype: str = "float32"
+    # Emit checkify non-finite guards on the gradient, iterate, and
+    # multipliers (`repro.analysis.sanitize`). ONLY legal when the
+    # jitted caller wraps the whole solve in `checkify.checkify` — the
+    # `SolveContext(sanitize=True)` lanes in `core.api` own that
+    # pairing. False compiles zero check code.
+    sanitize: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,10 +229,16 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
             vhat = v / (1.0 - cfg.beta2 ** t)
             x = project(x - cfg.lr * step_scale * mhat
                         / (jnp.sqrt(vhat) + cfg.eps))
+            if cfg.sanitize:
+                from repro.analysis.sanitize import check_all_finite
+                check_all_finite("al-inner", grad=g, x=x)
             return (x, m.astype(mdt), v.astype(mdt), t), None
 
         if fused_inner is not None:
             x = fused_inner(x, lam_eq, lam_in, mu)
+            if cfg.sanitize:
+                from repro.analysis.sanitize import check_all_finite
+                check_all_finite("al-fused-inner", x=x)
         else:
             (x, _, _, _), _ = jax.lax.scan(
                 inner, (x, jnp.zeros(x.shape, mdt), jnp.zeros(x.shape, mdt),
@@ -235,6 +247,9 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
             lam_eq = lam_eq + mu * eq_vec(x)
         if n_in:
             lam_in = jnp.maximum(lam_in - mu * ineq_vec(x), 0.0)
+        if cfg.sanitize and (n_eq or n_in):
+            from repro.analysis.sanitize import check_all_finite
+            check_all_finite("al-multipliers", lam_eq=lam_eq, lam_in=lam_in)
         return (x, lam_eq, lam_in,
                 jnp.minimum(mu * cfg.mu_growth, cfg.mu_max)), None
 
@@ -243,6 +258,10 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
     carry0 = (project(init.x), init.lam_eq.astype(init.x.dtype),
               init.lam_in.astype(init.x.dtype),
               jnp.asarray(init.mu, init.x.dtype))
+    if cfg.sanitize:
+        from repro.analysis.sanitize import check_all_finite
+        check_all_finite("al-init", x0=carry0[0], lam_eq=carry0[1],
+                         lam_in=carry0[2], mu=carry0[3])
     (x, lam_eq, lam_in, mu), _ = jax.lax.scan(
         outer_body, carry0, None, length=cfg.outer_steps)
     return x, {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu,

@@ -385,6 +385,9 @@ def resolve_use_kernel(flag: bool | None) -> bool:
     if flag is None:
         from repro.kernels.dispatch import on_tpu
         return on_tpu()
+    # use_kernel rides static_argnames in every jitted lane, so `flag`
+    # is always a concrete host bool here, never a tracer.
+    # drlint: disable=jit-host-leak -- static jit argument, not traced
     return bool(flag)
 
 

@@ -37,6 +37,17 @@ def entropy_over_sweep(results, entitlements: np.ndarray,
     return {"penalty_entropy": pen, "carbon_entropy": car}
 
 
+def _poison_nonfinite(x: np.ndarray, axis: int,
+                      out: np.ndarray) -> np.ndarray:
+    """NaN-propagate a fairness reduction: any non-finite share along
+    `axis` makes that slice's index NaN. Without this, a NaN share falls
+    out of the `den > eps` comparison (NaN compares False) and the
+    metric silently reads 1.0 — "perfectly fair" — for a corrupted
+    plan."""
+    bad = ~np.isfinite(x).all(axis=axis)
+    return np.where(bad, np.nan, out)
+
+
 def jain_index(values: np.ndarray, entitlements: np.ndarray,
                axis: int = -1) -> np.ndarray | float:
     """Jain fairness index (Σx)²/(n·Σx²) over capacity-scaled shares
@@ -44,13 +55,25 @@ def jain_index(values: np.ndarray, entitlements: np.ndarray,
     (S, W) stacks and get one index per scenario).
 
     1.0 = perfectly proportional losses; 1/n = one workload bears all.
-    All-zero shares (no DR) are trivially fair -> 1.0."""
+
+    Degenerate inputs (reachable from `EnsembleReport` when a scenario
+    curtails nothing): all-zero shares (no DR) are trivially fair ->
+    1.0; an *empty* axis (zero workloads) likewise -> 1.0; non-finite
+    shares (a diverged solve) propagate -> NaN, never a fair-looking
+    1.0."""
     x = np.maximum(np.asarray(values, float), 0.0) \
         / np.asarray(entitlements, float)
     n = x.shape[axis]
+    if n == 0:
+        out = np.ones(np.sum(x, axis=axis).shape)
+        return float(out) if np.ndim(out) == 0 else out
     num = x.sum(axis=axis) ** 2
     den = n * (x * x).sum(axis=axis)
-    out = np.where(den > 1e-24, num / np.maximum(den, 1e-24), 1.0)
+    # errstate: non-finite shares make num/den garbage here; the poison
+    # mask below overwrites those slots with NaN deliberately.
+    with np.errstate(invalid="ignore", divide="ignore"):
+        out = np.where(den > 1e-24, num / np.maximum(den, 1e-24), 1.0)
+    out = _poison_nonfinite(x, axis, out)
     return float(out) if np.ndim(out) == 0 else out
 
 
@@ -59,12 +82,21 @@ def max_min_ratio(values: np.ndarray, entitlements: np.ndarray,
     """Max/min capacity-scaled share along `axis` — the worst-treated vs
     best-treated workload (1.0 = equal treatment; large = concentrated
     burden). Shares are floored at 1e-4 of the max share, capping the
-    dispersion at 1e4: zero-loss workloads read as "≥10000x", not inf."""
+    dispersion at 1e4: zero-loss workloads read as "≥10000x", not inf.
+
+    Degenerate inputs match `jain_index`: all-zero shares -> 1.0, an
+    empty axis -> 1.0 (instead of numpy's zero-size reduction
+    ValueError), non-finite shares -> NaN."""
     x = np.maximum(np.asarray(values, float), 0.0) \
         / np.asarray(entitlements, float)
+    if x.shape[axis] == 0:
+        out = np.ones(np.sum(x, axis=axis).shape)
+        return float(out) if np.ndim(out) == 0 else out
     top = x.max(axis=axis)
     bot = np.maximum(x.min(axis=axis), 1e-4 * np.maximum(top, 1e-30))
-    out = np.where(top > 1e-24, top / bot, 1.0)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        out = np.where(top > 1e-24, top / bot, 1.0)
+    out = _poison_nonfinite(x, axis, out)
     return float(out) if np.ndim(out) == 0 else out
 
 

@@ -42,6 +42,7 @@ residuals wash out as the window slides.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Sequence
 
@@ -159,6 +160,16 @@ class RollingHorizonSolver:
         (in-place buffers, one XLA call per tick). Prior ticks'
         `plan.state` objects become invalid once the next tick runs, so
         leave False when capturing states from `on_tick` callbacks.
+      guard_recompiles: enforce the one-trace claim at runtime. The
+        first solve of each static configuration — a (steps, shift,
+        reset_mu) tick combo, or a day-scan shape — may compile; every
+        later solve of the same configuration runs inside
+        `repro.analysis.recompile_guard(0)` and raises
+        `RecompileError` if the jit cache missed (a drifting static
+        argument, shape, or dtype silently turning "one trace per
+        tick" into "a compile per tick"). Debug/CI knob; off by
+        default because the guard swaps jax-internal counters in and
+        out around every solve.
 
     CR3 note: the policy object's `rho` is the *configured* price, so
     every window re-clears from it — clearing only ever lowers ρ, and
@@ -178,7 +189,8 @@ class RollingHorizonSolver:
                  mesh=None, donate: bool = False,
                  adaptive_warm: bool = False,
                  warm_steps_min: int | None = None,
-                 revision_ref: float = 0.05):
+                 revision_ref: float = 0.05,
+                 guard_recompiles: bool = False):
         streams = (tuple(stream) if isinstance(stream, (list, tuple))
                    else (stream,))
         # Degenerate R=1 regional problems canonicalize up front so the
@@ -219,6 +231,8 @@ class RollingHorizonSolver:
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.donate = donate
+        self.guard_recompiles = guard_recompiles
+        self._seen_traces: set[tuple] = set()
         self._state: EngineState | None = None
         self._prev_forecast: np.ndarray | None = None
         self._tick = 0
@@ -270,6 +284,17 @@ class RollingHorizonSolver:
             self.last_rho = plan.extras["rho"]
         return plan
 
+    def _traceguard(self, key: tuple):
+        """`recompile_guard(0)` for re-solves of an already-compiled
+        static configuration (`guard_recompiles=True`); the first solve
+        of each `key` — and everything when the knob is off — runs
+        unguarded."""
+        if not self.guard_recompiles or key not in self._seen_traces:
+            self._seen_traces.add(key)
+            return contextlib.nullcontext()
+        from repro.analysis.recompile import recompile_guard
+        return recompile_guard(0, label=f"tick {self._tick} {key[0]}")
+
     def _warm_budget(self, mci_hat: np.ndarray) -> int:
         """Inner steps for this warm tick: `warm_steps` flat, or scaled by
         the forecast revision magnitude under `adaptive_warm` (the hours
@@ -302,8 +327,10 @@ class RollingHorizonSolver:
         # XLA dispatch (donated when self.donate).
         steps = self.cold_steps if warm is None \
             else self._warm_budget(mci_hat)
-        plan = self._solve(p_t, warm, steps, shift=0 if warm is None else 1,
-                           reset_mu=warm is not None)
+        with self._traceguard(("tick", steps, warm is not None)):
+            plan = self._solve(p_t, warm, steps,
+                               shift=0 if warm is None else 1,
+                               reset_mu=warm is not None)
         self._state = plan.state
         self._prev_forecast = mci_hat
         self._tick = tick + 1
@@ -370,9 +397,10 @@ class RollingHorizonSolver:
                            warm=self._state,
                            use_kernel=self.use_kernel, shift=1,
                            reset_mu=self._state is not None)
-        day = solve_day(p_win, self.policy, mci_stack, ctx=ctx,
-                        cold_steps=self.cold_steps,
-                        warm_steps=self.warm_steps)
+        with self._traceguard(("day", n, self._state is not None)):
+            day = solve_day(p_win, self.policy, mci_stack, ctx=ctx,
+                            cold_steps=self.cold_steps,
+                            warm_steps=self.warm_steps)
         self._state = day.last.state
         self._prev_forecast = mci_stack[-1]
         self._tick = t0 + n

@@ -35,8 +35,13 @@ def synthetic_batch(cfg: ArchConfig, shape: ShapeCell, step: int,
     """One host-shard of a global batch (tokens + labels [+ modality])."""
     assert shape.global_batch % dc.host_count == 0
     b = shape.global_batch // dc.host_count
-    rng = np.random.default_rng(
-        (dc.seed * 1_000_003 + step) * 4093 + dc.host_index)
+    # Tuple seeding (SeedSequence entropy spreading): arithmetic mixing
+    # of (seed, step, host) collides whenever the products overlap — the
+    # same stream-collision class PR 5 fixed in the scenario registry.
+    # The token stream differs from the old `(seed*1e6+step)*4093+host`
+    # encoding, which is fine: the pipeline promises determinism per
+    # (seed, step, host), not any particular byte stream.
+    rng = np.random.default_rng((dc.seed, step, dc.host_index))
     S = shape.seq_len
     # Zipf-ish token distribution — realistic softmax pressure.
     toks = rng.zipf(1.3, size=(b, S)).astype(np.int64)

@@ -4,7 +4,7 @@ import pytest
 from hypothesis_compat import given, hnp, settings, st
 
 from repro.core.metrics import (box_stats, capacity_scaled_entropy,
-                                pareto_frontier)
+                                jain_index, max_min_ratio, pareto_frontier)
 
 
 def test_entropy_max_at_proportional():
@@ -40,6 +40,54 @@ def test_pareto_frontier():
     # (2.5, 1.2) dominates (2.0, 1.5); (1,1) kept (lowest pen), (3,4) kept
     # (highest carbon).
     assert 3 in idx and 0 in idx and 2 in idx and 1 not in idx
+
+
+def test_jain_proportional_and_concentrated():
+    E = np.array([10.0, 20.0, 30.0, 40.0])
+    assert jain_index(0.1 * E, E) == pytest.approx(1.0)
+    assert jain_index(np.array([1.0, 0, 0, 0]), np.ones(4)) \
+        == pytest.approx(0.25)
+
+
+def test_max_min_ratio_basic():
+    E = np.ones(4)
+    assert max_min_ratio(np.ones(4), E) == pytest.approx(1.0)
+    assert max_min_ratio(np.array([2.0, 1, 1, 1]), E) == pytest.approx(2.0)
+
+
+def test_fairness_all_zero_is_fair():
+    """No DR anywhere = trivially fair (1.0), never NaN or a raise."""
+    E = np.ones(4)
+    assert jain_index(np.zeros(4), E) == 1.0
+    assert max_min_ratio(np.zeros(4), E) == 1.0
+
+
+def test_fairness_empty_axis():
+    """Zero workloads: 1.0, not numpy's zero-size reduction ValueError
+    (max_min_ratio used to raise) or a 0/0 NaN (jain_index)."""
+    assert jain_index(np.zeros(0), np.zeros(0)) == 1.0
+    assert max_min_ratio(np.zeros(0), np.zeros(0)) == 1.0
+    # (S, 0) ensemble stack -> per-scenario 1.0s of the right shape.
+    stacked_j = jain_index(np.zeros((3, 0)), np.zeros(0))
+    stacked_m = max_min_ratio(np.zeros((3, 0)), np.zeros(0))
+    assert stacked_j.shape == (3,) and np.all(stacked_j == 1.0)
+    assert stacked_m.shape == (3,) and np.all(stacked_m == 1.0)
+
+
+def test_fairness_nan_propagates():
+    """A non-finite share must surface as NaN, not read as 'fair'.
+    (The old `den > eps` guard compared False on NaN and returned 1.0.)"""
+    E = np.ones(4)
+    bad = np.array([1.0, np.nan, 2.0, 3.0])
+    assert np.isnan(jain_index(bad, E))
+    assert np.isnan(max_min_ratio(bad, E))
+    # Only the poisoned row of a stack goes NaN; healthy rows keep
+    # their finite index.
+    V = np.array([[1.0, 2, 3, 4], [1.0, np.nan, 3, 4]])
+    j, m = jain_index(V, E), max_min_ratio(V, E)
+    assert np.isfinite(j[0]) and np.isnan(j[1])
+    assert np.isfinite(m[0]) and np.isnan(m[1])
+    assert np.isnan(jain_index(np.array([1.0, np.inf, 1, 1]), E))
 
 
 def test_box_stats():
