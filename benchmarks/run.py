@@ -47,20 +47,17 @@ def _write_json(bench: str, status: str, rows, elapsed_s: float) -> None:
     import os
     import tempfile
 
-    import jax
-
     from benchmarks.common import VAR
+    from repro.obs.events import host_meta
     VAR.mkdir(exist_ok=True)
     record = {
         "benchmark": bench,
         "status": status,
         "elapsed_s": round(elapsed_s, 3),
         "rows": _parse_rows(rows),
-        "host": {
-            "platform": jax.default_backend(),
-            "n_devices": len(jax.devices()),
-            "jax": jax.__version__,
-        },
+        # the shared obs fingerprint: platform/devices/jax+jaxlib
+        # versions/pallas-interpret flag — diffable across checkouts
+        "host": host_meta(),
         "unix_time": int(time.time()),
     }
     # temp-file + os.replace (the fleetcache pattern): an interrupted run
@@ -100,6 +97,21 @@ def main() -> None:
         ("al_step_micro", perf_micro.al_step_micro),
         ("train_throughput", perf_micro.train_throughput),
     ]
+    # One span event per benchmark lands in var/BENCH_events.jsonl so a
+    # whole harness run renders with `python -m repro.obs.report` (same
+    # reporting side-channel rules as the JSON records: never fail a
+    # benchmark over it).
+    writer = None
+    if not args.no_json:
+        try:
+            from benchmarks.common import VAR
+            from repro.obs.events import EventWriter
+            VAR.mkdir(exist_ok=True)
+            writer = EventWriter(str(VAR / "BENCH_events.jsonl"),
+                                 tags={"harness": "benchmarks.run"})
+        except Exception as e:  # noqa: BLE001 — reporting side-channel
+            print(f"# BENCH_events.jsonl not opened: {e}", file=sys.stderr)
+
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:
@@ -114,14 +126,26 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name},0,FAILED", flush=True)
             rows, status = [], "failed"
+        elapsed = time.perf_counter() - t0
         if not args.no_json:
             # a JSON-record failure (read-only var/, disk full) must not
             # fail a benchmark that ran, nor abort the remaining ones
             try:
-                _write_json(name, status, rows, time.perf_counter() - t0)
+                _write_json(name, status, rows, elapsed)
             except Exception as e:  # noqa: BLE001 — reporting side-channel
                 print(f"# BENCH_{name}.json not written: {e}",
                       file=sys.stderr)
+        if writer is not None:
+            try:
+                from repro.obs.events import SpanEvent
+                writer.write(SpanEvent(name=f"bench.{name}",
+                                       elapsed_s=elapsed,
+                                       meta={"status": status}))
+            except Exception as e:  # noqa: BLE001 — reporting side-channel
+                print(f"# BENCH_events.jsonl append failed: {e}",
+                      file=sys.stderr)
+    if writer is not None:
+        writer.close()
     sys.exit(1 if failures else 0)
 
 

@@ -25,6 +25,15 @@ dispatch instead of 24. CR1/CR2 only; parity with the per-tick loop is
 <0.01 pp realized carbon:
 
   PYTHONPATH=src python examples/streaming_dr.py --scan --ticks 24
+
+Observability: `--telemetry out.jsonl` writes the run's structured
+event ledger — per-tick `TickEvent`s (forecast revision, warm budget,
+latency, committed/realized carbon, recompile counts) plus in-solve
+convergence samples captured inside the jitted AL loop — and prints
+the report command to render it:
+
+  PYTHONPATH=src python examples/streaming_dr.py --telemetry out.jsonl
+  PYTHONPATH=src python -m repro.obs.report out.jsonl
 """
 import argparse
 
@@ -32,6 +41,7 @@ from repro.core.api import POLICY_REGISTRY
 from repro.core.carbon import ForecastStream
 from repro.core.fleet_solver import synthetic_fleet
 from repro.core.streaming import RollingHorizonSolver
+from repro.obs import TelemetryConfig
 
 
 def main() -> None:
@@ -51,6 +61,10 @@ def main() -> None:
                     help="whole run as ONE XLA dispatch: the tick loop "
                          "runs inside lax.scan (run_scanned/solve_day; "
                          "CR1/CR2 only)")
+    ap.add_argument("--telemetry", metavar="PATH", default=None,
+                    help="write the JSONL event ledger (tick events + "
+                         "in-solve convergence telemetry) to PATH; render "
+                         "with `python -m repro.obs.report PATH`")
     args = ap.parse_args()
 
     print("== Carbon Responder: rolling-horizon streaming DR ==")
@@ -69,10 +83,20 @@ def main() -> None:
               f"{-(-fleet.W // n)} workload rows/device, donated ticks")
     print()
 
+    telemetry = None
+    if args.telemetry:
+        # In-solve convergence traces are CR1/CR2 lanes only; other
+        # policies still get the tick ledger.
+        telemetry = (TelemetryConfig(every=10)
+                     if args.policy in ("cr1", "cr2") else None)
+        state = ("on" if telemetry
+                 else f"off — {args.policy.upper()} has no traced lane")
+        print(f"ledger: {args.telemetry} (telemetry {state})")
     solver = RollingHorizonSolver(
         fleet, stream, policy=args.policy,
         cold_steps=args.cold_steps, warm_steps=args.warm_steps,
-        mesh=mesh, donate=args.shard)
+        mesh=mesh, donate=args.shard,
+        events=args.telemetry, telemetry=telemetry)
 
     print("tick  start  steps  curtail[NP]  mci fc->act   CO2 fc/act [kg]")
 
@@ -111,6 +135,11 @@ def main() -> None:
         line = "".join("▼" if x > 0.05 else ("▲" if x < -0.05 else "·")
                        for x in mat[i])
         print(f"  w{i:02d}: {line}")
+
+    if args.telemetry:
+        print(f"\nledger written: {args.telemetry}")
+        print(f"render it: PYTHONPATH=src python -m repro.obs.report "
+              f"{args.telemetry}")
 
 
 if __name__ == "__main__":

@@ -238,6 +238,23 @@ print(f"multi-region day-scan smoke OK (gap {gap:.1e}pp, coupled "
       f"{post.carbon_reduction_pct:.2f}%)")
 PY
 
+  echo "== observability smoke (telemetry ledger -> report) =="
+  # PR 10's contract end-to-end: a telemetry-enabled 4-tick streaming
+  # day (one scanned dispatch) writes the JSONL ledger via
+  # examples/streaming_dr.py --telemetry, and the report CLI parses and
+  # renders it with exit 0. drlint already ran above with the
+  # host-sync-in-jit rule, so the instrumented tree is lint-clean.
+  obs_ledger="$(mktemp -t obs_smoke.XXXXXX.jsonl)"
+  rm -f "$obs_ledger"   # EventWriter writes the header on empty files
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/streaming_dr.py --ticks 4 --cold-steps 120 \
+    --warm-steps 30 --scan --telemetry "$obs_ledger" > /dev/null
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.obs.report "$obs_ledger" | grep "tick ledger" \
+    > /dev/null
+  rm -f "$obs_ledger"
+  echo "observability smoke OK"
+
   echo "== multi-device lane (8 virtual CPU devices) =="
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

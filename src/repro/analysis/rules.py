@@ -22,6 +22,11 @@ full list with history):
   * ``adhoc-partition-spec`` — no string-literal axis names in
                                ``P(...)``; axis names flow from
                                `repro.launch.mesh` / `regional.norm_specs`.
+  * ``host-sync-in-jit``     — no ``block_until_ready`` /
+                               ``jax.device_get`` / ``obs.span`` inside
+                               jit-reachable code; host syncs live
+                               outside the trace (telemetry rides the
+                               solve as stacked aux outputs instead).
 
 Suppression: append ``# drlint: disable=<rule>[,<rule>] -- <rationale>``
 to the flagged line, or put it on its own line directly above. The
@@ -578,4 +583,40 @@ def _check_adhoc_pspec(mod: Module) -> list[Violation]:
                     f"`regional.norm_specs`) so mesh refactors can't "
                     f"silently desync specs"))
                 break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 8: host-sync-in-jit
+# ---------------------------------------------------------------------------
+#: dotted names that force a host<->device synchronization (or, for
+#: obs.span, deliberately block on device work before reading a clock).
+_HOST_SYNC = frozenset({"jax.block_until_ready", "block_until_ready",
+                        "jax.device_get", "device_get",
+                        "obs.span", "span"})
+
+
+@rule("host-sync-in-jit",
+      "no block_until_ready/device_get/obs.span in jit-reachable code")
+def _check_host_sync(mod: Module) -> list[Violation]:
+    out = []
+    for fn in _jit_reachable(mod):
+        for node in _own_statements(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name in _HOST_SYNC or name.endswith(".block_until_ready") \
+                    or name.endswith(".device_get"):
+                base = name.rsplit(".", 1)[-1]
+                out.append(Violation(
+                    "host-sync-in-jit", mod.path, node.lineno,
+                    node.col_offset,
+                    f"`{name}(...)` in jit-reachable `{fn.name}` — a host "
+                    f"sync has no meaning under trace ({base} on a tracer "
+                    f"is a no-op at best, a concretization error at "
+                    f"worst) and pins the dispatch pipeline if the "
+                    f"function also runs eagerly; keep host syncs and "
+                    f"`obs.span` timing OUTSIDE jitted code — in-solve "
+                    f"observability rides the solve as stacked aux "
+                    f"outputs (see `repro.obs.telemetry`)"))
     return out

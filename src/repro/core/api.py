@@ -86,6 +86,8 @@ from repro.core.regional import (CR1_NORM_FILLS, CR2_NORM_FILLS,
                                  region_sum as _rsum,
                                  region_totals as _region_totals)
 from repro.launch.mesh import fleet_axes, fleet_device_count
+# repro.obs is import-light and never imports repro.core (no cycle).
+from repro.obs.telemetry import ConvergenceTrace, TelemetryConfig
 
 Array = jax.Array
 
@@ -142,8 +144,21 @@ class SolveContext:
         so a NaN/inf raises `repro.analysis.SanitizeError` naming the
         first failing check instead of silently corrupting the plan
         and every warm re-solve chained after it. Debug lane: CR1/CR2
-        solo solves only (mesh/donate/coupled_migration raise
-        `NotImplementedError`), <2x wall-clock of the unchecked lane.
+        solo and `solve_day` day-scan lanes (mesh/donate/
+        coupled_migration raise `NotImplementedError`), <2x wall-clock
+        of the unchecked lane.
+      telemetry: in-solve convergence telemetry
+        (`repro.obs.TelemetryConfig`). CR1/CR2 engine lanes sample
+        (objective, grad norm, max violation, |Δx|, μ) every
+        `telemetry.every` inner steps INSIDE the jitted AL loop — the
+        trace rides the same dispatch as stacked aux outputs (no host
+        callbacks) and lands in `result.extras["telemetry"]` as a
+        `repro.obs.ConvergenceTrace` (`solve_day`: one trace per tick).
+        None (default) compiles zero telemetry code: the off path is
+        bitwise the pre-telemetry engine, and the on path's plan is
+        bitwise the off path's. Incompatible with `use_kernel` (the
+        fused Pallas inner loop is opaque — raises); under a sweep it
+        forces the per-policy loop lane.
     """
     mesh: Any = None
     donate: bool = False
@@ -155,6 +170,7 @@ class SolveContext:
     moment_dtype: str = "float32"
     coupled_migration: bool = False
     sanitize: bool = False
+    telemetry: TelemetryConfig | None = None
 
     def resolved_steps(self, policy: "DRPolicy") -> int:
         return self.steps if self.steps is not None else policy.default_steps
@@ -248,6 +264,23 @@ def _require_sanitizable(policy, ctx: SolveContext) -> None:
                 f"{field} while sanitizing")
 
 
+def _tel_every(ctx: SolveContext) -> int:
+    """`EngineConfig.telemetry_every` value for this context (0 = off)."""
+    return 0 if ctx.telemetry is None else int(ctx.telemetry.every)
+
+
+def _require_telemetry_ok(ctx: SolveContext, use_kernel: bool) -> None:
+    """Telemetry needs the generic inner scan — the fused Pallas kernel
+    runs all k steps in one opaque call, so per-step samples cannot be
+    captured. Fail loudly instead of silently dropping the trace."""
+    if ctx.telemetry is not None and use_kernel:
+        raise NotImplementedError(
+            "SolveContext(telemetry=...) is incompatible with the fused "
+            "al_step kernel (use_kernel=True): the kernel's inner loop "
+            "is opaque to per-step telemetry — drop use_kernel (or the "
+            "telemetry) for this solve")
+
+
 def solve(problem: FleetProblem, policy, *,
           ctx: SolveContext | None = None) -> FleetSolveResult:
     """Solve `problem` under `policy` — the single fleet entry point.
@@ -281,7 +314,8 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
     engine's vmap lane as ONE XLA call; with `ctx.mesh` the hyper vmap
     nests inside the W-axis shard_map (sharded Pareto fronts). Everything
     else — mixed families, non-uniform static knobs, donated contexts,
-    CR3 with a mesh — falls back to a loop of `solve()` calls with
+    CR3 with a mesh, `ctx.telemetry` (each solve gets its own
+    convergence trace) — falls back to a loop of `solve()` calls with
     identical per-policy semantics, so `sweep` is always safe to call.
     Sweeps are cold solves unless warm-started:
     `ctx.donate`/`shift`/`reset_mu` force the fallback loop, where a
@@ -309,11 +343,15 @@ def sweep(problem: FleetProblem, policies: Sequence, *,
     stacked = _stacked_warm(ctx.warm, len(pols))
     warm_ok = ctx.warm is None or (stacked and ctx.mesh is None
                                    and fam in (CR1, CR2))
+    # ctx.telemetry forces the loop lane: the vmapped sweep impls have
+    # no telemetry plumbing, and the loop gives each policy its own
+    # per-solve ConvergenceTrace in result.extras anyway.
     vmappable = (all(type(pl) is fam for pl in pols)
                  and hasattr(fam, "_sweep_family")
                  and fam._sweep_uniform(pols)
                  and warm_ok and not ctx.donate
-                 and not ctx.shift and not ctx.reset_mu)
+                 and not ctx.shift and not ctx.reset_mu
+                 and ctx.telemetry is None)
     if not vmappable:
         if ctx.donate and len(pols) > 1:
             ctx = dataclasses.replace(ctx, donate=False)
@@ -650,30 +688,35 @@ def _cr1_pieces(p: FleetProblem, use_kernel: bool, norms=None):
 
 
 def _cr1_cfg(steps: int, moment_dtype: str = "float32",
-             sanitize: bool = False) -> EngineConfig:
+             sanitize: bool = False,
+             telemetry_every: int = 0) -> EngineConfig:
     return EngineConfig(inner_steps=steps, outer_steps=1,
-                        moment_dtype=moment_dtype, sanitize=sanitize)
+                        moment_dtype=moment_dtype, sanitize=sanitize,
+                        telemetry_every=telemetry_every)
 
 
 def _cr1_impl(p: FleetProblem, lam, state0: EngineState, steps: int,
               use_kernel: bool, shift: int = 0, reset_mu: bool = False,
               moment_dtype: str = "float32", sanitize: bool = False,
-              norms=None):
+              telemetry_every: int = 0, norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
     norms = _cr1_norms(p) if norms is None else norms
     objective, project, step_scale = _cr1_pieces(p, use_kernel, norms=norms)
-    cfg = _cr1_cfg(steps, moment_dtype, sanitize)
+    cfg = _cr1_cfg(steps, moment_dtype, sanitize, telemetry_every)
     fused = _al_fused_inner(p, "cr1", cfg, car_norm=norms[1],
                             step_scale=step_scale,
                             coef0=lam * norms[0]) if use_kernel else None
     D, aux = al_minimize(objective, project, state0.x, hyper=lam,
                          step_scale=step_scale, init=state0, cfg=cfg,
                          fused_inner=fused)
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+    out = (D, fleet_penalties(p, D, use_kernel), aux["state"])
+    # Static knob: the off path returns the historical 3-tuple, so every
+    # telemetry-blind caller (sweeps, ensembles, day scans) is untouched.
+    return out + (aux["telemetry"],) if telemetry_every else out
 
 
 _CR1_STATIC = ("steps", "use_kernel", "shift", "reset_mu", "moment_dtype",
-               "sanitize")
+               "sanitize", "telemetry_every")
 _cr1_run = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC)
 _cr1_run_donated = jax.jit(_cr1_impl, static_argnames=_CR1_STATIC,
                            donate_argnums=(2,))
@@ -685,10 +728,11 @@ _cr1_run_checked = checked_jit(_cr1_impl, static_argnames=_CR1_STATIC)
 def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
                       mesh, steps: int, use_kernel: bool, shift: int = 0,
                       reset_mu: bool = False,
-                      moment_dtype: str = "float32"):
+                      moment_dtype: str = "float32",
+                      telemetry_every: int = 0):
     state0 = _enter_tick(state0, shift, reset_mu, CR1_MU0)
     axis = fleet_axes(mesh)
-    cfg = _cr1_cfg(steps, moment_dtype)
+    cfg = _cr1_cfg(steps, moment_dtype, telemetry_every=telemetry_every)
 
     def build(blk):
         pb, lam_b, norms_b = blk
@@ -706,11 +750,12 @@ def _cr1_impl_sharded(p: FleetProblem, lam, norms, state0: EngineState,
         build, (p, lam, norms), mesh=mesh, axis_name=axis,
         data_specs=(_fleet_specs(p, axis), P(), _norm_specs(p, axis)),
         init=state0, cfg=cfg)
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+    out = (D, fleet_penalties(p, D, use_kernel), aux["state"])
+    return out + (aux["telemetry"],) if telemetry_every else out
 
 
 _CR1_STATIC_SH = ("mesh", "steps", "use_kernel", "shift", "reset_mu",
-                  "moment_dtype")
+                  "moment_dtype", "telemetry_every")
 _cr1_run_sharded = jax.jit(_cr1_impl_sharded, static_argnames=_CR1_STATIC_SH)
 _cr1_run_sharded_donated = jax.jit(_cr1_impl_sharded,
                                    static_argnames=_CR1_STATIC_SH,
@@ -787,26 +832,32 @@ class CR1:
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
         use_kernel = resolve_use_kernel(ctx.use_kernel)
+        _require_telemetry_ok(ctx, use_kernel)
         steps = ctx.resolved_steps(self)
+        tel = _tel_every(ctx)
         warm = ctx.warm
         if ctx.mesh is None:
             if warm is None:
                 warm = EngineState.cold(jnp.zeros(p.usage.shape))
             if ctx.sanitize:
-                err, (D, pens, state) = _cr1_run_checked(
+                err, out = _cr1_run_checked(
                     _jit_view(p), self.lam, warm, steps=steps,
                     use_kernel=use_kernel, shift=ctx.shift,
                     reset_mu=ctx.reset_mu, moment_dtype=ctx.moment_dtype,
-                    sanitize=True)
+                    sanitize=True, telemetry_every=tel)
                 err.throw()
             else:
                 run = _cr1_run_donated if ctx.donate else _cr1_run
-                D, pens, state = run(_jit_view(p), self.lam, warm,
-                                     steps=steps, use_kernel=use_kernel,
-                                     shift=ctx.shift, reset_mu=ctx.reset_mu,
-                                     moment_dtype=ctx.moment_dtype)
+                out = run(_jit_view(p), self.lam, warm,
+                          steps=steps, use_kernel=use_kernel,
+                          shift=ctx.shift, reset_mu=ctx.reset_mu,
+                          moment_dtype=ctx.moment_dtype,
+                          telemetry_every=tel)
+            D, pens, state = out[:3]
+            extras = {"telemetry": ConvergenceTrace.from_aux(out[3])} \
+                if tel else None
             return _report(p, np.asarray(D), np.asarray(pens), iters=steps,
-                           state=state)
+                           state=state, extras=extras)
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr1_norms(p)
         if p.is_multiregion:
@@ -814,12 +865,15 @@ class CR1:
         warm = _pad_state(warm, pp.W) if warm is not None \
             else EngineState.cold(jnp.zeros(pp.usage.shape))
         run = _cr1_run_sharded_donated if ctx.donate else _cr1_run_sharded
-        D, pens, state = run(pp, self.lam, norms, warm, mesh=ctx.mesh,
-                             steps=steps, use_kernel=use_kernel,
-                             shift=ctx.shift, reset_mu=ctx.reset_mu,
-                             moment_dtype=ctx.moment_dtype)
+        out = run(pp, self.lam, norms, warm, mesh=ctx.mesh,
+                  steps=steps, use_kernel=use_kernel,
+                  shift=ctx.shift, reset_mu=ctx.reset_mu,
+                  moment_dtype=ctx.moment_dtype, telemetry_every=tel)
+        D, pens, state = out[:3]
+        extras = {"telemetry": ConvergenceTrace.from_aux(out[3])} \
+            if tel else None
         return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
-                       iters=steps, state=state)
+                       iters=steps, state=state, extras=extras)
 
     # -- vmapped sweep lane -------------------------------------------------
     @classmethod
@@ -883,32 +937,35 @@ def _cr2_pieces(p: FleetProblem, refs, use_kernel: bool, norms=None):
 
 
 def _cr2_cfg(steps: int, outer: int, moment_dtype: str = "float32",
-             sanitize: bool = False) -> EngineConfig:
+             sanitize: bool = False,
+             telemetry_every: int = 0) -> EngineConfig:
     return EngineConfig(inner_steps=steps, outer_steps=outer, mu0=CR2_MU0,
                         mu_growth=2.0, moment_dtype=moment_dtype,
-                        sanitize=sanitize)
+                        sanitize=sanitize, telemetry_every=telemetry_every)
 
 
 def _cr2_impl(p: FleetProblem, refs, state0: EngineState, steps: int,
               outer: int, use_kernel: bool, shift: int = 0,
               reset_mu: bool = False, moment_dtype: str = "float32",
-              sanitize: bool = False, norms=None):
+              sanitize: bool = False, telemetry_every: int = 0,
+              norms=None):
     state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
     norms = _cr2_norms(p, refs) if norms is None else norms
     objective, eq, project, step_scale = _cr2_pieces(p, refs, use_kernel,
                                                      norms=norms)
-    cfg = _cr2_cfg(steps, outer, moment_dtype, sanitize)
+    cfg = _cr2_cfg(steps, outer, moment_dtype, sanitize, telemetry_every)
     fused = _al_fused_inner(p, "cr2", cfg, car_norm=norms[0],
                             step_scale=step_scale, scale=norms[1],
                             refs=refs) if use_kernel else None
     D, aux = al_minimize(objective, project, state0.x,
                          eq_residual=eq, step_scale=step_scale, init=state0,
                          cfg=cfg, fused_inner=fused)
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+    out = (D, fleet_penalties(p, D, use_kernel), aux["state"])
+    return out + (aux["telemetry"],) if telemetry_every else out
 
 
 _CR2_STATIC = ("steps", "outer", "use_kernel", "shift", "reset_mu",
-               "moment_dtype", "sanitize")
+               "moment_dtype", "sanitize", "telemetry_every")
 _cr2_run = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC)
 _cr2_run_donated = jax.jit(_cr2_impl, static_argnames=_CR2_STATIC,
                            donate_argnums=(2,))
@@ -919,10 +976,12 @@ _cr2_run_checked = checked_jit(_cr2_impl, static_argnames=_CR2_STATIC)
 def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
                       mesh, steps: int, outer: int, use_kernel: bool,
                       shift: int = 0, reset_mu: bool = False,
-                      moment_dtype: str = "float32"):
+                      moment_dtype: str = "float32",
+                      telemetry_every: int = 0):
     state0 = _enter_tick(state0, shift, reset_mu, CR2_MU0)
     axis = fleet_axes(mesh)
-    cfg = _cr2_cfg(steps, outer, moment_dtype)
+    cfg = _cr2_cfg(steps, outer, moment_dtype,
+                   telemetry_every=telemetry_every)
 
     def build(blk):
         pb, refs_b, norms_b = blk
@@ -940,11 +999,12 @@ def _cr2_impl_sharded(p: FleetProblem, refs, norms, state0: EngineState,
         build, (p, refs, norms), mesh=mesh, axis_name=axis,
         data_specs=(_fleet_specs(p, axis), P(axis), _norm_specs(p, axis)),
         init=state0, cfg=cfg)
-    return D, fleet_penalties(p, D, use_kernel), aux["state"]
+    out = (D, fleet_penalties(p, D, use_kernel), aux["state"])
+    return out + (aux["telemetry"],) if telemetry_every else out
 
 
 _CR2_STATIC_SH = ("mesh", "steps", "outer", "use_kernel", "shift",
-                  "reset_mu", "moment_dtype")
+                  "reset_mu", "moment_dtype", "telemetry_every")
 _cr2_run_sharded = jax.jit(_cr2_impl_sharded, static_argnames=_CR2_STATIC_SH)
 _cr2_run_sharded_donated = jax.jit(_cr2_impl_sharded,
                                    static_argnames=_CR2_STATIC_SH,
@@ -1023,7 +1083,9 @@ class CR2:
     def solve(self, p: FleetProblem,
               ctx: SolveContext = SolveContext()) -> FleetSolveResult:
         use_kernel = resolve_use_kernel(ctx.use_kernel)
+        _require_telemetry_ok(ctx, use_kernel)
         steps = ctx.resolved_steps(self)
+        tel = _tel_every(ctx)
         warm = ctx.warm
         refs = jnp.asarray(cr2_reference_fleet(p, self.cap_frac))
         if ctx.mesh is None:
@@ -1031,21 +1093,26 @@ class CR2:
                 warm = EngineState.cold(jnp.zeros(p.usage.shape), n_eq=p.W,
                                         mu0=CR2_MU0)
             if ctx.sanitize:
-                err, (D, pens, state) = _cr2_run_checked(
+                err, out = _cr2_run_checked(
                     _jit_view(p), refs, warm, steps=steps,
                     outer=self.outer, use_kernel=use_kernel,
                     shift=ctx.shift, reset_mu=ctx.reset_mu,
-                    moment_dtype=ctx.moment_dtype, sanitize=True)
+                    moment_dtype=ctx.moment_dtype, sanitize=True,
+                    telemetry_every=tel)
                 err.throw()
             else:
                 run = _cr2_run_donated if ctx.donate else _cr2_run
-                D, pens, state = run(_jit_view(p), refs, warm, steps=steps,
-                                     outer=self.outer,
-                                     use_kernel=use_kernel,
-                                     shift=ctx.shift, reset_mu=ctx.reset_mu,
-                                     moment_dtype=ctx.moment_dtype)
+                out = run(_jit_view(p), refs, warm, steps=steps,
+                          outer=self.outer, use_kernel=use_kernel,
+                          shift=ctx.shift, reset_mu=ctx.reset_mu,
+                          moment_dtype=ctx.moment_dtype,
+                          telemetry_every=tel)
+            D, pens, state = out[:3]
+            extras = {"telemetry": ConvergenceTrace.from_aux(out[3])} \
+                if tel else None
             return _report(p, np.asarray(D), np.asarray(pens),
-                           iters=steps * self.outer, state=state)
+                           iters=steps * self.outer, state=state,
+                           extras=extras)
         pp, W = pad_fleet(p, fleet_device_count(ctx.mesh))
         norms = _cr2_norms(p, refs)
         if p.is_multiregion:
@@ -1055,13 +1122,17 @@ class CR2:
             else EngineState.cold(jnp.zeros(pp.usage.shape), n_eq=pp.W,
                                   mu0=CR2_MU0)
         run = _cr2_run_sharded_donated if ctx.donate else _cr2_run_sharded
-        D, pens, state = run(pp, refs_p, norms, warm, mesh=ctx.mesh,
-                             steps=steps, outer=self.outer,
-                             use_kernel=use_kernel, shift=ctx.shift,
-                             reset_mu=ctx.reset_mu,
-                             moment_dtype=ctx.moment_dtype)
+        out = run(pp, refs_p, norms, warm, mesh=ctx.mesh,
+                  steps=steps, outer=self.outer,
+                  use_kernel=use_kernel, shift=ctx.shift,
+                  reset_mu=ctx.reset_mu,
+                  moment_dtype=ctx.moment_dtype, telemetry_every=tel)
+        D, pens, state = out[:3]
+        extras = {"telemetry": ConvergenceTrace.from_aux(out[3])} \
+            if tel else None
         return _report(p, np.asarray(D)[:W], np.asarray(pens)[:W],
-                       iters=steps * self.outer, state=state)
+                       iters=steps * self.outer, state=state,
+                       extras=extras)
 
     # -- vmapped sweep lane -------------------------------------------------
     @classmethod
@@ -1581,7 +1652,7 @@ class DayResult:
 
 def _day_impl(p: FleetProblem, xs, state0: EngineState, tick_solve,
               warm_steps: int, first_steps: int, first_shift: int,
-              first_reset: bool):
+              first_reset: bool, telemetry: bool = False):
     """Shared whole-day loop: tick 0 outside the scan (its step budget /
     shift / mu-reset differ), then `lax.scan` over the remaining forecast
     rows, each iteration fusing window-roll + `EngineState.shifted` +
@@ -1589,7 +1660,15 @@ def _day_impl(p: FleetProblem, xs, state0: EngineState, tick_solve,
     axis (per-tick forecasts, plus per-tick norms on the sharded path);
     `tick_solve(p_t, x_t, st, steps, shift, reset_mu) -> (D, pens,
     state)` is a policy impl (pure/traceable) that installs its slice
-    `x_t` into the windowed problem."""
+    `x_t` into the windowed problem.
+
+    With `telemetry` (static), `tick_solve` returns a 4th element — the
+    engine's per-solve telemetry dict — and the warm ticks' traces ride
+    the scan ys (stacked on a leading (n-1) tick axis), so the whole
+    instrumented day is STILL one dispatch. Tick 0's trace stays
+    separate: its step budget (and hence sample count) differs. Returns
+    `(..., tel0, tel_warm)` where `tel_warm` is None for a 1-tick day.
+    """
     usage = jnp.asarray(p.usage)
     jobs = jnp.asarray(p.jobs)
     upper = None if p.upper is None else jnp.asarray(p.upper)
@@ -1598,51 +1677,65 @@ def _day_impl(p: FleetProblem, xs, state0: EngineState, tick_solve,
     def roll(a):
         return None if a is None else jnp.roll(a, -1, axis=1)
 
-    D, pens, st = tick_solve(p, tmap(lambda a: a[0], xs), state0,
-                             first_steps, first_shift, first_reset)
+    out0 = tick_solve(p, tmap(lambda a: a[0], xs), state0,
+                      first_steps, first_shift, first_reset)
+    D, pens, st = out0[:3]
+    tel0 = out0[3] if telemetry else None
 
     def body(carry, x_t):
         st, usage, jobs, upper, _, _ = carry
         usage, jobs, upper = roll(usage), roll(jobs), roll(upper)
         p_t = dataclasses.replace(p, usage=usage, jobs=jobs, upper=upper)
-        D, pens, st = tick_solve(p_t, x_t, st, warm_steps, 1, True)
-        return (st, usage, jobs, upper, D, pens), D[:, 0]
+        out = tick_solve(p_t, x_t, st, warm_steps, 1, True)
+        D, pens, st = out[:3]
+        ys = (D[:, 0], out[3]) if telemetry else D[:, 0]
+        return (st, usage, jobs, upper, D, pens), ys
 
     carry = (st, usage, jobs, upper, D, pens)
     n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    tel_w = None
     if n > 1:
-        carry, committed_w = jax.lax.scan(body, carry,
-                                          tmap(lambda a: a[1:], xs))
+        carry, ys = jax.lax.scan(body, carry, tmap(lambda a: a[1:], xs))
+        committed_w, tel_w = ys if telemetry else (ys, None)
         committed = jnp.concatenate([D[:, 0][None], committed_w], axis=0)
     else:
         committed = D[:, 0][None]
     st, _, _, _, D_last, pens_last = carry
-    return committed, D_last, pens_last, st
+    out = (committed, D_last, pens_last, st)
+    return out + (tel0, tel_w) if telemetry else out
 
 
 def _day_cr1_impl(p: FleetProblem, lam, mci_stack, state0: EngineState,
                   warm_steps: int, first_steps: int, first_shift: int,
-                  first_reset: bool, use_kernel: bool, moment_dtype: str):
+                  first_reset: bool, use_kernel: bool, moment_dtype: str,
+                  sanitize: bool = False, telemetry_every: int = 0):
     def tick_solve(p_t, mci_t, st, steps, shift, reset_mu):
         p_t = dataclasses.replace(p_t, mci=mci_t)
         return _cr1_impl(p_t, lam, st, steps, use_kernel, shift, reset_mu,
-                         moment_dtype)
+                         moment_dtype, sanitize, telemetry_every)
 
     return _day_impl(p, mci_stack, state0, tick_solve, warm_steps,
-                     first_steps, first_shift, first_reset)
+                     first_steps, first_shift, first_reset,
+                     telemetry=telemetry_every > 0)
 
 
 _DAY_CR1_STATIC = ("warm_steps", "first_steps", "first_shift",
-                   "first_reset", "use_kernel", "moment_dtype")
+                   "first_reset", "use_kernel", "moment_dtype",
+                   "sanitize", "telemetry_every")
 _day_cr1 = jax.jit(_day_cr1_impl, static_argnames=_DAY_CR1_STATIC)
 _day_cr1_donated = jax.jit(_day_cr1_impl, static_argnames=_DAY_CR1_STATIC,
                            donate_argnums=(3,))
+# The day scan's sanitizer twin: checkify-functionalized EngineConfig
+# guards on every tick solve of the fused day (see `_cr1_run_checked`).
+_day_cr1_checked = checked_jit(_day_cr1_impl,
+                               static_argnames=_DAY_CR1_STATIC)
 
 
 def _day_cr2_impl(p: FleetProblem, cap_frac, mci_stack,
                   state0: EngineState, warm_steps: int, first_steps: int,
                   first_shift: int, first_reset: bool, outer: int,
-                  use_kernel: bool, moment_dtype: str):
+                  use_kernel: bool, moment_dtype: str,
+                  sanitize: bool = False, telemetry_every: int = 0):
     E = jnp.asarray(p.entitlement)[:, None]
 
     def tick_solve(p_t, mci_t, st, steps, shift, reset_mu):
@@ -1652,17 +1745,22 @@ def _day_cr2_impl(p: FleetProblem, cap_frac, mci_stack,
         d_cap = jnp.maximum(jnp.asarray(p_t.usage) - cap_frac * E, 0.0)
         refs = fleet_penalties(p_t, d_cap, use_kernel)
         return _cr2_impl(p_t, refs, st, steps, outer, use_kernel, shift,
-                         reset_mu, moment_dtype)
+                         reset_mu, moment_dtype, sanitize, telemetry_every)
 
     return _day_impl(p, mci_stack, state0, tick_solve, warm_steps,
-                     first_steps, first_shift, first_reset)
+                     first_steps, first_shift, first_reset,
+                     telemetry=telemetry_every > 0)
 
 
 _DAY_CR2_STATIC = ("warm_steps", "first_steps", "first_shift",
-                   "first_reset", "outer", "use_kernel", "moment_dtype")
+                   "first_reset", "outer", "use_kernel", "moment_dtype",
+                   "sanitize", "telemetry_every")
 _day_cr2 = jax.jit(_day_cr2_impl, static_argnames=_DAY_CR2_STATIC)
 _day_cr2_donated = jax.jit(_day_cr2_impl, static_argnames=_DAY_CR2_STATIC,
                            donate_argnums=(3,))
+# CR2 day-scan sanitizer twin (see `_day_cr1_checked`).
+_day_cr2_checked = checked_jit(_day_cr2_impl,
+                               static_argnames=_DAY_CR2_STATIC)
 
 
 def _day_cr1_impl_sharded(p: FleetProblem, lam, mci_stack, norms_stack,
@@ -1818,6 +1916,14 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     (R, T) forecast stacks. Migration is not applied per tick — run
     the committed plan through `solve()` for migration credit.
 
+    Debug/observability lanes (solo path only): `ctx.sanitize` routes
+    the whole day through a checkify twin — a NaN/inf in ANY tick's
+    gradient/iterate/multipliers raises `SanitizeError` naming the
+    first failing check. `ctx.telemetry` returns one
+    `repro.obs.ConvergenceTrace` per tick in
+    `result.last.extras["telemetry"]` (captured inside the same single
+    dispatch; incompatible with `use_kernel`/`mesh`).
+
     Returns `DayResult`; `result.last.state` warm-starts the next day
     (pass it via `ctx.warm` — the first tick then runs `warm_steps` with
     the usual shift/mu-reset instead of a cold solve).
@@ -1825,10 +1931,10 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
     ctx = ctx or SolveContext()
     policy = resolve_policy(policy)
     if ctx.sanitize:
-        raise NotImplementedError(
-            "SolveContext(sanitize=True) is a solo-solve debug lane — the "
-            "day scan has no checkify twin; sanitize per-tick solves "
-            "through solve()/RollingHorizonSolver.step()")
+        # Day scans have checkify twins (`_day_cr1_checked` /
+        # `_day_cr2_checked`) on the solo lane; the same CR1/CR2 +
+        # no-mesh/donate restrictions as solve() apply.
+        _require_sanitizable(policy, ctx)
     if not isinstance(problem, FleetProblem):
         raise TypeError(
             f"solve_day() takes a FleetProblem; got "
@@ -1845,6 +1951,13 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
             f"tick); got shape {mci_stack.shape}")
     n = mci_stack.shape[0]
     use_kernel = resolve_use_kernel(ctx.use_kernel)
+    _require_telemetry_ok(ctx, use_kernel)
+    tel = _tel_every(ctx)
+    if tel and ctx.mesh is not None:
+        raise NotImplementedError(
+            "SolveContext(telemetry=...) on solve_day is a solo-lane "
+            "feature for now — the sharded day scan has no telemetry "
+            "plumbing; drop the mesh (or the telemetry) for this day")
     if cold_steps is None:
         cold_steps = ctx.resolved_steps(policy)
     if warm_steps is None:
@@ -1895,24 +2008,52 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
         if isinstance(policy, CR1):
             state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
                 jnp.zeros(problem.usage.shape))
-            run = _day_cr1_donated if ctx.donate else _day_cr1
-            committed, D, pens, state = run(
-                pj, policy.lam, stack, state0, warm_steps=warm_steps,
-                first_steps=first_steps, first_shift=first_shift,
-                first_reset=first_reset, use_kernel=use_kernel,
-                moment_dtype=ctx.moment_dtype)
+            if ctx.sanitize:
+                err, out = _day_cr1_checked(
+                    pj, policy.lam, stack, state0, warm_steps=warm_steps,
+                    first_steps=first_steps, first_shift=first_shift,
+                    first_reset=first_reset, use_kernel=use_kernel,
+                    moment_dtype=ctx.moment_dtype, sanitize=True,
+                    telemetry_every=tel)
+                err.throw()
+            else:
+                run = _day_cr1_donated if ctx.donate else _day_cr1
+                out = run(
+                    pj, policy.lam, stack, state0, warm_steps=warm_steps,
+                    first_steps=first_steps, first_shift=first_shift,
+                    first_reset=first_reset, use_kernel=use_kernel,
+                    moment_dtype=ctx.moment_dtype, telemetry_every=tel)
             mult = 1
         else:
             state0 = ctx.warm if ctx.warm is not None else EngineState.cold(
                 jnp.zeros(problem.usage.shape), n_eq=problem.W,
                 mu0=CR2_MU0)
-            run = _day_cr2_donated if ctx.donate else _day_cr2
-            committed, D, pens, state = run(
-                pj, policy.cap_frac, stack, state0, warm_steps=warm_steps,
-                first_steps=first_steps, first_shift=first_shift,
-                first_reset=first_reset, outer=policy.outer,
-                use_kernel=use_kernel, moment_dtype=ctx.moment_dtype)
+            if ctx.sanitize:
+                err, out = _day_cr2_checked(
+                    pj, policy.cap_frac, stack, state0,
+                    warm_steps=warm_steps, first_steps=first_steps,
+                    first_shift=first_shift, first_reset=first_reset,
+                    outer=policy.outer, use_kernel=use_kernel,
+                    moment_dtype=ctx.moment_dtype, sanitize=True,
+                    telemetry_every=tel)
+                err.throw()
+            else:
+                run = _day_cr2_donated if ctx.donate else _day_cr2
+                out = run(
+                    pj, policy.cap_frac, stack, state0,
+                    warm_steps=warm_steps, first_steps=first_steps,
+                    first_shift=first_shift, first_reset=first_reset,
+                    outer=policy.outer, use_kernel=use_kernel,
+                    moment_dtype=ctx.moment_dtype, telemetry_every=tel)
             mult = policy.outer
+        committed, D, pens, state = out[:4]
+        if tel:
+            # One ConvergenceTrace per tick: tick 0's trace is separate
+            # (different step budget → different sample count), warm
+            # ticks come back stacked on a leading (n-1) axis.
+            traces = (ConvergenceTrace.from_aux(out[4]),)
+            if out[5] is not None:
+                traces += ConvergenceTrace.split(out[5])
         committed = np.asarray(committed)
         D, pens = np.asarray(D), np.asarray(pens)
     iters = (first_steps * mult,) + (warm_steps * mult,) * (n - 1)
@@ -1924,7 +2065,8 @@ def solve_day(problem: FleetProblem, policy, mci_stack, *,
         upper=None if problem.upper is None
         else np.roll(np.asarray(problem.upper), -(n - 1), axis=1))
     last = _report(p_last, np.asarray(D), np.asarray(pens),
-                   iters=iters[-1], state=state)
+                   iters=iters[-1], state=state,
+                   extras={"telemetry": traces} if tel else None)
     return DayResult(committed=np.asarray(committed), last=last,
                      inner_steps=iters)
 

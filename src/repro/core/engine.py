@@ -98,6 +98,14 @@ class EngineConfig:
     # `SolveContext(sanitize=True)` lanes in `core.api` own that
     # pairing. False compiles zero check code.
     sanitize: bool = False
+    # Convergence telemetry: sample (objective, grad norm, constraint
+    # violation, step size, mu) every `telemetry_every` inner steps and
+    # return the fixed-size trace as `aux["telemetry"]` — captured as
+    # stacked scan outputs inside the SAME dispatch (no host callbacks).
+    # 0 (default) compiles zero telemetry code: the inner scan body is
+    # the historical one, byte for byte. Incompatible with
+    # `fused_inner` (the Pallas kernel's k-step loop is opaque).
+    telemetry_every: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,9 +196,29 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
     VMEM-resident. Signature: ``fused_inner(x, lam_eq, lam_in, mu) -> x``;
     it must run exactly `cfg.inner_steps` projected-Adam steps from fresh
     (zero) moments. The multiplier updates between rounds stay generic.
+
+    Telemetry (`cfg.telemetry_every = k > 0`): the inner scan emits per-
+    step scalars (AL objective, squared gradient norm, max constraint
+    violation at the post-step iterate, mean |Δx|) as stacked scan
+    outputs; after the outer scan they are downsampled to every k-th
+    step and returned as `aux["telemetry"]` — a dict of `(n_samples,)`
+    arrays (`step`, `objective`, `grad_sq`, `violation`, `dx`, `mu`)
+    plus the scalar `step_scale` mean. Everything stays inside the one
+    jitted dispatch; the gradient comes from `jax.value_and_grad` of the
+    same Lagrangian, so the iterate trajectory is bitwise the
+    telemetry-off one. `grad_sq` (not the norm) is emitted so the
+    sharded lane can `psum` partial sums before the host takes the
+    square root.
     """
     n_eq = _residual_dim(eq_residual, x0, hyper)
     n_in = _residual_dim(ineq_residual, x0, hyper)
+    tel_every = cfg.telemetry_every
+    if tel_every and fused_inner is not None:
+        raise ValueError(
+            "EngineConfig.telemetry_every is incompatible with "
+            "fused_inner: the fused Pallas kernel runs all inner steps "
+            "in one opaque call, so per-step telemetry cannot be "
+            "captured — drop the kernel or the telemetry for this solve")
 
     def eq_vec(x: Array) -> Array:
         return jnp.atleast_1d(eq_residual(x, hyper)).ravel()
@@ -211,6 +239,16 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
         return val
 
     grad_fn = jax.grad(lagrangian)
+    value_and_grad_fn = jax.value_and_grad(lagrangian)
+
+    def max_violation(x: Array) -> Array:
+        """Worst constraint residual: max(|h|, relu(−g)); 0 when none."""
+        v = jnp.asarray(0.0, x.dtype)
+        if n_eq:
+            v = jnp.maximum(v, jnp.max(jnp.abs(eq_vec(x))))
+        if n_in:
+            v = jnp.maximum(v, jnp.max(jnp.maximum(-ineq_vec(x), 0.0)))
+        return v
 
     mdt = jnp.dtype(cfg.moment_dtype)
 
@@ -234,15 +272,42 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
                 check_all_finite("al-inner", grad=g, x=x)
             return (x, m.astype(mdt), v.astype(mdt), t), None
 
+        def inner_tel(c, _):
+            # Telemetry twin of `inner`: identical update (the gradient
+            # is value_and_grad's grad output — jax.grad IS that grad,
+            # so the iterate trajectory is bitwise unchanged) plus
+            # stacked per-step scalars as scan ys.
+            x0_, m, v, t = c
+            L, g = value_and_grad_fn(x0_, lam_eq, lam_in, mu)
+            if grad_transform is not None:
+                g = grad_transform(g)
+            t = t + 1
+            m = cfg.beta1 * m.astype(x0_.dtype) + (1.0 - cfg.beta1) * g
+            v = cfg.beta2 * v.astype(x0_.dtype) + (1.0 - cfg.beta2) * g * g
+            mhat = m / (1.0 - cfg.beta1 ** t)
+            vhat = v / (1.0 - cfg.beta2 ** t)
+            x = project(x0_ - cfg.lr * step_scale * mhat
+                        / (jnp.sqrt(vhat) + cfg.eps))
+            if cfg.sanitize:
+                from repro.analysis.sanitize import check_all_finite
+                check_all_finite("al-inner", grad=g, x=x)
+            tel = (L, jnp.sum(g * g), max_violation(x),
+                   jnp.mean(jnp.abs(x - x0_)))
+            return (x, m.astype(mdt), v.astype(mdt), t), tel
+
+        tel = None
         if fused_inner is not None:
             x = fused_inner(x, lam_eq, lam_in, mu)
             if cfg.sanitize:
                 from repro.analysis.sanitize import check_all_finite
                 check_all_finite("al-fused-inner", x=x)
         else:
-            (x, _, _, _), _ = jax.lax.scan(
-                inner, (x, jnp.zeros(x.shape, mdt), jnp.zeros(x.shape, mdt),
-                        0), None, length=cfg.inner_steps)
+            (x, _, _, _), tel = jax.lax.scan(
+                inner_tel if tel_every else inner,
+                (x, jnp.zeros(x.shape, mdt), jnp.zeros(x.shape, mdt),
+                 0), None, length=cfg.inner_steps)
+        if tel_every:
+            tel = (*tel, jnp.broadcast_to(mu, (cfg.inner_steps,)))
         if n_eq:
             lam_eq = lam_eq + mu * eq_vec(x)
         if n_in:
@@ -251,7 +316,8 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
             from repro.analysis.sanitize import check_all_finite
             check_all_finite("al-multipliers", lam_eq=lam_eq, lam_in=lam_in)
         return (x, lam_eq, lam_in,
-                jnp.minimum(mu * cfg.mu_growth, cfg.mu_max)), None
+                jnp.minimum(mu * cfg.mu_growth, cfg.mu_max)), \
+            (tel if tel_every else None)
 
     if init is None:
         init = EngineState.cold(x0, n_eq, n_in, cfg.mu0)
@@ -262,11 +328,23 @@ def al_minimize(objective: Objective, project: Callable[[Array], Array],
         from repro.analysis.sanitize import check_all_finite
         check_all_finite("al-init", x0=carry0[0], lam_eq=carry0[1],
                          lam_in=carry0[2], mu=carry0[3])
-    (x, lam_eq, lam_in, mu), _ = jax.lax.scan(
+    (x, lam_eq, lam_in, mu), tel_ys = jax.lax.scan(
         outer_body, carry0, None, length=cfg.outer_steps)
-    return x, {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu,
-               "state": EngineState(x=x, lam_eq=lam_eq, lam_in=lam_in,
-                                    mu=mu)}
+    aux = {"lam_eq": lam_eq, "lam_in": lam_in, "mu": mu,
+           "state": EngineState(x=x, lam_eq=lam_eq, lam_in=lam_in, mu=mu)}
+    if tel_every:
+        # Flatten (outer, inner) → (outer*inner,) then keep every
+        # tel_every-th sample — a fixed-size trace decided at trace time.
+        L, g2, viol, dx, mus = (y.reshape(-1) for y in tel_ys)
+        sl = slice(tel_every - 1, None, tel_every)
+        total = cfg.outer_steps * cfg.inner_steps
+        aux["telemetry"] = {
+            "step": jnp.arange(1, total + 1, dtype=jnp.int32)[sl],
+            "objective": L[sl], "grad_sq": g2[sl],
+            "violation": viol[sl], "dx": dx[sl], "mu": mus[sl],
+            "step_scale": jnp.asarray(step_scale, x.dtype).mean(),
+        }
+    return x, aux
 
 
 def al_minimize_batched(objective: Objective,
@@ -297,6 +375,22 @@ def al_minimize_batched(objective: Objective,
                                **kwargs)
         xs, aux = jax.vmap(one_warm)(hypers, init)
     return (xs, aux) if return_aux else xs
+
+
+# How each telemetry leaf combines across shards of the workload axis.
+# Objective and squared grad norm are partial sums (row-separable
+# problems), worst violation is a max, mean |Δx| and step_scale average
+# (exact for equal block sizes — pad_fleet guarantees them). `step` and
+# `mu` are device-identical and pass through.
+_TEL_REDUCE = {"objective": jax.lax.psum, "grad_sq": jax.lax.psum,
+               "violation": jax.lax.pmax, "dx": jax.lax.pmean,
+               "step_scale": jax.lax.pmean}
+
+
+def _telemetry_allreduce(tel: dict, axis_name) -> dict:
+    """Merge per-shard telemetry into global traces (inside shard_map)."""
+    return {k: (_TEL_REDUCE[k](v, axis_name) if k in _TEL_REDUCE else v)
+            for k, v in tel.items()}
 
 
 def al_minimize_sharded(build_pieces: Callable[[Any], dict], data: Any, *,
@@ -350,13 +444,26 @@ def al_minimize_sharded(build_pieces: Callable[[Any], dict], data: Any, *,
                               lam_in=P(axis_name), mu=P())
     aux_specs = {"lam_eq": P(axis_name), "lam_in": P(axis_name), "mu": P(),
                  "state": state_specs}
+    if cfg.telemetry_every:
+        # All-reduced inside `body` to device-identical traces → P().
+        aux_specs["telemetry"] = {
+            k: P() for k in ("step", "objective", "grad_sq", "violation",
+                             "dx", "mu", "step_scale")}
 
     def body(data_blk, state_blk):
         pieces = dict(build_pieces(data_blk))
         objective = pieces.pop("objective")
         project = pieces.pop("project")
-        return al_minimize(objective, project, state_blk.x,
-                           init=state_blk, cfg=cfg, **pieces)
+        x, aux = al_minimize(objective, project, state_blk.x,
+                             init=state_blk, cfg=cfg, **pieces)
+        if cfg.telemetry_every:
+            # Post-hoc collectives on aux outputs only — never inside the
+            # differentiated objective (see module docstring): each
+            # device's trace reflects its partial Lagrangian, so sum /
+            # max / mean them into the global curves here.
+            aux["telemetry"] = _telemetry_allreduce(aux["telemetry"],
+                                                    axis_name)
+        return x, aux
 
     # check_rep=False: the body may invoke a pallas_call (the fused
     # al_step kernel), which has no shard_map replication rule; all

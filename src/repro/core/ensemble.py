@@ -481,19 +481,22 @@ def evaluate_ensemble(problem: FleetProblem, policy, scenarios, *,
     CR1/CR2 run all S scenarios as ONE vmapped XLA call (nested inside
     the W-axis shard_map when `ctx.mesh` is set); other policies and
     warm/donated contexts fall back to a sequential loop of `api.solve`
-    with identical semantics. `batched` forces the lane (True raises if
-    the policy has no batched backend; False forces the loop — the
+    with identical semantics — `ctx.telemetry` also takes the loop, so
+    each scenario's `ConvergenceTrace` rides its own entry of
+    `result.extras`. `batched` forces the lane (True raises if the
+    policy has no batched backend; False forces the loop — the
     parity-test hook)."""
     ctx = ctx or SolveContext()
     policy = resolve_policy(policy)
     stack = resolve_scenarios(scenarios, problem)
     can_batch = (_batched_capable(policy) and ctx.warm is None
-                 and not ctx.donate and not ctx.shift and not ctx.reset_mu)
+                 and not ctx.donate and not ctx.shift and not ctx.reset_mu
+                 and ctx.telemetry is None)
     if batched is True and not can_batch:
         raise ValueError(
             f"no batched ensemble lane for policy "
             f"{getattr(policy, 'name', policy)!r} under this context "
-            "(CR1/CR2, no warm/donate/shift/reset_mu)")
+            "(CR1/CR2, no warm/donate/shift/reset_mu/telemetry)")
     if batched is False or not can_batch:
         probs = list(stack.problems(problem))
         results = [solve(ps, policy,

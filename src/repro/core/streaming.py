@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -55,6 +56,19 @@ from repro.core.engine import EngineState
 from repro.core.fleet_solver import (FleetProblem, FleetSolveResult,
                                      _single_region_view)
 from repro.core.regional import region_totals
+from repro.obs.events import EventWriter, TelemetryEvent, TickEvent
+from repro.obs.telemetry import TelemetryConfig
+
+
+def _rel_revision(prev: np.ndarray | None, cur: np.ndarray) -> float:
+    """Relative forecast-revision magnitude between consecutive horizons:
+    `‖cur[:-1] − prev[1:]‖₂ / ‖prev[1:]‖₂` over the re-forecast hours
+    both horizons cover (0.0 for the first horizon seen)."""
+    if prev is None:
+        return 0.0
+    tail = prev[..., 1:]
+    return float(np.linalg.norm((cur[..., :-1] - tail).ravel())
+                 / max(np.linalg.norm(tail.ravel()), 1e-12))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +184,20 @@ class RollingHorizonSolver:
         tick" into "a compile per tick"). Debug/CI knob; off by
         default because the guard swaps jax-internal counters in and
         out around every solve.
+      events: JSONL tick ledger — a path or an open
+        `repro.obs.EventWriter`. Every `step()`/`run_scanned()` tick
+        appends a typed `TickEvent` (forecast-revision magnitude, warm
+        budget spent, solve latency, per-region committed/realized
+        carbon, migration credit, recompile + dispatch counts), and any
+        in-solve convergence samples append as `TelemetryEvent`s. All
+        emission is host-side AFTER the solve returns, so the
+        one-dispatch contracts (warm tick, scanned day) are untouched;
+        render with `python -m repro.obs.report <path>`.
+      telemetry: `repro.obs.TelemetryConfig` — capture in-solve
+        convergence traces inside each tick's jitted solve (CR1/CR2,
+        no fused kernel; see `SolveContext.telemetry`). Pairs with
+        `events` to land the samples in the ledger; without `events`
+        the trace is still on `tick.plan.extras["telemetry"]`.
 
     CR3 note: the policy object's `rho` is the *configured* price, so
     every window re-clears from it — clearing only ever lowers ρ, and
@@ -190,7 +218,9 @@ class RollingHorizonSolver:
                  adaptive_warm: bool = False,
                  warm_steps_min: int | None = None,
                  revision_ref: float = 0.05,
-                 guard_recompiles: bool = False):
+                 guard_recompiles: bool = False,
+                 events: EventWriter | str | None = None,
+                 telemetry: TelemetryConfig | None = None):
         streams = (tuple(stream) if isinstance(stream, (list, tuple))
                    else (stream,))
         # Degenerate R=1 regional problems canonicalize up front so the
@@ -232,6 +262,14 @@ class RollingHorizonSolver:
         self.mesh = mesh
         self.donate = donate
         self.guard_recompiles = guard_recompiles
+        if events is None or isinstance(events, EventWriter):
+            self.events = events
+        else:
+            self.events = EventWriter(
+                events, tags={"policy": self.policy.name,
+                              "cold_steps": cold_steps,
+                              "warm_steps": warm_steps})
+        self.telemetry = telemetry
         self._seen_traces: set[tuple] = set()
         self._state: EngineState | None = None
         self._prev_forecast: np.ndarray | None = None
@@ -278,7 +316,8 @@ class RollingHorizonSolver:
                steps: int, shift: int, reset_mu: bool) -> FleetSolveResult:
         ctx = SolveContext(mesh=self.mesh, donate=self.donate, shift=shift,
                            reset_mu=reset_mu, warm=warm,
-                           use_kernel=self.use_kernel, steps=steps)
+                           use_kernel=self.use_kernel, steps=steps,
+                           telemetry=self.telemetry)
         plan = solve(p, self.policy, ctx=ctx)
         if "rho" in plan.extras:
             self.last_rho = plan.extras["rho"]
@@ -295,16 +334,13 @@ class RollingHorizonSolver:
         from repro.analysis.recompile import recompile_guard
         return recompile_guard(0, label=f"tick {self._tick} {key[0]}")
 
-    def _warm_budget(self, mci_hat: np.ndarray) -> int:
+    def _warm_budget(self, rel: float) -> int:
         """Inner steps for this warm tick: `warm_steps` flat, or scaled by
-        the forecast revision magnitude under `adaptive_warm` (the hours
-        both horizons forecast — hour k of this tick vs hour k+1 of the
-        previous one)."""
+        the forecast revision magnitude `rel` under `adaptive_warm` (the
+        hours both horizons forecast — hour k of this tick vs hour k+1
+        of the previous one; see `_rel_revision`)."""
         if not self.adaptive_warm or self._prev_forecast is None:
             return self.warm_steps
-        prev = self._prev_forecast[..., 1:]
-        rel = float(np.linalg.norm((mci_hat[..., :-1] - prev).ravel())
-                    / max(np.linalg.norm(prev.ravel()), 1e-12))
         frac = min(1.0, rel / self.revision_ref)
         # Quantize to 4 budget levels: the step count is a static jit
         # argument, so a continuum of budgets would compile a fresh trace
@@ -313,24 +349,76 @@ class RollingHorizonSolver:
         return int(round(self.warm_steps_min
                          + (self.warm_steps - self.warm_steps_min) * frac))
 
+    # -- tick ledger --------------------------------------------------------
+    def _measure(self):
+        """Compile counters (pure measurement) while the ledger is on —
+        attributes jit traces to ticks. Nestable inside `_traceguard`'s
+        failing-mode guard (hook swap is save/restore)."""
+        if self.events is None:
+            return contextlib.nullcontext(None)
+        from repro.analysis.recompile import recompile_guard
+        return recompile_guard(None, label="tick ledger")
+
+    def _emit_tick(self, out: TickResult, *, revision: float,
+                   latency_s: float, recompiles: int, dispatches: int,
+                   cold: bool, objective_proxy: float | None) -> None:
+        """Append one `TickEvent` (host-side, after the solve returned —
+        never inside the dispatch)."""
+        if self.events is None:
+            return
+        if out.committed_by_region is not None:
+            per = np.asarray(out.committed_by_region, float)
+            committed = (per * np.asarray(out.forecast_mci,
+                                          float)).tolist()
+            realized = (per * np.asarray(out.realized_mci, float)).tolist()
+        else:
+            tot = float(out.committed.sum())
+            committed = [tot * float(out.forecast_mci)]
+            realized = [tot * float(out.realized_mci)]
+        plan = out.plan
+        credit = 0.0
+        if plan is not None and "migration" in plan.extras:
+            credit = float(plan.extras["migration"].net_saved)
+        self.events.write(TickEvent(
+            tick=out.tick, revision=float(revision),
+            warm_steps=int(out.inner_steps), cold=bool(cold),
+            objective_proxy=objective_proxy, latency_s=float(latency_s),
+            committed_carbon=committed, realized_carbon=realized,
+            migration_credit=credit, recompiles=int(recompiles),
+            dispatches=int(dispatches)))
+        if plan is not None and self.telemetry is not None:
+            trace = plan.extras.get("telemetry")
+            if trace is not None and not isinstance(trace, tuple):
+                self._emit_trace(out.tick, trace)
+
+    def _emit_trace(self, tick: int, trace) -> None:
+        """Append one solve's convergence samples as `TelemetryEvent`s."""
+        if self.events is None or trace is None:
+            return
+        for s in trace.samples():
+            self.events.write(TelemetryEvent(tick=tick, **s))
+
     def step(self) -> TickResult:
         """Ingest the next forecast revision, re-solve, commit hour 0."""
         tick = self._tick
         mci_hat = self._forecast(tick)
         p_t = self._window_problem(tick, mci_hat)
         warm = self._state
+        rev = _rel_revision(self._prev_forecast, mci_hat)
         # Warm ticks shift the plan one hour and restart the mu schedule at
         # the policy's mu0 — without the reset, mu compounds by
         # mu_growth^outer per tick and CR2/CR3's walls turn stiff within a
         # handful of ticks (multipliers still carry the constraint prices).
         # Both happen *inside* the solve's jitted call, so a tick is one
         # XLA dispatch (donated when self.donate).
-        steps = self.cold_steps if warm is None \
-            else self._warm_budget(mci_hat)
-        with self._traceguard(("tick", steps, warm is not None)):
+        steps = self.cold_steps if warm is None else self._warm_budget(rev)
+        t0 = time.perf_counter()
+        with self._traceguard(("tick", steps, warm is not None)), \
+                self._measure() as stats:
             plan = self._solve(p_t, warm, steps,
                                shift=0 if warm is None else 1,
                                reset_mu=warm is not None)
+        latency = time.perf_counter() - t0
         self._state = plan.state
         self._prev_forecast = mci_hat
         self._tick = tick + 1
@@ -342,6 +430,10 @@ class RollingHorizonSolver:
             realized_mci=self._realized(tick),
             inner_steps=plan.iters, plan=plan,
             committed_by_region=self._by_region(committed))
+        self._emit_tick(out, revision=rev, latency_s=latency,
+                        recompiles=stats.traces if stats else 0,
+                        dispatches=1, cold=warm is None,
+                        objective_proxy=float(plan.carbon_reduction_pct))
         if self._history:   # bound memory: full plans live on the
             self._history[-1] = dataclasses.replace(   # latest tick only
                 self._history[-1], plan=None)
@@ -393,14 +485,26 @@ class RollingHorizonSolver:
         from repro.core.api import solve_day
         mci_stack = np.stack([self._forecast(t0 + i) for i in range(n)])
         p_win = self._window_problem(t0, mci_stack[0])
+        was_cold = self._state is None
+        # Per-tick revision magnitudes, walked over the stack before
+        # _prev_forecast advances to the final horizon.
+        prev = self._prev_forecast
+        revs = []
+        for i in range(n):
+            revs.append(_rel_revision(prev, mci_stack[i]))
+            prev = mci_stack[i]
         ctx = SolveContext(mesh=self.mesh, donate=self.donate,
                            warm=self._state,
                            use_kernel=self.use_kernel, shift=1,
-                           reset_mu=self._state is not None)
-        with self._traceguard(("day", n, self._state is not None)):
+                           reset_mu=self._state is not None,
+                           telemetry=self.telemetry)
+        t_start = time.perf_counter()
+        with self._traceguard(("day", n, self._state is not None)), \
+                self._measure() as stats:
             day = solve_day(p_win, self.policy, mci_stack, ctx=ctx,
                             cold_steps=self.cold_steps,
                             warm_steps=self.warm_steps)
+        latency = time.perf_counter() - t_start
         self._state = day.last.state
         self._prev_forecast = mci_stack[-1]
         self._tick = t0 + n
@@ -414,6 +518,22 @@ class RollingHorizonSolver:
             plan=day.last if i == n - 1 else None,
             committed_by_region=self._by_region(day.committed[i]))
             for i in range(n)]
+        if self.events is not None:
+            # One dispatch covered the whole day: latency, traces and
+            # the dispatch count land on tick 0, the objective proxy on
+            # the last tick (the only per-plan metric the scan keeps).
+            traces = day.last.extras.get("telemetry", ())
+            for i, out in enumerate(outs):
+                self._emit_tick(
+                    out, revision=revs[i],
+                    latency_s=latency if i == 0 else 0.0,
+                    recompiles=stats.traces if stats and i == 0 else 0,
+                    dispatches=1 if i == 0 else 0,
+                    cold=i == 0 and was_cold,
+                    objective_proxy=(float(day.last.carbon_reduction_pct)
+                                     if i == n - 1 else None))
+                if i < len(traces):
+                    self._emit_trace(out.tick, traces[i])
         if self._history:   # same memory bound as step()
             self._history[-1] = dataclasses.replace(
                 self._history[-1], plan=None)

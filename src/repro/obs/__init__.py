@@ -1,0 +1,32 @@
+"""repro.obs — structured observability for the fleet DR engine.
+
+Four pieces, one schema:
+
+  * `TelemetryConfig` / `ConvergenceTrace` — in-solve convergence
+    telemetry, captured INSIDE the jitted AL loop as stacked aux
+    outputs and surfaced as `result.extras["telemetry"]`
+    (`SolveContext(telemetry=TelemetryConfig(every=10))`).
+  * `EventWriter` / `read_events` — atomic, schema-versioned JSONL
+    ledger of typed events (streaming ticks, spans, telemetry
+    samples, benchmark runs).
+  * `span` / `profile` / `compile_count` — host-side timing that
+    synchronizes on device work before reading the clock, plus
+    profiler and compile-counter hooks.
+  * `python -m repro.obs.report run.jsonl` — terminal report
+    (convergence curves, tick ledger, recompile audit).
+
+Import discipline: `repro.obs` never imports `repro.core`, so the core
+engine can depend on it without cycles.
+"""
+from repro.obs.events import (SCHEMA_VERSION, EventWriter, SpanEvent,
+                              TelemetryEvent, TickEvent, host_meta,
+                              read_events)
+from repro.obs.spans import SpanScope, compile_count, profile, span
+from repro.obs.telemetry import ConvergenceTrace, TelemetryConfig
+
+__all__ = [
+    "SCHEMA_VERSION", "EventWriter", "SpanEvent", "TelemetryEvent",
+    "TickEvent", "host_meta", "read_events",
+    "SpanScope", "compile_count", "profile", "span",
+    "ConvergenceTrace", "TelemetryConfig",
+]

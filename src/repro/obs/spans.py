@@ -1,0 +1,107 @@
+"""Span timing + profiler hooks: measure compute, not dispatch.
+
+JAX dispatch is asynchronous — `fn(x)` returns as soon as the work is
+*enqueued*, so a naive `perf_counter` pair around it times the Python
+overhead, not the solve (the PR 6 benchmark-timing lesson). `span`
+generalizes the fix: bind the outputs you care about to the span and it
+calls `jax.block_until_ready` on them before reading the clock on
+exit::
+
+    with obs.span("cr1-solve", writer=w) as sp:
+        sp.bind(solve(problem, CR1(lam=1.45)).D)
+    print(sp.elapsed_s)
+
+These are HOST-side tools. Never call `span` (or anything else that
+blocks on device work) inside jit-traced code — the drlint rule
+`host-sync-in-jit` fires on exactly that; in-solve telemetry rides the
+dispatch as stacked aux outputs instead (`repro.obs.telemetry`).
+
+`profile(dir)` wraps `jax.profiler.trace` for a TensorBoard-loadable
+device trace of any lane, and `compile_count()` re-exports
+`analysis.recompile`'s counters in pure-measurement mode.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Optional
+
+from repro.obs.events import EventWriter, SpanEvent
+
+__all__ = ["span", "SpanScope", "profile", "compile_count"]
+
+
+@dataclasses.dataclass
+class SpanScope:
+    """Live handle yielded by `span`; read `elapsed_s` after the block."""
+    name: str
+    elapsed_s: float = 0.0
+    _bound: tuple = ()
+
+    def bind(self, *values: Any) -> Any:
+        """Attach outputs to synchronize on at span exit.
+
+        Returns the single value (or the tuple) unchanged, so call
+        sites can wrap an expression in-line::
+
+            result = sp.bind(solve(...))
+        """
+        self._bound = self._bound + values
+        return values[0] if len(values) == 1 else values
+
+
+@contextlib.contextmanager
+def span(name: str, *, writer: Optional[EventWriter] = None,
+         meta: dict | None = None):
+    """Time a block with monotonic clocks, device-synchronized on exit.
+
+    Any values passed to the scope's `.bind(...)` get
+    `jax.block_until_ready` before the closing timestamp, so the span
+    covers the device compute those values depend on — not just the
+    time to enqueue it. With no bound values the span is a plain
+    wall-clock timer (fine for host-side work like JSONL parsing).
+
+    When `writer` is given, a `SpanEvent` is appended to the ledger on
+    exit (including on exception — the partial timing is still real).
+    """
+    scope = SpanScope(name=name)
+    t0 = time.perf_counter()
+    try:
+        yield scope
+    finally:
+        if scope._bound:
+            import jax
+            jax.block_until_ready(scope._bound)
+        scope.elapsed_s = time.perf_counter() - t0
+        if writer is not None:
+            writer.write(SpanEvent(name=name, elapsed_s=scope.elapsed_s,
+                                   meta=meta))
+
+
+@contextlib.contextmanager
+def profile(logdir):
+    """Device-level profiler around any lane (TensorBoard trace).
+
+    Thin wrapper over `jax.profiler.trace(logdir)` so call sites only
+    touch `repro.obs`::
+
+        with obs.profile("var/profile"):
+            solve_day(problem, CR1(lam=1.45), mci_stack)
+    """
+    import jax
+
+    with jax.profiler.trace(str(logdir)):
+        yield
+
+
+def compile_count(label: str = ""):
+    """Count jit traces/lowerings in a region without asserting a budget.
+
+    Pure-measurement alias for `analysis.recompile.recompile_guard(None)`
+    — yields a live `RecompileStats`; read `.traces` / `.lowerings`
+    after the block. Nestable inside (or around) a failing-mode guard.
+    """
+    from repro.analysis.recompile import recompile_guard
+
+    return recompile_guard(None, label=label)

@@ -1,0 +1,117 @@
+"""In-solve convergence telemetry: configuration + host-side trace view.
+
+The capture itself happens inside the jitted AL loop
+(`repro.core.engine.al_minimize`, `EngineConfig.telemetry_every`): per-
+step scalars ride the inner `lax.scan` as stacked ys and come back as
+one extra aux output of the SAME dispatch — no host callbacks, no extra
+device round-trips. This module is the host-side half: `TelemetryConfig`
+is the user-facing knob (`SolveContext(telemetry=TelemetryConfig(...))`)
+and `ConvergenceTrace` is the numpy view of one solve's trace that
+lands in `result.extras["telemetry"]`.
+
+Deliberately import-light: no `repro.core` (or jax) imports at module
+scope, so `repro.obs` never participates in the core import cycle and
+the report CLI can load traces without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["TelemetryConfig", "ConvergenceTrace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Knobs for in-solve convergence telemetry.
+
+    Attributes:
+      every: sample the trace every `every` inner steps (>= 1). The
+        sample count is `total_inner_steps // every`, fixed at trace
+        time — `every` is a static jit argument, so changing it
+        recompiles (pick one cadence per run).
+    """
+    every: int = 10
+
+    def __post_init__(self) -> None:
+        if int(self.every) < 1:
+            raise ValueError(
+                f"TelemetryConfig.every must be >= 1, got {self.every}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvergenceTrace:
+    """One solve's convergence trace (host numpy arrays, one row/sample).
+
+    All arrays share shape `(n_samples,)`. `objective` is the augmented
+    Lagrangian value (not the raw objective — multiplier/penalty terms
+    included), `grad_norm` the l2 gradient norm, `violation` the worst
+    constraint residual at the post-step iterate (0 for unconstrained
+    solves), `dx` the mean per-coordinate |Δx| of the step, `mu` the
+    penalty weight of the round the sample came from.
+    """
+    step: np.ndarray
+    objective: np.ndarray
+    grad_norm: np.ndarray
+    violation: np.ndarray
+    dx: np.ndarray
+    mu: np.ndarray
+    step_scale: float
+
+    @classmethod
+    def from_aux(cls, tel: dict) -> "ConvergenceTrace":
+        """Build from the engine's `aux["telemetry"]` dict (one solve)."""
+        g2 = np.asarray(tel["grad_sq"], dtype=np.float64)
+        return cls(
+            step=np.asarray(tel["step"]),
+            objective=np.asarray(tel["objective"]),
+            grad_norm=np.sqrt(np.maximum(g2, 0.0)),
+            violation=np.asarray(tel["violation"]),
+            dx=np.asarray(tel["dx"]),
+            mu=np.asarray(tel["mu"]),
+            step_scale=float(np.asarray(tel["step_scale"]).mean()),
+        )
+
+    @classmethod
+    def split(cls, tel: dict) -> tuple["ConvergenceTrace", ...]:
+        """Split a stacked telemetry dict (leading lane axis) into traces.
+
+        Day scans / loops stack per-tick telemetry along axis 0; this
+        peels one `ConvergenceTrace` per lane.
+        """
+        leaves = {k: np.asarray(v) for k, v in tel.items()}
+        n = leaves["step"].shape[0]
+        return tuple(
+            cls.from_aux({k: v[i] for k, v in leaves.items()})
+            for i in range(n))
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.step.shape[0])
+
+    def samples(self) -> Iterator[dict]:
+        """Yield one JSON-able dict per sample (for the event ledger)."""
+        for i in range(self.n_samples):
+            yield {
+                "step": int(self.step[i]),
+                "objective": float(self.objective[i]),
+                "grad_norm": float(self.grad_norm[i]),
+                "violation": float(self.violation[i]),
+                "dx": float(self.dx[i]),
+                "mu": float(self.mu[i]),
+            }
+
+    def summary(self) -> dict:
+        """Condensed first/last view (for logs and reports)."""
+        if not self.n_samples:
+            return {"n_samples": 0}
+        return {
+            "n_samples": self.n_samples,
+            "first_objective": float(self.objective[0]),
+            "last_objective": float(self.objective[-1]),
+            "last_grad_norm": float(self.grad_norm[-1]),
+            "last_violation": float(self.violation[-1]),
+            "step_scale": self.step_scale,
+        }

@@ -39,7 +39,7 @@ def test_rule_registry_complete():
     assert set(RULES) == {
         "jit-host-leak", "donation-twin", "check-rep-justification",
         "tuple-seed", "np-on-traced", "deprecated-shim",
-        "adhoc-partition-spec"}
+        "adhoc-partition-spec", "host-sync-in-jit"}
 
 
 def test_jit_host_leak_float_and_item():
@@ -238,6 +238,38 @@ def test_adhoc_partition_spec():
     assert out_of_scope == []
 
 
+def test_host_sync_in_jit():
+    bad = _lint("""
+        import jax
+        from repro import obs
+
+        @jax.jit
+        def f(x):
+            y = x * 2
+            jax.block_until_ready(y)
+            with obs.span("inner"):
+                z = jax.device_get(y)
+            return z
+    """)
+    assert _rules(bad) == ["host-sync-in-jit"] * 3
+    assert "block_until_ready" in bad[0].message
+    # Host-side timing around (not inside) jitted code is the contract.
+    ok = _lint("""
+        import jax
+        from repro import obs
+
+        @jax.jit
+        def f(x):
+            return x * 2
+
+        def bench(x):
+            with obs.span("solve") as s:
+                s.bind(f(x))
+            return jax.device_get(f(x))
+    """)
+    assert ok == []
+
+
 # ---------------------------------------------------------------------------
 # drlint: suppression mechanics
 # ---------------------------------------------------------------------------
@@ -350,6 +382,29 @@ def test_sanitize_catches_injected_nan(fp, policy):
     assert np.isnan(np.asarray(silent.D)).any()   # the failure mode
     with pytest.raises(SanitizeError, match="non-finite"):
         solve(poisoned, policy, ctx=SolveContext(steps=40, sanitize=True))
+
+
+@pytest.mark.parametrize("policy", [CR1(lam=1.4), CR2(cap_frac=0.12)],
+                         ids=["cr1", "cr2"])
+def test_sanitize_day_scan_parity_and_nan(fp, policy):
+    """The checkify lane extends to solo `solve_day` scans: bitwise
+    committed-matrix parity, and a NaN in any tick's forecast row fires
+    `SanitizeError` instead of poisoning the rest of the day."""
+    from repro.core.api import solve_day
+
+    rng = np.random.default_rng((11, 4))
+    base = np.asarray(fp.mci, float)
+    stack = np.stack([np.roll(base, -i) * (1 + 0.01 * rng.standard_normal(
+        base.shape)) for i in range(3)])
+    plain = solve_day(fp, policy, stack, cold_steps=40, warm_steps=10)
+    checked = solve_day(fp, policy, stack, cold_steps=40, warm_steps=10,
+                        ctx=SolveContext(sanitize=True))
+    np.testing.assert_array_equal(plain.committed, checked.committed)
+    poisoned = stack.copy()
+    poisoned[1, 5] = np.nan   # warm tick 1's horizon
+    with pytest.raises(SanitizeError, match="non-finite"):
+        solve_day(fp, policy, poisoned, cold_steps=40, warm_steps=10,
+                  ctx=SolveContext(sanitize=True))
 
 
 def test_sanitize_refuses_unsupported_combos(fp):

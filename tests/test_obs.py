@@ -1,0 +1,301 @@
+"""`repro.obs` tests: the in-solve telemetry contract (telemetry-off
+bitwise-identical to pre-PR, telemetry-on plans bitwise-identical to
+telemetry-off), the trace surfaces through `solve`/`sweep`/`ensemble`/
+`solve_day`, the streaming tick ledger (one-dispatch contract intact
+with the ledger enabled), the JSONL schema pin, span timing, and the
+report CLI round trip."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.api import (CR1, CR2, CR3, SolveContext, solve, solve_day,
+                            sweep)
+from repro.core.fleet_solver import synthetic_fleet
+from repro.obs import (SCHEMA_VERSION, ConvergenceTrace, EventWriter,
+                       SpanEvent, TelemetryConfig, TickEvent, host_meta,
+                       read_events, span)
+from repro.obs.report import main as report_main
+
+from conftest import run_in_subprocess
+
+
+@pytest.fixture(scope="module")
+def fp():
+    return synthetic_fleet(6, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# In-solve telemetry: bitwise parity + trace content
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [CR1(lam=1.4), CR2(cap_frac=0.12)],
+                         ids=["cr1", "cr2"])
+def test_telemetry_on_is_bitwise_off(fp, policy):
+    """The ISSUE acceptance bar: telemetry-on plans/states are bitwise
+    identical to telemetry-off — the trace rides the scan as extra aux
+    outputs, it never perturbs the solve."""
+    off = solve(fp, policy, ctx=SolveContext(steps=120))
+    on = solve(fp, policy,
+               ctx=SolveContext(steps=120,
+                                telemetry=TelemetryConfig(every=10)))
+    np.testing.assert_array_equal(off.D, on.D)
+    np.testing.assert_array_equal(np.asarray(off.state.x),
+                                  np.asarray(on.state.x))
+    assert off.carbon_reduction_pct == on.carbon_reduction_pct
+    assert off.extras.get("telemetry") is None
+
+
+@pytest.mark.parametrize("policy", [CR1(lam=1.4), CR2(cap_frac=0.12)],
+                         ids=["cr1", "cr2"])
+def test_telemetry_trace_content(fp, policy):
+    r = solve(fp, policy,
+              ctx=SolveContext(steps=120,
+                               telemetry=TelemetryConfig(every=10)))
+    trace = r.extras["telemetry"]
+    assert isinstance(trace, ConvergenceTrace)
+    # every=10 over (outer * inner) total steps: steps 10, 20, ...
+    assert trace.n_samples == trace.step.shape[0] > 0
+    assert trace.step[0] == 10 and np.all(np.diff(trace.step) == 10)
+    assert np.all(np.isfinite(trace.objective))
+    assert np.all(trace.grad_norm >= 0)
+    if policy.name == "cr1":
+        # unconstrained lane: no residuals, violation pinned at 0
+        assert np.all(trace.violation == 0.0)
+    else:
+        assert np.all(trace.violation >= 0.0)
+        assert trace.mu[-1] >= trace.mu[0]   # mu schedule grows
+    d = next(trace.samples())
+    assert set(d) == {"step", "objective", "grad_norm", "violation",
+                      "dx", "mu"}
+    json.dumps(d)   # samples are ledger-ready
+
+
+def test_telemetry_mesh_parity_subprocess():
+    """Sharded telemetry all-reduces to the solo trace (objective psum,
+    violation pmax), and the sharded plan stays bitwise the solo plan."""
+    run_in_subprocess("""
+import numpy as np
+from repro.core.api import CR1, SolveContext, solve
+from repro.core.fleet_solver import synthetic_fleet
+from repro.launch.mesh import make_fleet_mesh
+from repro.obs import TelemetryConfig
+
+p = synthetic_fleet(8, seed=3)
+tel = TelemetryConfig(every=15)
+solo = solve(p, CR1(lam=1.4), ctx=SolveContext(steps=60, telemetry=tel))
+mesh = make_fleet_mesh()
+assert len(mesh.devices.ravel()) == 2
+sh = solve(p, CR1(lam=1.4),
+           ctx=SolveContext(steps=60, telemetry=tel, mesh=mesh))
+np.testing.assert_array_equal(solo.D, sh.D)
+t0, t1 = solo.extras["telemetry"], sh.extras["telemetry"]
+np.testing.assert_array_equal(t0.step, t1.step)
+np.testing.assert_allclose(t0.objective, t1.objective, rtol=1e-6)
+np.testing.assert_allclose(t0.violation, t1.violation, rtol=1e-6,
+                           atol=1e-12)
+print("mesh telemetry OK")
+""", devices=2)
+
+
+def test_telemetry_refuses_fused_kernel(fp):
+    with pytest.raises(NotImplementedError, match="telemetry"):
+        solve(fp, CR1(lam=1.4),
+              ctx=SolveContext(steps=40, use_kernel=True,
+                               telemetry=TelemetryConfig(every=10)))
+
+
+def test_telemetry_config_validates():
+    with pytest.raises(ValueError):
+        TelemetryConfig(every=0)
+
+
+def test_sweep_loop_lane_carries_traces(fp):
+    """Telemetry forces the per-policy loop (the vmapped lane has no
+    trace plumbing); each result carries its own trace."""
+    rs = sweep(fp, [CR1(lam=1.2), CR1(lam=1.6)],
+               ctx=SolveContext(steps=60,
+                                telemetry=TelemetryConfig(every=10)))
+    assert len(rs) == 2
+    for r in rs:
+        assert r.extras["telemetry"].n_samples > 0
+    # traces differ across lambdas — they are per-solve, not shared
+    assert not np.array_equal(rs[0].extras["telemetry"].objective,
+                              rs[1].extras["telemetry"].objective)
+
+
+def test_ensemble_telemetry_forces_loop(fp):
+    from repro.core.ensemble import evaluate_ensemble
+    from repro.core.scenario import DuckPerturb, resolve_scenarios
+
+    stack = resolve_scenarios([DuckPerturb(n_scenarios=2, seed=0)], fp)
+    got = evaluate_ensemble(
+        fp, CR1(lam=1.4), stack,
+        ctx=SolveContext(steps=60, telemetry=TelemetryConfig(every=10)))
+    assert not got.batched
+    assert all(e["telemetry"].n_samples > 0 for e in got.extras)
+    with pytest.raises(ValueError, match="telemetry"):
+        evaluate_ensemble(
+            fp, CR1(lam=1.4), stack, batched=True,
+            ctx=SolveContext(steps=60, telemetry=TelemetryConfig(every=10)))
+
+
+@pytest.mark.parametrize("policy", [CR1(lam=1.4), CR2(cap_frac=0.12)],
+                         ids=["cr1", "cr2"])
+def test_solve_day_traces_per_tick(fp, policy):
+    rng = np.random.default_rng((7, 2))
+    base = np.asarray(fp.mci, float)
+    stack = np.stack([np.roll(base, -i) * (1 + 0.01 * rng.standard_normal(
+        base.shape)) for i in range(4)])
+    off = solve_day(fp, policy, stack, cold_steps=60, warm_steps=20)
+    on = solve_day(fp, policy, stack, cold_steps=60, warm_steps=20,
+                   ctx=SolveContext(telemetry=TelemetryConfig(every=10)))
+    np.testing.assert_array_equal(off.committed, on.committed)
+    traces = on.last.extras["telemetry"]
+    assert len(traces) == 4            # tick 0 + 3 warm ticks
+    # cold budget is 3x the warm budget, so (whatever the policy's outer
+    # multiplier) tick 0 carries 3x the samples of each warm tick
+    warm_n = traces[1].n_samples
+    assert warm_n > 0
+    assert traces[0].n_samples == 3 * warm_n
+    assert all(t.n_samples == warm_n for t in traces[1:])
+    assert "telemetry" not in off.last.extras
+
+
+# ---------------------------------------------------------------------------
+# Streaming ledger: events + one-dispatch contract
+# ---------------------------------------------------------------------------
+def test_streaming_ledger_round_trip(fp, tmp_path, capsys):
+    from repro.core.carbon import ForecastStream
+    from repro.core.streaming import RollingHorizonSolver
+
+    path = tmp_path / "run.jsonl"
+    stream = ForecastStream.caiso(n_ticks=3, horizon=fp.T, seed=1)
+    solver = RollingHorizonSolver(fp, stream, policy="cr1", cold_steps=60,
+                                  warm_steps=15, events=str(path),
+                                  telemetry=TelemetryConfig(every=15))
+    solver.run(3)
+    recs = read_events(path)
+    assert recs[0]["kind"] == "header"
+    assert recs[0]["schema"] == SCHEMA_VERSION
+    assert recs[0]["tags"]["policy"] == "cr1"
+    ticks = [r for r in recs if r["kind"] == "tick"]
+    assert [t["tick"] for t in ticks] == [0, 1, 2]
+    assert ticks[0]["cold"] and not ticks[1]["cold"]
+    assert ticks[0]["warm_steps"] == 60 and ticks[1]["warm_steps"] == 15
+    assert ticks[0]["revision"] == 0.0 and ticks[1]["revision"] > 0
+    assert all(t["latency_s"] > 0 and t["dispatches"] == 1 for t in ticks)
+    assert ticks[0]["recompiles"] > 0     # cold tick compiles
+    assert ticks[2]["recompiles"] == 0    # second warm tick: cache hit
+    tel = [r for r in recs if r["kind"] == "telemetry"]
+    assert sorted({t["tick"] for t in tel}) == [0, 1, 2]
+    # the schema-pinned round trip: report CLI renders it and exits 0
+    assert report_main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "tick ledger (3 ticks)" in out and "convergence" in out
+
+
+def test_run_scanned_one_dispatch_with_ledger(fp, tmp_path, monkeypatch):
+    """The ledger must not cost dispatches: a scanned day with events +
+    telemetry on still funnels through ONE day-scan call, and a second
+    same-shape day is provably compile-free (recompile_guard(0)) —
+    emission is host-side after the solve."""
+    import repro.core.api as api
+    from repro.analysis import recompile_guard
+    from repro.core.carbon import ForecastStream
+    from repro.core.streaming import RollingHorizonSolver
+
+    path = tmp_path / "day.jsonl"
+    stream = ForecastStream.caiso(n_ticks=12, horizon=fp.T, seed=2)
+    solver = RollingHorizonSolver(fp, stream, policy="cr1", cold_steps=60,
+                                  warm_steps=15, events=str(path),
+                                  telemetry=TelemetryConfig(every=15))
+    solver.run_scanned(4)   # day 1: cold scan compiles
+    solver.run_scanned(4)   # day 2: warm continuation compiles (new
+    #                         static combo: first_shift=1, reset_mu)
+    calls = []
+    orig = api._day_cr1
+    monkeypatch.setattr(
+        api, "_day_cr1",
+        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    with recompile_guard(0, label="scanned day with ledger"):
+        solver.run_scanned(4)   # day 3: provably compile-free
+    assert len(calls) == 1
+    recs = read_events(path)
+    ticks = [r for r in recs if r["kind"] == "tick"]
+    assert len(ticks) == 12
+    # the one dispatch lands on each day's first tick, 0 elsewhere
+    assert [t["dispatches"] for t in ticks] == [1, 0, 0, 0] * 3
+    assert sum(t["recompiles"] for t in ticks[8:]) == 0
+    # in-solve traces landed for every scanned tick
+    tel_ticks = {r["tick"] for r in recs if r["kind"] == "telemetry"}
+    assert tel_ticks == set(range(12))
+
+
+# ---------------------------------------------------------------------------
+# Events: schema pin, atomic append, host metadata
+# ---------------------------------------------------------------------------
+def test_event_writer_appends_without_second_header(tmp_path):
+    path = tmp_path / "ev.jsonl"
+    with EventWriter(str(path), tags={"a": 1}) as w:
+        w.write(SpanEvent(name="x", elapsed_s=0.5))
+    with EventWriter(str(path)) as w:   # reopen: header already present
+        w.write(SpanEvent(name="y", elapsed_s=0.25))
+    recs = read_events(path)
+    assert [r["kind"] for r in recs] == ["header", "span", "span"]
+    assert recs[0]["tags"] == {"a": 1}
+
+
+def test_read_events_schema_pin(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"kind": "header", "schema": 999,
+                               "host": {}}) + "\n")
+    with pytest.raises(ValueError, match="schema"):
+        read_events(bad)
+    headerless = tmp_path / "nohdr.jsonl"
+    headerless.write_text(json.dumps({"kind": "span", "name": "x",
+                                      "elapsed_s": 1.0}) + "\n")
+    with pytest.raises(ValueError, match="header"):
+        read_events(headerless)
+    assert report_main([str(bad)]) == 1   # CLI surfaces it as exit 1
+
+
+def test_host_meta_fields():
+    meta = host_meta()
+    assert {"platform", "n_devices", "device_kind", "jax", "jaxlib",
+            "pallas_interpret"} <= set(meta)
+    assert meta["n_devices"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Spans
+# ---------------------------------------------------------------------------
+def test_span_times_device_work(tmp_path):
+    import jax.numpy as jnp
+
+    path = tmp_path / "spans.jsonl"
+    with EventWriter(str(path)) as w:
+        with span("mul", writer=w, meta={"n": 64}) as sp:
+            y = sp.bind(jnp.ones(64) * 3)
+        assert sp.elapsed_s > 0
+        np.testing.assert_array_equal(np.asarray(y), 3 * np.ones(64))
+        # the event is written even when the body raises
+        with pytest.raises(RuntimeError, match="boom"):
+            with span("fails", writer=w):
+                raise RuntimeError("boom")
+    recs = read_events(path)
+    assert [r["name"] for r in recs[1:]] == ["mul", "fails"]
+    assert recs[1]["meta"] == {"n": 64}
+
+
+def test_tick_event_dataclass_round_trip(tmp_path):
+    path = tmp_path / "t.jsonl"
+    ev = TickEvent(tick=3, revision=0.02, warm_steps=40, cold=False,
+                   objective_proxy=11.5, latency_s=0.2,
+                   committed_carbon=[1.0, 2.0], realized_carbon=[1.1, 1.9],
+                   migration_credit=0.3, recompiles=0, dispatches=1)
+    with EventWriter(str(path)) as w:
+        w.write(ev)
+    rec = read_events(path)[1]
+    assert rec["kind"] == "tick" and rec["tick"] == 3
+    assert rec["committed_carbon"] == [1.0, 2.0]
